@@ -1,0 +1,57 @@
+"""Paper Table 2: error correction / rounding / soft-constraint ablation —
+EP-init vs AXE-RTZ vs AXE-RTN vs AXE-HCO at W4A8 with a binding monolithic
+accumulator target."""
+
+from __future__ import annotations
+
+from repro.core import PTQConfig
+
+from .common import (
+    FAST,
+    baseline_float_ppl,
+    calib_batches,
+    csv_row,
+    eval_batches,
+    quantize_and_eval,
+    trained_params,
+)
+
+MODELS = ["tiny-lm-s"] if FAST else ["tiny-lm-s", "tiny-lm-m"]
+P_TARGET = 16  # binding for K in [128, 768] at W4A8 (B ~ 128.5 l1 budget)
+
+VARIANTS = {
+    "ep_init": dict(algorithm="ep_init"),
+    "axe_rtz": dict(rounding="zero"),
+    "axe_rtn": dict(rounding="nearest"),
+    "axe_hco": dict(rounding="nearest", soft=False),
+}
+
+
+def run(algorithms=("gpfq", "optq")):
+    results = {}
+    for arch in MODELS:
+        cfg, params = trained_params(arch)
+        calib = calib_batches(cfg)
+        evalb = eval_batches(cfg)
+        csv_row(f"table2/{arch}/float", 0.0,
+                f"ppl={baseline_float_ppl(cfg, params, evalb):.2f}")
+        for alg in algorithms:
+            for name, fields in VARIANTS.items():
+                f = dict(fields)
+                if name != "ep_init":
+                    f["algorithm"] = alg
+                elif alg == "optq":
+                    continue
+                ptq = PTQConfig(p_bits=P_TARGET, tile=None, **f)
+                res = quantize_and_eval(cfg, params, ptq, calib, evalb)
+                results[(arch, alg, name)] = res["ppl"]
+                csv_row(
+                    f"table2/{arch}/{alg}/{name}",
+                    res["quantize_s"] * 1e6,
+                    f"ppl={res['ppl']:.2f};cert={res['certified']}",
+                )
+    return results
+
+
+if __name__ == "__main__":
+    run()

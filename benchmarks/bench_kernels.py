@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: wall time per call (interpret mode on CPU — the
+number that matters on this box is the *derived* analytic intensity; the
+TPU timing comes from the roofline terms in EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import norm_and_quantize, pack_int4, w4a8_matmul
+
+from .common import csv_row
+
+
+def _time(fn, *args, reps=3, **kw):
+    y = fn(*args, **kw)
+    jax.block_until_ready(y)
+    t0 = time.time()
+    for _ in range(reps):
+        y = fn(*args, **kw)
+    jax.block_until_ready(y)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 512, 256), (256, 1024, 512)]:
+        q = rng.integers(-7, 8, size=(k, n))
+        wp = pack_int4(jnp.asarray(q))
+        x = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+        sc = jnp.ones((n,), jnp.float32)
+        us = _time(w4a8_matmul, x, wp, sc, 0.02, 128, interpret=True,
+                   block_m=min(m, 128), block_n=128, block_k=128)
+        flops = 2 * m * k * n
+        # HBM bytes on the TPU target: uint8 acts + packed int4 weights + f32 out
+        bytes_hbm = m * k + k * n // 2 + m * n * 4
+        csv_row(
+            f"kernel/w4a8_mm/{m}x{k}x{n}", us,
+            f"flops={flops};hbm_bytes={bytes_hbm};"
+            f"intensity={flops / bytes_hbm:.1f}flop/B;"
+            f"v5e_bound={'compute' if flops / bytes_hbm > 197e12 / 819e9 else 'memory'}",
+        )
+
+    for m, d in [(512, 1024), (1024, 4096)]:
+        x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+        g = jnp.ones((d,), jnp.float32)
+        us = _time(norm_and_quantize, x, g, 0.02, 128, interpret=True,
+                   block_m=256)
+        bytes_hbm = m * d * 4 + m * d  # read f32, write u8
+        csv_row(f"kernel/quant_rmsnorm/{m}x{d}", us,
+                f"hbm_bytes={bytes_hbm};write_savings=4x_vs_f32")
+    return None
+
+
+if __name__ == "__main__":
+    run()

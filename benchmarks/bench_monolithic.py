@@ -1,0 +1,48 @@
+"""Paper Table 3: monolithic P_O=16 vs multi-stage (T=64, P_I=16) scaling.
+The paper's claim: the monolithic budget tightens as width K grows (quality
+collapses up the ladder) while fixed-P_I multi-stage holds."""
+
+from __future__ import annotations
+
+from repro.core import PTQConfig
+
+from .common import (
+    FAST,
+    calib_batches,
+    csv_row,
+    eval_batches,
+    quantize_and_eval,
+    trained_params,
+)
+
+LADDER = ["tiny-lm-xs", "tiny-lm-s", "tiny-lm-m", "tiny-lm-l"]
+if FAST:
+    LADDER = ["tiny-lm-xs", "tiny-lm-s"]
+
+
+def run(algorithms=("gpfq", "optq")):
+    results = {}
+    for arch in LADDER:
+        cfg, params = trained_params(arch)
+        calib = calib_batches(cfg)
+        evalb = eval_batches(cfg)
+        for alg in algorithms:
+            mono = quantize_and_eval(
+                cfg, params, PTQConfig(algorithm=alg, p_bits=16, tile=None),
+                calib, evalb,
+            )
+            multi = quantize_and_eval(
+                cfg, params, PTQConfig(algorithm=alg, p_bits=16, tile=64),
+                calib, evalb,
+            )
+            results[(arch, alg)] = (mono["ppl"], multi["ppl"])
+            csv_row(f"table3/{arch}/{alg}/monolithic16", mono["quantize_s"] * 1e6,
+                    f"ppl={mono['ppl']:.2f}")
+            csv_row(f"table3/{arch}/{alg}/64x16b", multi["quantize_s"] * 1e6,
+                    f"ppl={multi['ppl']:.2f};ratio_mono_over_multi="
+                    f"{mono['ppl'] / multi['ppl']:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

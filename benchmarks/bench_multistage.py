@@ -1,0 +1,60 @@
+"""Paper Table 1: multi-stage accumulation at scale — W4A8, 16-bit inner
+accumulator, tiles T in {64, 128}, across the width ladder (the paper's
+Pythia suite becomes the tiny-lm ladder; the *scaling trend* — constrained
+quality approaching the unconstrained Base as width grows — is the claim
+under test)."""
+
+from __future__ import annotations
+
+from repro.core import PTQConfig
+
+from .common import (
+    FAST,
+    baseline_float_ppl,
+    calib_batches,
+    csv_row,
+    eval_batches,
+    quantize_and_eval,
+    trained_params,
+)
+
+LADDER = ["tiny-lm-xs", "tiny-lm-s", "tiny-lm-m", "tiny-lm-l"]
+if FAST:
+    LADDER = ["tiny-lm-xs", "tiny-lm-s"]
+TILES = (64, 128)
+
+
+def run(algorithms=("gpfq", "optq")):
+    results = {}
+    for arch in LADDER:
+        cfg, params = trained_params(arch)
+        calib = calib_batches(cfg)
+        evalb = eval_batches(cfg)
+        fppl = baseline_float_ppl(cfg, params, evalb)
+        csv_row(f"table1/{arch}/float", 0.0, f"ppl={fppl:.2f}")
+        for alg in algorithms:
+            base = quantize_and_eval(
+                cfg, params, PTQConfig(algorithm=alg, constrain=False),
+                calib, evalb,
+            )
+            results[(arch, alg, "base")] = base["ppl"]
+            csv_row(f"table1/{arch}/{alg}/base", base["quantize_s"] * 1e6,
+                    f"ppl={base['ppl']:.2f}")
+            for t in TILES:
+                res = quantize_and_eval(
+                    cfg, params,
+                    PTQConfig(algorithm=alg, p_bits=16, tile=t),
+                    calib, evalb,
+                )
+                results[(arch, alg, f"{t}x16b")] = res["ppl"]
+                csv_row(
+                    f"table1/{arch}/{alg}/{t}x16b",
+                    res["quantize_s"] * 1e6,
+                    f"ppl={res['ppl']:.2f};cert={res['certified']};"
+                    f"gap_vs_base={res['ppl'] - base['ppl']:+.2f}",
+                )
+    return results
+
+
+if __name__ == "__main__":
+    run()

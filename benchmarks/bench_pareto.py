@@ -1,0 +1,100 @@
+"""Paper Figures 1 & 3 / Tables 4-7: the accumulator-bit-width vs quality
+Pareto frontier, PTQ setting.
+
+For each (M, N) in the design space and each method:
+  * naive bit-width manipulation: quantize unconstrained at (M, N); its
+    guaranteed accumulator is P* from Eq. 3;
+  * EP-init: l1 projection + RTZ at target P (A2Q+ applied post-hoc);
+  * AXE: constrained GPFQ/OPTQ at target P.
+The frontier reports the best perplexity per accumulator width.
+"""
+
+from __future__ import annotations
+
+from repro.core import PTQConfig, sweep_config
+
+from .common import (
+    FAST,
+    baseline_float_ppl,
+    calib_batches,
+    csv_row,
+    eval_batches,
+    quantize_and_eval,
+    trained_params,
+)
+
+ARCH = "tiny-lm-s"
+MN_GRID = [(3, 4), (4, 4), (4, 6), (4, 8), (6, 8), (8, 8)]
+P_GRID = [12, 13, 14, 15, 16, 18, 20]
+if FAST:
+    MN_GRID = [(4, 4), (4, 8)]
+    P_GRID = [14, 16, 20]
+
+
+def run(algorithms=("gpfq", "optq")):
+    cfg, params = trained_params(ARCH)
+    calib = calib_batches(cfg)
+    evalb = eval_batches(cfg)
+    fppl = baseline_float_ppl(cfg, params, evalb)
+    csv_row(f"pareto/{ARCH}/float", 0.0, f"ppl={fppl:.2f}")
+
+    rows = []
+    for alg in algorithms:
+        # naive manipulation: unconstrained, P = P*(M, N, K_max)
+        k_max = max(cfg.d_model, cfg.d_ff)
+        for m, n in MN_GRID:
+            ptq = PTQConfig(w_bits=m, act_bits=n, algorithm=alg, constrain=False)
+            res = quantize_and_eval(cfg, params, ptq, calib, evalb)
+            p_star = ptq.naive_p_star(k_max)
+            rows.append((alg, "naive", p_star, m, n, res))
+            csv_row(
+                f"pareto/{ARCH}/{alg}/naive/M{m}N{n}",
+                res["quantize_s"] * 1e6,
+                f"P*={p_star};ppl={res['ppl']:.2f};sparsity={res['sparsity']:.3f}",
+            )
+        for method, fields in (
+            ("ep_init", dict(algorithm="ep_init")),
+            ("axe", dict(algorithm=alg, constrain=True)),
+        ):
+            if method == "ep_init" and alg == "optq":
+                continue  # EP-init is algorithm-independent; emit once
+            for p in P_GRID:
+                for m, n in MN_GRID:
+                    try:
+                        ptq = PTQConfig(w_bits=m, act_bits=n, p_bits=p,
+                                        tile=None, **fields)
+                        res = quantize_and_eval(cfg, params, ptq, calib, evalb)
+                    except ValueError:
+                        continue  # P too small for N (Eq. 21 infeasible)
+                    rows.append((alg, method, p, m, n, res))
+                    csv_row(
+                        f"pareto/{ARCH}/{alg}/{method}/P{p}M{m}N{n}",
+                        res["quantize_s"] * 1e6,
+                        f"ppl={res['ppl']:.2f};cert={res['certified']};"
+                        f"sparsity={res['sparsity']:.3f}",
+                    )
+
+    # frontier: best ppl at accumulator width <= P
+    for alg in algorithms:
+        for method in ("naive", "ep_init", "axe"):
+            pts = [
+                (p, r["ppl"])
+                for a, meth, p, _, _, r in rows
+                if meth == method and (a == alg or method == "ep_init")
+            ]
+            if not pts:
+                continue
+            frontier = {}
+            for p, ppl in sorted(pts):
+                best = min(ppl, frontier.get(p, float("inf")))
+                frontier[p] = best
+            running = float("inf")
+            for p in sorted(frontier):
+                running = min(running, frontier[p])
+                csv_row(f"pareto_frontier/{ARCH}/{alg}/{method}/P{p}", 0.0,
+                        f"best_ppl={running:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

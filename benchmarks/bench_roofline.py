@@ -1,0 +1,51 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads the JSON records produced by ``repro.launch.dryrun --out results/dryrun``
+and prints the (arch x shape) table: three terms, dominant bottleneck,
+useful-FLOPs ratio, roofline fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+DEFAULT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun",
+)
+
+
+def run(results_dir: str | None = None):
+    d = results_dir or DEFAULT_DIR
+    files = sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        csv_row("roofline/none", 0.0,
+                f"no dry-run artifacts under {d}; run repro.launch.dryrun --all")
+        return []
+    rows = []
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") != "ok":
+            csv_row(f"roofline/{tag}", 0.0, f"FAIL:{rec.get('error', '?')[:80]}")
+            continue
+        rl = rec["roofline"]
+        bound_us = max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6
+        csv_row(
+            f"roofline/{tag}",
+            bound_us,
+            f"compute_s={rl['compute_s']:.3e};memory_s={rl['memory_s']:.3e};"
+            f"collective_s={rl['collective_s']:.3e};dominant={rl['dominant']};"
+            f"useful_ratio={rl['useful_flops_ratio']:.3f};"
+            f"roofline_frac={rl['roofline_fraction']:.4f};"
+            f"bytes_per_dev={rec['memory']['peak_bytes_per_device']:.3e}",
+        )
+        rows.append(rec)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

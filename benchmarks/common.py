@@ -1,0 +1,110 @@
+"""Shared benchmark infrastructure.
+
+Models are trained once on the deterministic synthetic corpus and cached on
+disk (benchmarks/_cache); every table then quantizes from the same float
+checkpoints, exactly like the paper quantizes the same pretrained models
+under different configs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.core import PTQConfig
+from repro.data import DataConfig, TokenBatcher
+from repro.models.transformer import init_model
+from repro.optim import OptimizerConfig
+from repro.quant import calibrate_and_quantize
+from repro.quant.pipeline import float_ppl, quantized_ppl
+from repro.runtime.steps import TrainRunConfig, init_train_state, make_train_step
+
+CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)), "_cache")
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+TRAIN_STEPS = 120 if FAST else 400
+SEQ = 96
+BATCH = 8
+CALIB_BATCHES = 2 if FAST else 4
+EVAL_BATCHES = 2 if FAST else 4
+
+
+def data_for(cfg):
+    return TokenBatcher(
+        DataConfig(vocab=cfg.vocab, seq_len=SEQ, global_batch=BATCH, seed=7)
+    )
+
+
+def trained_params(arch: str):
+    """Train (or load cached) float params for a tiny-lm rung."""
+    cfg = get_config(arch)
+    path = os.path.join(CACHE, f"{arch}_s{TRAIN_STEPS}")
+    template = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.key(0))
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        params, _ = load_pytree(template, path)
+        return cfg, params
+
+    run = TrainRunConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=TRAIN_STEPS)
+    )
+    state = init_train_state(jax.random.key(0), cfg, run)
+    step = jax.jit(make_train_step(cfg, run), donate_argnums=(0,))
+    data = data_for(cfg)
+    t0 = time.time()
+    for i in range(TRAIN_STEPS):
+        state, m = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+    print(f"# trained {arch}: {TRAIN_STEPS} steps in {time.time()-t0:.0f}s "
+          f"final loss {float(m['loss']):.3f}")
+    save_pytree(state["params"], path)
+    return cfg, state["params"]
+
+
+def eval_batches(cfg):
+    return list(data_for(cfg).eval_batches(EVAL_BATCHES))
+
+
+def calib_batches(cfg):
+    d = data_for(cfg)
+    return [d.batch(50_000 + i) for i in range(CALIB_BATCHES)]
+
+
+def quantize_and_eval(cfg, params, ptq: PTQConfig, calib=None, evalb=None):
+    calib = calib or calib_batches(cfg)
+    evalb = evalb or eval_batches(cfg)
+    t0 = time.time()
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    dt = time.time() - t0
+    ppl = quantized_ppl(qm, evalb)
+    return {
+        "ppl": ppl,
+        "certified": qm.certified,
+        "min_headroom": qm.cert_summary()["min_headroom_bits"],
+        "quantize_s": dt,
+        "sparsity": _sparsity(qm),
+    }
+
+
+def _sparsity(qm) -> float:
+    z, n = 0, 0
+    for b in qm.blocks:
+        for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
+            if ql is None:
+                continue
+            q = np.asarray(ql.q_int)
+            z += (q == 0).sum()
+            n += q.size
+    return float(z) / max(n, 1)
+
+
+def baseline_float_ppl(cfg, params, evalb=None):
+    return float_ppl(params, cfg, evalb or eval_batches(cfg))
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

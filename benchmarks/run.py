@@ -1,0 +1,68 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_FAST=1 for the
+reduced grids (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help=f"comma-separated subset of {BENCHES}")
+    args = ap.parse_args(argv)
+    selected = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            if name == "pareto":
+                from . import bench_pareto
+
+                bench_pareto.run()
+            elif name == "table1":
+                from . import bench_multistage
+
+                bench_multistage.run()
+            elif name == "table2":
+                from . import bench_ablation
+
+                bench_ablation.run()
+            elif name == "table3":
+                from . import bench_monolithic
+
+                bench_monolithic.run()
+            elif name == "kernels":
+                from . import bench_kernels
+
+                bench_kernels.run()
+            elif name == "roofline":
+                from . import bench_roofline
+
+                bench_roofline.run()
+            else:
+                raise ValueError(f"unknown bench {name}")
+            print(f"bench/{name}/wall,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # a failing table must not hide the others
+            failures += 1
+            traceback.print_exc()
+            print(f"bench/{name}/wall,{(time.time() - t0) * 1e6:.0f},"
+                  f"FAIL:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

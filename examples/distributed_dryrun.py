@@ -1,0 +1,49 @@
+"""Drive the multi-pod dry-run programmatically and print a mini roofline
+report for one architecture (uses a small placeholder mesh so it runs
+anywhere; the production 512-chip run is `python -m repro.launch.dryrun
+--all --mesh both`).
+
+    PYTHONPATH=src python examples/distributed_dryrun.py [arch]
+"""
+
+import json
+import subprocess
+import sys
+import tempfile
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "smollm-360m"
+    with tempfile.TemporaryDirectory() as out:
+        env = dict(
+            os.environ,
+            PYTHONPATH=os.path.join(REPO, "src"),
+            REPRO_DRYRUN_XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        )
+        for shape in ("train_4k", "decode_32k"):
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                 "--shape", shape, "--mesh-shape", "2,2,2", "--out", out],
+                env=env, cwd=REPO, capture_output=True, text=True,
+            )
+            if r.returncode != 0:
+                print(r.stdout[-1500:], r.stderr[-1500:])
+                raise SystemExit(f"dry-run failed for {arch}/{shape}")
+            rec = json.load(open(os.path.join(out, f"{arch}__{shape}__2,2,2.json")))
+            rl = rec["roofline"]
+            print(f"{arch} / {shape} on (pod=2, data=2, model=2):")
+            print(f"  compile: {rec['compile_s']}s  "
+                  f"bytes/dev: {rec['memory']['peak_bytes_per_device']/1e9:.2f} GB")
+            print(f"  roofline terms (s): compute {rl['compute_s']:.3e}  "
+                  f"memory {rl['memory_s']:.3e}  collective {rl['collective_s']:.3e}")
+            print(f"  dominant: {rl['dominant']}  "
+                  f"useful-FLOPs ratio: {rl['useful_flops_ratio']:.3f}")
+            print(f"  collectives: "
+                  f"{ {k: int(v) for k, v in rec['collectives']['counts'].items() if v} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""PTQ method comparison on one model: Base (unconstrained) vs naive
+bit-width manipulation vs EP-init vs AXE, at a fixed accumulator target —
+the paper's §4.1 story in one script.
+
+    PYTHONPATH=src python examples/ptq_sweep.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import PTQConfig
+from repro.data import DataConfig, TokenBatcher
+from repro.optim import OptimizerConfig
+from repro.quant import calibrate_and_quantize
+from repro.quant.pipeline import float_ppl, quantized_ppl
+from repro.runtime.steps import TrainRunConfig, init_train_state, make_train_step
+
+P_TARGET = 16
+
+
+def main():
+    cfg = get_config("tiny-lm-xs")
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=96, global_batch=8))
+    run = TrainRunConfig(optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                                   total_steps=200))
+    state = init_train_state(jax.random.key(0), cfg, run)
+    step = jax.jit(make_train_step(cfg, run), donate_argnums=(0,))
+    for i in range(200):
+        state, _ = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+    params = state["params"]
+    calib = [data.batch(10_000 + i) for i in range(4)]
+    evalb = list(data.eval_batches(4))
+
+    print(f"float ppl: {float_ppl(params, cfg, evalb):.2f}")
+    print(f"target: signed {P_TARGET}-bit monolithic accumulator, W4A8\n")
+    variants = {
+        "base (no guarantee)": PTQConfig(constrain=False),
+        "ep_init": PTQConfig(algorithm="ep_init", p_bits=P_TARGET, tile=None),
+        "axe_hco (strict only)": PTQConfig(p_bits=P_TARGET, tile=None, soft=False),
+        "axe (soft+strict)": PTQConfig(p_bits=P_TARGET, tile=None),
+    }
+    for name, ptq in variants.items():
+        qm = calibrate_and_quantize(params, cfg, calib, ptq)
+        ppl = quantized_ppl(qm, evalb)
+        cert = qm.cert_summary()
+        print(f"{name:24s} ppl {ppl:9.2f}   certified@P{P_TARGET}: "
+              f"{cert['ok'] if ptq.constrain or ptq.algorithm == 'ep_init' else '—'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fault-tolerance demo: train, get 'preempted', resume from the checkpoint,
+and show the resumed run matches the uninterrupted one.
+
+    PYTHONPATH=src python examples/train_and_resume.py
+"""
+
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        print("== uninterrupted 60-step run ==")
+        _, losses_full = train_main(
+            ["--arch", "tiny-lm-xs", "--steps", "60", "--batch", "8",
+             "--seq", "64", "--log-every", "30"]
+        )
+        print("\n== first 30 steps, checkpointed ==")
+        train_main(
+            ["--arch", "tiny-lm-xs", "--steps", "30", "--batch", "8",
+             "--seq", "64", "--ckpt-dir", d, "--ckpt-every", "30",
+             "--log-every", "30"]
+        )
+        print("\n== resume to 60 (picks up step 30 checkpoint) ==")
+        _, losses_resumed = train_main(
+            ["--arch", "tiny-lm-xs", "--steps", "60", "--batch", "8",
+             "--seq", "64", "--ckpt-dir", d, "--ckpt-every", "30",
+             "--log-every", "30"]
+        )
+    print(f"\nfinal loss — uninterrupted {losses_full[-1]:.6f} vs "
+          f"resumed {losses_resumed[-1]:.6f} (identical data+optimizer path)")
+
+
+if __name__ == "__main__":
+    main()

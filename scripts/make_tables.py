@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+    python scripts/make_tables.py results/dryrun        # roofline table md
+    python scripts/make_tables.py --perf                # §Perf A/B table md
+"""
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def roofline_table(d):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            recs.append((r, None))
+            continue
+        recs.append((r, r["roofline"]))
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant"
+        " | useful | roofline_frac | GB/dev | compile_s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs.sort(key=lambda t: (t[0]["arch"], SHAPE_ORDER.get(t[0]["shape"], 9),
+                             t[0].get("quantized", False), t[0].get("mesh", "")))
+    for r, rl in recs:
+        tag = r["shape"] + (" +w4a8" if r.get("quantized") else "")
+        if rl is None:
+            lines.append(f"| {r['arch']} | {tag} | {r['mesh']} | FAIL: "
+                         f"{r.get('error','?')[:60]} | | | | | | | |")
+            continue
+        gb = r["memory"]["peak_bytes_per_device"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {tag} | {r['mesh']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | {rl['dominant']} | "
+            f"{rl['useful_flops_ratio']:.3f} | {rl['roofline_fraction']:.5f} | "
+            f"{gb:.1f} | {r['compile_s']:.0f} |"
+        )
+    return "\n".join(lines)
+
+
+def perf_table():
+    cells = [
+        ("jamba-1.5-large-398b__prefill_32k__single", "jamba-1.5 prefill_32k"),
+        ("granite-moe-3b-a800m__train_4k__single", "granite-moe train_4k"),
+        ("dbrx-132b__train_4k__single", "dbrx train_4k (bonus)"),
+        ("llama3-405b__decode_32k__single", "llama3-405b decode_32k"),
+    ]
+    lines = [
+        "| cell | variant | compute_s | memory_s | collective_s | dominant | roofline_frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+
+    def row(label, variant, r):
+        rl = r["roofline"]
+        lines.append(
+            f"| {label} | {variant} | {rl['compute_s']:.3e} | {rl['memory_s']:.3e} | "
+            f"{rl['collective_s']:.3e} | {rl['dominant']} | {rl['roofline_fraction']:.5f} |"
+        )
+
+    for fname, label in cells:
+        for d, v in (("results/perf_baseline", "baseline"),
+                     ("results/perf_opt", "optimized")):
+            p = os.path.join(d, fname + ".json")
+            if os.path.exists(p):
+                row(label, v, json.load(open(p)))
+    for p, v in (
+        ("results/perf_opt/llama3-405b__decode_32k__w4a8__single.json",
+         "w4a8 (+TP-stationary weights)"),
+        ("results/perf_opt2/llama3-405b__decode_32k__single.json",
+         "hd-sharded KV (refuted)"),
+    ):
+        if os.path.exists(p):
+            row("llama3-405b decode_32k", v, json.load(open(p)))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--perf" in sys.argv:
+        print(perf_table())
+    else:
+        print(roofline_table(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"))

@@ -1,0 +1,43 @@
+"""Models for reproducing the paper's own experiments (§4) at a scale this
+box can *train and evaluate* (no pretrained Pythia/OPT/GPT2 checkpoints are
+available offline — see DESIGN.md §8).
+
+``tiny-lm-*`` is a Pythia-style ladder (parallel-free decoder, GQA, SwiGLU)
+used by the benchmark harness: each rung is trained on the deterministic
+synthetic corpus (repro.data) and then PTQ'd, reproducing the paper's
+orderings (AXE vs EP-init vs naive; multi-stage vs monolithic scaling).
+Widths grow with depth held constant, matching the paper's §4.2 argument that
+l1 mass grows with *width* (K), which is what the accumulator constraint
+feels.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig, uniform_pattern
+
+
+def _tiny(name: str, d_model: int, n_layers: int, d_ff: int, heads: int) -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=heads,
+        n_kv_heads=heads,
+        d_ff=d_ff,
+        vocab=512,
+        pattern=uniform_pattern("attn", "mlp"),
+        max_seq_len=256,
+        param_dtype="float32",
+        act_dtype="float32",
+        remat="none",
+    )
+
+
+PAPER_MODELS = {
+    # width ladder (K doubles each rung) for the Table 1/3 scaling study
+    "tiny-lm-xs": lambda: _tiny("tiny-lm-xs", 64, 4, 192, 4),
+    "tiny-lm-s": lambda: _tiny("tiny-lm-s", 128, 4, 384, 4),
+    "tiny-lm-m": lambda: _tiny("tiny-lm-m", 256, 4, 768, 8),
+    "tiny-lm-l": lambda: _tiny("tiny-lm-l", 512, 4, 1536, 8),
+}

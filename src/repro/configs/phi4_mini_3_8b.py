@@ -1,0 +1,40 @@
+"""phi4-mini-3.8b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064 [arXiv:2412.08905; hf]. RoPE + SwiGLU + GQA; the 200k vocab
+makes the embedding/head the sharding-critical tensors.
+"""
+
+from repro.models.config import ModelConfig, uniform_pattern
+
+ARCH_ID = "phi4-mini-3.8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=200064,
+        pattern=uniform_pattern("attn", "mlp"),
+        max_seq_len=32_768,
+        param_dtype="bfloat16",
+        act_dtype="bfloat16",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=192,
+        vocab=256,
+        max_seq_len=64,
+        param_dtype="float32",
+        act_dtype="float32",
+    )

@@ -1,0 +1,69 @@
+"""Assigned input-shape set (one per LM-family cell) and the ShapeDtypeStruct
+stand-ins consumed by the dry-run (no device allocation).
+
+  train_4k     seq 4,096   x global_batch 256   (training)
+  prefill_32k  seq 32,768  x global_batch 32    (inference prefill)
+  decode_32k   seq 32,768  x global_batch 128   (decode: 1 token, 32k cache)
+  long_500k    seq 524,288 x global_batch 1     (long-context decode;
+               sub-quadratic families only — see DESIGN.md §4)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache
+
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, TRAIN),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, PREFILL),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, DECODE),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, DECODE),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k runs only for sub-quadratic (SSM/hybrid/linear-attn)
+    families — the skip for pure full-attention archs is recorded in
+    DESIGN.md §4. All assigned archs are decoder-style, so decode shapes
+    apply everywhere else."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the *data* inputs of the step function."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in (TRAIN, PREFILL):
+        specs = {}
+        s_text = s
+        if cfg.frontend == "vision_stub" and cfg.frontend_tokens:
+            s_text = s - cfg.frontend_tokens
+            specs["pixel_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.act_dtype)
+            )
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    assert shape.kind == DECODE
+    return init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)

@@ -1,0 +1,87 @@
+"""repro.core — AXE: accumulator-aware post-training quantization.
+
+The paper's contribution as a composable JAX library:
+
+  * :mod:`alphabet`     — integer alphabets + accumulator bound algebra
+                          (Eqs. 3, 4, 17, 21, 22)
+  * :mod:`quantizers`   — uniform affine quantizers, scales, rounding modes
+  * :mod:`ep_init`      — l1-ball projection, Lagrangian lambda (Eqs. 15-16),
+                          EP-init baseline
+  * :mod:`gpfq`         — GPFQ + AXE (Alg. 1) + memory-efficient form (Thm B.1)
+  * :mod:`optq`         — OPTQ/GPTQ + AXE (Alg. 2)
+  * :mod:`overflow`     — analytic overflow certificates + int64 simulation
+  * :mod:`calibration`  — streaming O(K^2) layer statistics
+  * :mod:`equalization` — SmoothQuant scales + bias correction
+  * :mod:`axe`          — the one-call layer quantization orchestration
+"""
+
+from .alphabet import (
+    Alphabet,
+    Budgets,
+    accumulator_range,
+    act_alphabet,
+    l1_budget_zero_centered,
+    min_accumulator_bits,
+    outer_accumulator_bits,
+    strict_budgets,
+    weight_alphabet,
+)
+from .axe import (
+    EPINIT,
+    GPFQ,
+    OPTQ,
+    PTQConfig,
+    QuantizedLinear,
+    RTN,
+    quantize_linear,
+    sweep_config,
+)
+from .calibration import ActObserver, LayerStats
+from .ep_init import (
+    ep_init,
+    l1_projection_threshold,
+    project_l1_ball,
+    soft_threshold,
+    tiled,
+    untiled,
+)
+from .equalization import (
+    bias_correction,
+    equalize_linear,
+    equalize_norm_weight,
+    smoothquant_scales,
+)
+from .gpfq import AxeConfig, GreedyResult, gpfq, gpfq_memory_efficient, me_stats
+from .optq import hessian_proxy, inverse_cholesky, optq
+from .overflow import CertReport, certify, simulate_accumulation, worst_case_inputs
+from .quantizers import (
+    ActQuantParams,
+    ROUND_NEAREST,
+    ROUND_ZERO,
+    calibrate_act_quant,
+    dequantize_act,
+    fake_quantize_act,
+    quantize_act,
+    quantize_int,
+    quantize_weights_rtn,
+    weight_scales,
+)
+
+__all__ = [
+    "Alphabet", "Budgets", "accumulator_range", "act_alphabet",
+    "l1_budget_zero_centered", "min_accumulator_bits",
+    "outer_accumulator_bits", "strict_budgets", "weight_alphabet",
+    "EPINIT", "GPFQ", "OPTQ", "RTN", "PTQConfig", "QuantizedLinear",
+    "quantize_linear", "sweep_config",
+    "ActObserver", "LayerStats",
+    "ep_init", "l1_projection_threshold", "project_l1_ball",
+    "soft_threshold", "tiled", "untiled",
+    "bias_correction", "equalize_linear", "equalize_norm_weight",
+    "smoothquant_scales",
+    "AxeConfig", "GreedyResult", "gpfq", "gpfq_memory_efficient", "me_stats",
+    "hessian_proxy", "inverse_cholesky", "optq",
+    "CertReport", "certify", "simulate_accumulation", "worst_case_inputs",
+    "ActQuantParams", "ROUND_NEAREST", "ROUND_ZERO", "calibrate_act_quant",
+    "dequantize_act", "fake_quantize_act", "quantize_act", "quantize_int",
+    "quantize_weights_rtn", "weight_scales",
+]

@@ -1,0 +1,174 @@
+"""Quantization alphabets and accumulator-bound arithmetic (paper Eqs. 3, 4, 17, 21, 22).
+
+Everything in this module is *exact integer-domain math* — no arrays bigger
+than scalars, no jax tracing required (plain python / numpy scalars), so the
+whole bound algebra is unit-testable in isolation and reused by both the
+quantization algorithms (`gpfq.py`, `optq.py`) and the certification pass
+(`overflow.py`).
+
+Conventions (paper §2):
+  * signed M-bit *sign-magnitude* weight alphabet
+        A_M = { -(2^(M-1)-1), ..., 2^(M-1)-1 }
+  * activation alphabet is either
+        unsigned asymmetric:  { 0, ..., 2^N - 1 }        (mu=0, nu=2^N-1)
+        signed symmetric:     { -(2^(N-1)-1), ..., 2^(N-1)-1 }
+    In both cases ``nu - mu`` spans the full N-bit range used by the bounds.
+  * accumulator is a signed P-bit register; we certify against the
+    symmetric range [-(2^(P-1)-1), 2^(P-1)-1], which is valid for both
+    sign-magnitude and two's-complement registers (conservative for the
+    latter by exactly one representable value).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Alphabet:
+    """A fixed b-bit integer alphabet [qmin, qmax]."""
+
+    bits: int
+    signed: bool
+    symmetric: bool = True  # only meaningful for signed alphabets
+
+    @property
+    def qmin(self) -> int:
+        if not self.signed:
+            return 0
+        if self.symmetric:
+            return -(2 ** (self.bits - 1) - 1)
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        if not self.signed:
+            return 2**self.bits - 1
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def mu(self) -> int:
+        """Paper's mu: smallest representable value."""
+        return self.qmin
+
+    @property
+    def nu(self) -> int:
+        """Paper's nu: largest representable value."""
+        return self.qmax
+
+    @property
+    def span(self) -> int:
+        return self.qmax - self.qmin
+
+    def __post_init__(self) -> None:
+        if self.bits < 1 or self.bits > 32:
+            raise ValueError(f"unsupported bit width {self.bits}")
+
+
+def weight_alphabet(bits: int) -> Alphabet:
+    """Signed symmetric (sign-magnitude) weight alphabet A_M."""
+    return Alphabet(bits=bits, signed=True, symmetric=True)
+
+
+def act_alphabet(bits: int, signed: bool = False) -> Alphabet:
+    """Activation alphabet A_N. Default: unsigned asymmetric (paper §C.1)."""
+    return Alphabet(bits=bits, signed=signed, symmetric=True)
+
+
+def accumulator_range(p_bits: int) -> tuple[int, int]:
+    """Symmetric representation range of a signed P-bit accumulator."""
+    m = 2 ** (p_bits - 1) - 1
+    return -m, m
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 — data-type bound: minimum P* for naive (M, N, K) manipulation.
+# ---------------------------------------------------------------------------
+def min_accumulator_bits(k: int, n_bits: int, m_bits: int, signed_input: bool) -> int:
+    """P* = ceil(log2(2^(log2(K) + N + M - 1 - 1_signed) + 1) + 1)   (Eq. 3).
+
+    The conservative bit width that makes *any* K-deep dot product of N-bit
+    inputs with M-bit weights representable.
+    """
+    if k < 1:
+        raise ValueError("dot-product depth must be >= 1")
+    exponent = math.log2(k) + n_bits + m_bits - 1 - (1 if signed_input else 0)
+    return int(math.ceil(math.log2(2**exponent + 1) + 1))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 — zero-centered l1 budget (reference; used for the soft penalty's Z).
+# ---------------------------------------------------------------------------
+def l1_budget_zero_centered(p_bits: int, act: Alphabet) -> float:
+    """||q||_1 <= (2^P - 2) / (2^N - 1)   (Eq. 4), in integer units."""
+    return (2.0**p_bits - 2.0) / float(act.span)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 17 / 21 — strict per-sign boundary budgets.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Budgets:
+    """Per-channel (or per-tile) strict budgets.
+
+    ``mode == "split"``  (unsigned activations, mu == 0):
+        running positive sum beta <= B, running negative sum alpha >= A,
+        independently (Eqs. 17/19/20).
+    ``mode == "joint"``  (signed activations, mu == -nu):
+        running l1 norm beta - alpha <= B (A is -B, kept for symmetry).
+    """
+
+    A: float  # lower budget (<= 0)
+    B: float  # upper budget (>= 0)
+    mode: str  # "split" | "joint"
+
+
+def strict_budgets(p_bits: int, act: Alphabet, rounding_slack: float) -> Budgets:
+    """-A = B = (2^(P-1) - 1)/(2^N - 1) - max(Delta)   (Eq. 21).
+
+    ``rounding_slack`` is max(Delta): 0.5 for round-to-nearest, 0.0 for
+    round-to-zero. For signed symmetric activations the same magnitude
+    becomes a *joint* l1 budget: nu * (beta - alpha) <= 2^(P-1) - 1.
+    """
+    top = 2.0 ** (p_bits - 1) - 1.0
+    if not act.signed:
+        b = top / float(act.nu) - rounding_slack
+        if b < 0:
+            raise ValueError(
+                f"accumulator P={p_bits} too small for N={act.bits}-bit activations"
+            )
+        return Budgets(A=-b, B=b, mode="split")
+    # signed symmetric: u.q = nu * ||q||_1
+    b = top / float(act.nu) - rounding_slack
+    if b < 0:
+        raise ValueError(
+            f"accumulator P={p_bits} too small for N={act.bits}-bit activations"
+        )
+    return Budgets(A=-b, B=b, mode="joint")
+
+
+# ---------------------------------------------------------------------------
+# Eq. 22 — multi-stage accumulation.
+# ---------------------------------------------------------------------------
+def outer_accumulator_bits(p_inner: int, k: int, tile: int) -> int:
+    """P_O = ceil(P_I + log2(K) - log2(T))   (Eq. 22)."""
+    if k < tile:
+        tile = k
+    return int(math.ceil(p_inner + math.log2(k) - math.log2(tile)))
+
+
+def num_tiles(k: int, tile: int) -> int:
+    return (k + tile - 1) // tile
+
+
+def worst_case_dot_bounds(
+    pos_sum: float, neg_sum: float, act: Alphabet
+) -> tuple[float, float]:
+    """Worst-case (min, max) of x.q over x in A_N^K given the sum of positive
+    elements of q (``pos_sum`` = beta >= 0) and the sum of negative elements
+    (``neg_sum`` = alpha <= 0).   (Eq. 6)
+    """
+    hi = act.nu * pos_sum + act.mu * neg_sum
+    lo = act.mu * pos_sum + act.nu * neg_sum
+    return lo, hi

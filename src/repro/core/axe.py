@@ -1,0 +1,206 @@
+"""AXE orchestration: quantize one linear layer end-to-end (paper §3.3).
+
+This is the user-facing entry point of the paper's contribution: given a
+layer's float weights and its streamed calibration statistics, produce
+integer weights that (a) minimize layer reconstruction error via GPFQ or
+OPTQ and (b) *provably* never overflow the requested accumulation datapath
+(monolithic P bits, or multi-stage (T, P_I) tiles).
+
+The result bundles everything a quantized runtime needs: integer codes,
+per-channel scales, activation quantizer parameters, corrected bias, and the
+overflow certificate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .alphabet import (
+    Alphabet,
+    act_alphabet,
+    min_accumulator_bits,
+    outer_accumulator_bits,
+    weight_alphabet,
+)
+from .calibration import LayerStats
+from .ep_init import ep_init
+from .equalization import bias_correction
+from .gpfq import AxeConfig, GreedyResult, gpfq_memory_efficient
+from .optq import optq
+from .overflow import CertReport, certify
+from .quantizers import (
+    ActQuantParams,
+    ROUND_NEAREST,
+    quantize_weights_rtn,
+    to_int_domain,
+    weight_scales,
+)
+
+GPFQ = "gpfq"
+OPTQ = "optq"
+RTN = "rtn"  # direct round-to-nearest (no error correction) baseline
+EPINIT = "ep_init"  # projection + round-to-zero baseline (A2Q+ applied post-hoc)
+
+
+@dataclass(frozen=True)
+class PTQConfig:
+    """One knob object for the whole PTQ recipe.
+
+    Defaults follow the paper's LLM setting (§4.2): W4A8, GPFQ, multi-stage
+    T=128 tiles into a 16-bit inner accumulator, round-to-nearest, soft+strict
+    constraints, activation asymmetric-unsigned with 99th-percentile ranges.
+    ``constrain=False`` gives the unconstrained Base algorithm of Table 1.
+    """
+
+    w_bits: int = 4
+    act_bits: int = 8
+    act_signed: bool = False
+    algorithm: str = GPFQ
+    constrain: bool = True
+    p_bits: int = 16
+    tile: int | None = 128
+    rounding: str = ROUND_NEAREST
+    soft: bool = True
+    strict: bool = True
+    z_multiplier: float = 1.0
+    act_order: bool = True
+    act_percentile: float = 99.0
+    damp_frac: float = 0.01  # OPTQ hessian damping
+    gpfq_eta: float = 1e-6  # GPFQ sqrt damping
+
+    @property
+    def w_alphabet(self) -> Alphabet:
+        return weight_alphabet(self.w_bits)
+
+    @property
+    def act_alphabet(self) -> Alphabet:
+        return act_alphabet(self.act_bits, signed=self.act_signed)
+
+    @property
+    def axe(self) -> AxeConfig | None:
+        if not self.constrain:
+            return None
+        return AxeConfig(
+            p_bits=self.p_bits,
+            tile=self.tile,
+            soft=self.soft,
+            strict=self.strict,
+            z_multiplier=self.z_multiplier,
+        )
+
+    def naive_p_star(self, k: int) -> int:
+        """Eq. 3 bound for this (M, N) pair — the naive-manipulation baseline."""
+        return min_accumulator_bits(k, self.act_bits, self.w_bits, self.act_signed)
+
+    def outer_bits(self, k: int) -> int:
+        if not self.constrain:
+            return 32
+        if self.tile is None:
+            return self.p_bits
+        return outer_accumulator_bits(self.p_bits, k, self.tile)
+
+
+@dataclass
+class QuantizedLinear:
+    """Deployable artifact for one linear layer."""
+
+    q_int: jax.Array  # (K, C) integer codes (int8 storage; int4 packs 2/byte)
+    scale: jax.Array  # (1, C)
+    act: ActQuantParams
+    bias: jax.Array | None  # (C,) corrected bias
+    cert: CertReport | None
+    cfg: PTQConfig
+    aux: dict = field(default_factory=dict)
+
+    @property
+    def w_q(self) -> jax.Array:
+        return self.q_int * self.scale
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Simulated-quantized forward (fake-quant activations, real matmul).
+
+        The true-integer path (packed int4 x int8 with multi-stage
+        accumulation) lives in :mod:`repro.kernels.w4a8`.
+        """
+        from .quantizers import fake_quantize_act
+
+        xq = fake_quantize_act(x, self.act)
+        y = xq @ self.w_q
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+
+def quantize_linear(
+    w: jax.Array,
+    stats: LayerStats,
+    cfg: PTQConfig,
+    bias: jax.Array | None = None,
+) -> QuantizedLinear:
+    """Quantize one (K, C) linear layer from its streamed statistics."""
+    k = w.shape[0]
+    if stats.k != k:
+        raise ValueError(f"stats built for K={stats.k}, weights have K={k}")
+    act_params = stats.observer.act_quant(cfg.act_alphabet)
+
+    if cfg.algorithm == GPFQ:
+        h_half, g = stats.gpfq_stats(cfg.gpfq_eta)
+        res = gpfq_memory_efficient(
+            w, h_half, g, cfg.w_alphabet, cfg.act_alphabet,
+            axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+        )
+    elif cfg.algorithm == OPTQ:
+        hess = stats.optq_hessian(cfg.damp_frac)
+        res = optq(
+            w, hess, cfg.w_alphabet, cfg.act_alphabet,
+            axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+        )
+    elif cfg.algorithm == RTN:
+        q_int, scale = quantize_weights_rtn(w, cfg.w_alphabet, cfg.rounding)
+        res = GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
+    elif cfg.algorithm == EPINIT:
+        scale = weight_scales(w, cfg.w_alphabet)
+        w_int = to_int_domain(w, scale)
+        axe = cfg.axe or AxeConfig(p_bits=cfg.p_bits, tile=cfg.tile)
+        from .alphabet import strict_budgets
+
+        budgets = strict_budgets(axe.p_bits, cfg.act_alphabet, 0.0)
+        # EP-init projects each tile row onto the l1 ball of the *strict*
+        # radius (RTZ keeps it valid post-rounding), per A2Q+ / paper §2.3.
+        from .ep_init import tiled, untiled
+
+        t = axe.tile or k
+        w_ct = tiled(w_int.T, t)  # (C, n_tiles, T)
+        # Conservative A2Q-style radius ||q||_1 <= (2^(P-1)-1)/nu: certifiable
+        # *without* the zero-centering assumption of the A2Q+/Eq.4 budget,
+        # which a post-hoc projection cannot enforce (paper §2.3 discussion).
+        radius = budgets.B
+        q_ct = ep_init(w_ct, radius, cfg.w_alphabet)
+        q_int = untiled(q_ct, k).T
+        res = GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
+    else:
+        raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
+
+    new_bias = bias_correction(stats.x_mean, w, res.w_q, bias)
+
+    cert = None
+    if cfg.constrain or cfg.algorithm == EPINIT:
+        cert = certify(res.q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile)
+
+    return QuantizedLinear(
+        q_int=res.q_int,
+        scale=res.scale,
+        act=act_params,
+        bias=new_bias,
+        cert=cert,
+        cfg=cfg,
+        aux=res.aux,
+    )
+
+
+def sweep_config(cfg: PTQConfig, **updates) -> PTQConfig:
+    """Convenience for Pareto sweeps: replace fields on a frozen config."""
+    return replace(cfg, **updates)

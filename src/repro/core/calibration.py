@@ -1,0 +1,127 @@
+"""Streaming calibration statistics (paper App. B's memory argument).
+
+GPFQ's standard form needs all D calibration samples per layer — O(D * K)
+memory, which is exactly what Theorem B.1 removes. This module accumulates
+the square-matrix sufficient statistics one batch at a time:
+
+    h_raw = sum_b  Xq_b^T Xq_b     (= Xq Xq^T in the paper's (K, D) layout)
+    g_raw = sum_b  X_b^T  Xq_b     (= X  Xq^T)
+
+plus the input mean (for bias correction), per-tensor activation ranges
+(percentile calibrated, §C.1) and per-input-dim abs-max (for SmoothQuant
+equalization). Everything is O(K^2) regardless of the number of samples.
+Batches are (n, K) row-major activations, the natural layout coming out of a
+model forward pass.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .alphabet import Alphabet
+from .quantizers import ActQuantParams, calibrate_act_quant
+
+
+@dataclass
+class ActObserver:
+    """Per-tensor activation range observer (running mean of per-batch
+    percentiles, Brevitas-style) + per-dim abs-max for equalization."""
+
+    k: int
+    percentile: float = 99.0
+    n_batches: int = 0
+    lo_sum: float = 0.0
+    hi_sum: float = 0.0
+    min_seen: float = float("inf")
+    max_seen: float = -float("inf")
+    dim_absmax: np.ndarray = field(default=None)  # (K,)
+
+    def __post_init__(self):
+        if self.dim_absmax is None:
+            self.dim_absmax = np.zeros((self.k,), np.float64)
+
+    def update(self, x: jax.Array) -> None:
+        x = np.asarray(x, np.float64).reshape(-1, self.k)
+        q_lo = 100.0 - self.percentile
+        lo, hi = np.percentile(x, [q_lo, self.percentile])
+        self.lo_sum += float(lo)
+        self.hi_sum += float(hi)
+        self.n_batches += 1
+        self.min_seen = min(self.min_seen, float(x.min()))
+        self.max_seen = max(self.max_seen, float(x.max()))
+        np.maximum(self.dim_absmax, np.abs(x).max(axis=0), out=self.dim_absmax)
+
+    @property
+    def lo(self) -> float:
+        return self.lo_sum / max(self.n_batches, 1)
+
+    @property
+    def hi(self) -> float:
+        return self.hi_sum / max(self.n_batches, 1)
+
+    def act_quant(self, alphabet: Alphabet) -> ActQuantParams:
+        return calibrate_act_quant(self.lo, self.hi, alphabet)
+
+
+@dataclass
+class LayerStats:
+    """Streaming sufficient statistics for one linear layer (input dim K)."""
+
+    k: int
+    dtype: jnp.dtype = jnp.float32
+    n_samples: int = 0
+    h_raw: jax.Array = None  # (K, K)  sum Xq^T Xq
+    g_raw: jax.Array = None  # (K, K)  sum X^T Xq
+    x_sum: jax.Array = None  # (K,)    sum of analog inputs (bias correction)
+    observer: ActObserver = None
+
+    def __post_init__(self):
+        if self.h_raw is None:
+            self.h_raw = jnp.zeros((self.k, self.k), self.dtype)
+        if self.g_raw is None:
+            self.g_raw = jnp.zeros((self.k, self.k), self.dtype)
+        if self.x_sum is None:
+            self.x_sum = jnp.zeros((self.k,), self.dtype)
+        if self.observer is None:
+            self.observer = ActObserver(k=self.k)
+
+    def update(self, x: jax.Array, xq: jax.Array | None = None) -> None:
+        """Accumulate one batch. ``x``: (n, K) analog inputs; ``xq``: their
+        quantized-network counterparts (defaults to ``x`` for the common
+        PTQ pipeline where the observer pass and quantization pass reuse
+        the same inputs)."""
+        x = x.reshape(-1, self.k).astype(self.dtype)
+        xq = x if xq is None else xq.reshape(-1, self.k).astype(self.dtype)
+        self.h_raw = self.h_raw + xq.T @ xq
+        self.g_raw = self.g_raw + x.T @ xq
+        self.x_sum = self.x_sum + jnp.sum(x, axis=0)
+        self.n_samples += x.shape[0]
+        self.observer.update(x)
+
+    # -- finalized statistics -------------------------------------------------
+    @property
+    def x_mean(self) -> jax.Array:
+        return self.x_sum / max(self.n_samples, 1)
+
+    def optq_hessian(self, damp_frac: float = 0.01) -> jax.Array:
+        """2 Xq Xq^T + eta I (Algorithm 2's proxy)."""
+        h = 2.0 * self.h_raw
+        eta = damp_frac * jnp.mean(jnp.diag(h)) + 1e-12
+        return h + eta * jnp.eye(self.k, dtype=self.dtype)
+
+    def gpfq_stats(self, eta: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+        """(H, G) of Theorem B.1 with H = (h_raw + eta*mean_diag*I)^(1/2)."""
+        damp = eta * jnp.mean(jnp.diag(self.h_raw)) + 1e-12
+        hh = self.h_raw + damp * jnp.eye(self.k, dtype=self.dtype)
+        evals, evecs = jnp.linalg.eigh(hh)
+        evals = jnp.maximum(evals, 0.0)
+        h_half = (evecs * jnp.sqrt(evals)) @ evecs.T
+        return h_half, self.g_raw
+
+    def memory_bytes(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return (2 * self.k * self.k + self.k) * itemsize

@@ -1,0 +1,92 @@
+"""Euclidean l1-ball projection, the Lagrangian threshold lambda (Eqs. 15-16),
+and the EP-init baseline of A2Q+ (Colbert et al., 2024) evaluated in the PTQ
+setting (paper §2.3 / §4.1).
+
+The projection follows Duchi et al. (2008): for w in R^K and radius Z,
+
+    v* = argmin_v  0.5 * ||v - w||^2   s.t.  ||v||_1 <= Z
+    v*_i = sign(w_i) * max(|w_i| - lambda, 0)
+    lambda = (sum_{i<=rho} mu_i - Z) / rho          (Eq. 16)
+
+with mu = sort(|w|, desc) and rho the number of non-zeros in v*. All functions
+are vectorized over channels (and, for multi-stage accumulation, over tiles):
+the channel/tile axes are leading and the reduction axis is the last one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .alphabet import Alphabet
+from .quantizers import ROUND_ZERO, quantize_int
+
+
+def soft_threshold(x: jax.Array, lam: jax.Array) -> jax.Array:
+    """Pi_lambda(x) = sign(x) * relu(|x| - lambda)  (paper Eq. 14's shrinkage)."""
+    return jnp.sign(x) * jax.nn.relu(jnp.abs(x) - lam)
+
+
+def l1_projection_threshold(w: jax.Array, radius: jax.Array | float) -> jax.Array:
+    """Lagrangian lambda of the projection of ``w`` onto the l1 ball (Eq. 16).
+
+    ``w``: (..., K); ``radius``: scalar or broadcastable to (...,).
+    Returns lambda >= 0 with shape (...,). lambda == 0 iff ||w||_1 <= radius.
+    """
+    w = jnp.asarray(w)
+    radius = jnp.broadcast_to(jnp.asarray(radius, w.dtype), w.shape[:-1])
+    k = w.shape[-1]
+    mu = jnp.sort(jnp.abs(w), axis=-1)[..., ::-1]  # descending magnitudes
+    cssv = jnp.cumsum(mu, axis=-1) - radius[..., None]
+    idx = jnp.arange(1, k + 1, dtype=w.dtype)
+    # rho = max { j : mu_j > (cumsum_j - Z) / j }
+    cond = mu * idx > cssv
+    rho = jnp.sum(cond, axis=-1)  # at least 1 whenever ||w||_1 > Z
+    rho_safe = jnp.maximum(rho, 1)
+    gathered = jnp.take_along_axis(cssv, (rho_safe - 1)[..., None], axis=-1)[..., 0]
+    lam = gathered / rho_safe.astype(w.dtype)
+    inside = jnp.sum(jnp.abs(w), axis=-1) <= radius
+    return jnp.where(inside, 0.0, jnp.maximum(lam, 0.0))
+
+
+def project_l1_ball(w: jax.Array, radius: jax.Array | float) -> jax.Array:
+    """Euclidean projection of ``w`` (..., K) onto the l1 ball of ``radius``."""
+    lam = l1_projection_threshold(w, radius)
+    return soft_threshold(w, lam[..., None])
+
+
+def ep_init(
+    w_int: jax.Array,
+    radius: jax.Array | float,
+    alphabet: Alphabet,
+) -> jax.Array:
+    """EP-init baseline (A2Q+ applied post-training, paper §2.3).
+
+    ``w_int``: integer-domain weights, shape (..., K) with K the reduction
+    (input) axis. Projects each row onto the l1 ball of ``radius`` (integer
+    units) and quantizes with **round-to-zero**, which guarantees
+    |Q(v_i)| <= |v_i| and hence ||q||_1 <= ||v||_1 <= radius. No error
+    correction — this is the property AXE improves on.
+    """
+    v = project_l1_ball(w_int, radius)
+    return quantize_int(v, alphabet, rounding=ROUND_ZERO)
+
+
+def tiled(w_int: jax.Array, tile: int) -> jax.Array:
+    """Reshape (..., K) -> (..., n_tiles, T), zero-padding K to a tile multiple.
+
+    Zero padding is safe for every consumer in this package: zeros have no l1
+    mass, quantize to zero, and contribute nothing to dot products.
+    """
+    k = w_int.shape[-1]
+    n_tiles = (k + tile - 1) // tile
+    pad = n_tiles * tile - k
+    if pad:
+        w_int = jnp.pad(w_int, [(0, 0)] * (w_int.ndim - 1) + [(0, pad)])
+    return w_int.reshape(*w_int.shape[:-1], n_tiles, tile)
+
+
+def untiled(w_tiles: jax.Array, k: int) -> jax.Array:
+    """Inverse of :func:`tiled` — flatten tiles and strip padding."""
+    flat = w_tiles.reshape(*w_tiles.shape[:-2], -1)
+    return flat[..., :k]

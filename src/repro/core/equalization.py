@@ -1,0 +1,67 @@
+"""Graph equalization (SmoothQuant, Xiao et al. 2023) and bias correction
+(Nagel et al. 2019) — the pre-/post-processing steps of the paper's
+quantization recipe (§C.1).
+
+These are *functionally invariant* rewrites of the float network: for every
+linear with a foldable preceding scale (an RMSNorm/LayerNorm weight or the
+previous linear's output channels),
+
+    y = (x / s) @ (diag(s) W) == x @ W,
+
+with s chosen to migrate quantization difficulty from activations to weights
+(SmoothQuant's alpha-balanced scales). Bias correction then absorbs the
+expected quantization error E[x]^T (W - W_q) into the bias.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smoothquant_scales(
+    act_absmax: jax.Array,
+    weight_absmax: jax.Array,
+    alpha: float = 0.5,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """s_j = max|X_j|^alpha / max|W_j.|^(1-alpha)  (SmoothQuant Eq. 4).
+
+    ``act_absmax``: (K,) per-input-dim activation abs-max (from the
+    :class:`~repro.core.calibration.ActObserver`); ``weight_absmax``: (K,)
+    per-input-dim (row) abs-max of the consuming weight(s). Scales are
+    clamped away from zero and normalized so the no-op scale is 1 when either
+    side is degenerate.
+    """
+    a = jnp.maximum(jnp.asarray(act_absmax), eps)
+    w = jnp.maximum(jnp.asarray(weight_absmax), eps)
+    s = jnp.power(a, alpha) / jnp.power(w, 1.0 - alpha)
+    return jnp.clip(s, eps, 1.0 / eps)
+
+
+def equalize_linear(w: jax.Array, s: jax.Array) -> jax.Array:
+    """Scale the rows (input dims) of ``w`` (K, C) by ``s`` (K,)."""
+    return w * s[:, None]
+
+
+def equalize_norm_weight(norm_w: jax.Array, s: jax.Array) -> jax.Array:
+    """Fold 1/s into the preceding norm's elementwise weight."""
+    return norm_w / s
+
+
+def equalize_norm_bias(norm_b: jax.Array, s: jax.Array) -> jax.Array:
+    return norm_b / s
+
+
+def bias_correction(
+    x_mean: jax.Array, w: jax.Array, w_q: jax.Array, bias: jax.Array | None
+) -> jax.Array:
+    """b' = b + E[x]^T (W - W_q)   (Nagel et al. 2019, paper §C.1).
+
+    ``x_mean``: (K,), ``w``/``w_q``: (K, C). Returns the corrected (C,) bias
+    (created from zero when the layer had none).
+    """
+    delta = x_mean @ (w - w_q)  # (C,)
+    if bias is None:
+        return delta
+    return bias + delta

@@ -1,0 +1,337 @@
+"""GPFQ (Lybrand & Saab, 2021) with accumulator-aware extensions (paper §3.2,
+Algorithm 1) and the memory-efficient square-matrix reformulation
+(Theorem B.1).
+
+All greedy state runs in the *integer weight domain*: the caller's real
+weights are divided by their per-channel scale up-front, so that the l1
+budgets of Eq. 21 and the soft threshold of Eq. 16 are exact integer-unit
+quantities. GPFQ's iteration is exactly scale-equivariant (the update rules
+are linear in (W_i, U)), so this is functionally identical to running in the
+real domain, as in the paper.
+
+Shapes follow Algorithm 1:   W (K, C) rows = input dims, X (K, D) samples of
+the *analog* network, Xq (K, D) samples of the quantized network (real,
+dequantized). The memory-efficient path replaces (X, Xq) by (G H^-1, H) with
+H = (Xq Xq^T + eta I)^(1/2) and G = X Xq^T, both (K, K) — Theorem B.1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .alphabet import (
+    Alphabet,
+    Budgets,
+    l1_budget_zero_centered,
+    strict_budgets,
+)
+from .ep_init import l1_projection_threshold, soft_threshold, tiled
+from .quantizers import (
+    ROUND_NEAREST,
+    ROUNDING_SLACK,
+    quantize_int,
+    to_int_domain,
+    weight_scales,
+)
+
+
+@dataclass(frozen=True)
+class AxeConfig:
+    """Accumulator-aware extension knobs (paper §3.3).
+
+    ``p_bits`` is the *inner* accumulator bit width when ``tile`` is set
+    (multi-stage accumulation) and the monolithic accumulator width
+    otherwise. ``soft``/``strict`` toggle the two constraints — the
+    AXE-HCO ablation of Table 2 is ``soft=False, strict=True``.
+    """
+
+    p_bits: int
+    tile: int | None = None
+    soft: bool = True
+    strict: bool = True
+    z_multiplier: float = 1.0
+
+
+@dataclass
+class GreedyResult:
+    q_int: jax.Array  # (K, C) integer-domain quantized weights (float carrier)
+    scale: jax.Array  # (1, C) per-channel scale
+    w_alphabet: Alphabet
+    act_alphabet: Alphabet | None = None
+    axe: AxeConfig | None = None
+    aux: dict = field(default_factory=dict)
+
+    @property
+    def w_q(self) -> jax.Array:
+        """Dequantized real-domain weights."""
+        return self.q_int * self.scale
+
+
+# ---------------------------------------------------------------------------
+# Constraint state shared by GPFQ and OPTQ loops.
+# ---------------------------------------------------------------------------
+def make_axe_state(
+    w_int: jax.Array,
+    axe: AxeConfig | None,
+    act_alphabet: Alphabet | None,
+    rounding: str,
+    k: int,
+):
+    """Precompute (lambda, budgets, tile_ids) for the greedy loop.
+
+    Returns a dict of arrays:
+      lam      (n_tiles, C)  soft thresholds (0 disables)
+      A, B     scalars       strict budget limits (Eq. 21)
+      tile_ids (K,)          original-index -> tile id
+      pos, neg (n_tiles, C)  running committed sums (init 0)
+    or None when ``axe`` is None (plain GPFQ/OPTQ).
+    """
+    if axe is None:
+        return None
+    if act_alphabet is None:
+        raise ValueError("AXE requires quantized activations (paper §3.3)")
+    K, C = w_int.shape
+    tile = axe.tile or k
+    n_tiles = (k + tile - 1) // tile
+    tile_ids = jnp.arange(K) // tile
+
+    budgets: Budgets = strict_budgets(axe.p_bits, act_alphabet, ROUNDING_SLACK[rounding])
+
+    if axe.soft:
+        z = axe.z_multiplier * l1_budget_zero_centered(axe.p_bits, act_alphabet)
+        # per (channel, tile) threshold; w tiles: (C, n_tiles, T)
+        w_ct = tiled(w_int.T, tile)  # (C, n_tiles, T)
+        lam = l1_projection_threshold(w_ct, z)  # (C, n_tiles)
+        lam = lam.T  # (n_tiles, C)
+    else:
+        lam = jnp.zeros((n_tiles, C), w_int.dtype)
+
+    return {
+        "lam": lam,
+        "A": jnp.asarray(budgets.A, w_int.dtype),
+        "B": jnp.asarray(budgets.B, w_int.dtype),
+        "mode": budgets.mode,
+        "strict": axe.strict,
+        "tile_ids": tile_ids,
+        "pos": jnp.zeros((n_tiles, C), w_int.dtype),
+        "neg": jnp.zeros((n_tiles, C), w_int.dtype),
+    }
+
+
+def constrain_row(
+    v,
+    t,
+    lam,
+    A,
+    B,
+    pos,
+    neg,
+    *,
+    strict: bool,
+    mode: str,
+    alphabet: Alphabet,
+    rounding: str,
+):
+    """Pi_lambda then Psi_{a,b} then Q for one row (paper Eq. 18), plus the
+    budget bookkeeping of Eqs. 19-20.
+
+    ``v`` (C,) raw values for input dim with tile id ``t``; ``pos``/``neg``
+    (n_tiles, C) committed sums. The clip interval is clamped to contain 0 so
+    a spent budget can never *force* a non-zero weight (zero is always
+    admissible and consumes no budget). Returns (q_row, pos, neg).
+    Shared by the GPFQ and OPTQ loops; traceable under jit (``strict``,
+    ``mode``, ``rounding`` are static).
+    """
+    v = soft_threshold(v, lam[t])
+    if strict:
+        pos_t, neg_t = pos[t], neg[t]
+        if mode == "split":
+            lo = jnp.minimum(A - neg_t, 0.0)
+            hi = jnp.maximum(B - pos_t, 0.0)
+        else:  # joint l1 budget (signed activations)
+            rem = jnp.maximum(B - (pos_t - neg_t), 0.0)
+            lo, hi = -rem, rem
+        v = jnp.clip(v, lo, hi)
+    q = quantize_int(v, alphabet, rounding)
+    pos = pos.at[t].add(jnp.maximum(q, 0.0))
+    neg = neg.at[t].add(jnp.minimum(q, 0.0))
+    return q, pos, neg
+
+
+# ---------------------------------------------------------------------------
+# The GPFQ greedy loop (shared by the standard and memory-efficient paths).
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe"))
+def _gpfq_loop(
+    w_int,  # (K, C) integer-domain weights
+    xg,  # (K, D) analog inputs (rows)
+    xh,  # (K, D) quantized inputs (rows)
+    lam,  # (n_tiles, C) or (1, C) zeros
+    A,
+    B,
+    tile_ids,  # (K,)
+    pos0,
+    neg0,
+    *,
+    w_bits: int,
+    w_signed: bool,
+    rounding: str,
+    strict: bool,
+    mode: str,
+    has_axe: bool,
+):
+    K, C = w_int.shape
+    D = xg.shape[1]
+    alphabet = Alphabet(bits=w_bits, signed=w_signed, symmetric=True)
+    h_norm2 = jnp.maximum(jnp.sum(xh * xh, axis=1), 1e-20)  # (K,)
+    hg_dot = jnp.sum(xh * xg, axis=1)  # (K,) <Xq_i, X_i>
+
+    def body(i, carry):
+        U, Q, pos, neg = carry
+        h_i = jax.lax.dynamic_slice_in_dim(xh, i, 1, axis=0)[0]  # (D,)
+        w_i = jax.lax.dynamic_slice_in_dim(w_int, i, 1, axis=0)[0]  # (C,)
+        g_i = jax.lax.dynamic_slice_in_dim(xg, i, 1, axis=0)[0]  # (D,)
+        denom = h_norm2[i]
+        v = w_i * (hg_dot[i] / denom) + (h_i @ U) / denom  # (C,)
+
+        if has_axe:
+            q, pos, neg = constrain_row(
+                v, tile_ids[i], lam, A, B, pos, neg,
+                strict=strict, mode=mode, alphabet=alphabet, rounding=rounding,
+            )
+        else:
+            q = quantize_int(v, alphabet, rounding)
+
+        U = U + jnp.outer(g_i, w_i) - jnp.outer(h_i, q)
+        Q = jax.lax.dynamic_update_slice_in_dim(Q, q[None, :], i, axis=0)
+        return (U, Q, pos, neg)
+
+    U0 = jnp.zeros((D, C), w_int.dtype)
+    Q0 = jnp.zeros_like(w_int)
+    U, Q, pos, neg = jax.lax.fori_loop(0, K, body, (U0, Q0, pos0, neg0))
+    return Q, U, pos, neg
+
+
+def _prepare(w, w_alphabet):
+    scale = weight_scales(w, w_alphabet)  # (1, C)
+    return to_int_domain(w, scale), scale
+
+
+def _run(
+    w,
+    xg,
+    xh,
+    w_alphabet: Alphabet,
+    act_alphabet: Alphabet | None,
+    axe: AxeConfig | None,
+    rounding: str,
+    act_order: bool,
+):
+    w_int, scale = _prepare(w, w_alphabet)
+    K = w.shape[0]
+    state = make_axe_state(w_int, axe, act_alphabet, rounding, K)
+
+    if act_order:
+        # descending diagonal of the Hessian proxy 2 Xq Xq^T == row norms of Xq
+        order = jnp.argsort(-jnp.sum(xh * xh, axis=1))
+    else:
+        order = jnp.arange(K)
+    inv_order = jnp.argsort(order)
+
+    if state is None:
+        n_tiles = 1
+        C = w.shape[1]
+        lam = jnp.zeros((1, C), w_int.dtype)
+        A = jnp.asarray(0.0)
+        B = jnp.asarray(0.0)
+        tile_ids = jnp.zeros((K,), jnp.int32)
+        pos0 = jnp.zeros((1, C), w_int.dtype)
+        neg0 = jnp.zeros((1, C), w_int.dtype)
+        strict, mode, has_axe = False, "split", False
+    else:
+        lam, A, B = state["lam"], state["A"], state["B"]
+        tile_ids, pos0, neg0 = state["tile_ids"], state["pos"], state["neg"]
+        strict, mode, has_axe = state["strict"], state["mode"], True
+
+    Q_perm, U, pos, neg = _gpfq_loop(
+        w_int[order],
+        xg[order],
+        xh[order],
+        lam,
+        A,
+        B,
+        tile_ids[order] if state is not None else tile_ids,
+        pos0,
+        neg0,
+        w_bits=w_alphabet.bits,
+        w_signed=w_alphabet.signed,
+        rounding=rounding,
+        strict=strict,
+        mode=mode,
+        has_axe=has_axe,
+    )
+    q_int = Q_perm[inv_order]
+    aux = {"residual_norm": jnp.linalg.norm(U), "pos": pos, "neg": neg}
+    return GreedyResult(
+        q_int=q_int,
+        scale=scale,
+        w_alphabet=w_alphabet,
+        act_alphabet=act_alphabet,
+        axe=axe,
+        aux=aux,
+    )
+
+
+def gpfq(
+    w: jax.Array,
+    x: jax.Array,
+    xq: jax.Array,
+    w_alphabet: Alphabet,
+    act_alphabet: Alphabet | None = None,
+    axe: AxeConfig | None = None,
+    rounding: str = ROUND_NEAREST,
+    act_order: bool = False,
+) -> GreedyResult:
+    """Standard GPFQ (Algorithm 1). ``x``/``xq``: (K, D) sample rows."""
+    if w.shape[0] != x.shape[0] or x.shape != xq.shape:
+        raise ValueError(f"shape mismatch: w {w.shape}, x {x.shape}, xq {xq.shape}")
+    return _run(w, x, xq, w_alphabet, act_alphabet, axe, rounding, act_order)
+
+
+def me_stats(x: jax.Array, xq: jax.Array, eta: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    """(H, G) of Theorem B.1: H = (Xq Xq^T + eta*mean_diag*I)^(1/2), G = X Xq^T.
+
+    Streaming accumulation of Xq Xq^T / X Xq^T lives in
+    :mod:`repro.core.calibration`; this helper is the from-samples path.
+    """
+    hh = xq @ xq.T
+    damp = eta * jnp.mean(jnp.diag(hh)) + 1e-12
+    hh = hh + damp * jnp.eye(hh.shape[0], dtype=hh.dtype)
+    evals, evecs = jnp.linalg.eigh(hh)
+    evals = jnp.maximum(evals, 0.0)
+    h_half = (evecs * jnp.sqrt(evals)) @ evecs.T
+    g = x @ xq.T
+    return h_half, g
+
+
+def gpfq_memory_efficient(
+    w: jax.Array,
+    h_half: jax.Array,
+    g: jax.Array,
+    w_alphabet: Alphabet,
+    act_alphabet: Alphabet | None = None,
+    axe: AxeConfig | None = None,
+    rounding: str = ROUND_NEAREST,
+    act_order: bool = False,
+) -> GreedyResult:
+    """Memory-efficient GPFQ (Theorem B.1): GPFQ(W, G H^-1, H)."""
+    k = w.shape[0]
+    if h_half.shape != (k, k) or g.shape != (k, k):
+        raise ValueError("h_half and g must be (K, K)")
+    # (G H^-1)^T = H^-1 G^T  (H symmetric PSD)
+    gh_inv = jnp.linalg.solve(h_half, g.T).T
+    return _run(w, gh_inv, h_half, w_alphabet, act_alphabet, axe, rounding, act_order)

@@ -1,0 +1,166 @@
+"""OPTQ / GPTQ (Frantar et al., 2022) with accumulator-aware extensions
+(paper Algorithm 2).
+
+Same conventions as :mod:`repro.core.gpfq`: W is (K, C) rows = input dims,
+the loop runs in the integer weight domain, and the AXE constraints
+(soft threshold + strict budget clipping) are applied per row before
+quantization, with error propagated through the inverse-Hessian Cholesky
+factor exactly as in standard OPTQ.
+
+Note OPTQ's scale-equivariance: the update
+``W_{i:} -= ((W_i - Q_i)/Hinv_ii) * Hinv_{i,i:}`` is linear in W per channel,
+so running in the integer domain (W / per-channel scale) commutes with the
+real-domain algorithm, like GPFQ.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .alphabet import Alphabet
+from .gpfq import AxeConfig, GreedyResult, constrain_row, make_axe_state
+from .quantizers import (
+    ROUND_NEAREST,
+    quantize_int,
+    to_int_domain,
+    weight_scales,
+)
+
+
+def hessian_proxy(xq: jax.Array, damp_frac: float = 0.01) -> jax.Array:
+    """H = 2 Xq Xq^T + eta I with eta = damp_frac * mean(diag)   (paper App. A).
+
+    ``xq``: (K, D) quantized-input sample rows. The (K, K) proxy can also be
+    accumulated streaming via :mod:`repro.core.calibration`.
+    """
+    h = 2.0 * (xq @ xq.T)
+    eta = damp_frac * jnp.mean(jnp.diag(h)) + 1e-12
+    return h + eta * jnp.eye(h.shape[0], dtype=h.dtype)
+
+
+def inverse_cholesky(h: jax.Array) -> jax.Array:
+    """Upper-triangular R with H^-1 = R^T R (torch.linalg.cholesky(.., upper))."""
+    h_inv = jnp.linalg.inv(h)
+    # symmetrize against numerical drift before factorization
+    h_inv = 0.5 * (h_inv + h_inv.T)
+    return jnp.linalg.cholesky(h_inv).T
+
+
+@partial(jax.jit, static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe"))
+def _optq_loop(
+    w_int,  # (K, C)
+    hinv_u,  # (K, K) upper-triangular factor
+    lam,
+    A,
+    B,
+    tile_ids,
+    pos0,
+    neg0,
+    *,
+    w_bits: int,
+    w_signed: bool,
+    rounding: str,
+    strict: bool,
+    mode: str,
+    has_axe: bool,
+):
+    K, C = w_int.shape
+    alphabet = Alphabet(bits=w_bits, signed=w_signed, symmetric=True)
+    col = jnp.arange(K)
+
+    def body(i, carry):
+        W, Q, pos, neg = carry
+        w_i = jax.lax.dynamic_slice_in_dim(W, i, 1, axis=0)[0]  # (C,)
+        if has_axe:
+            q, pos, neg = constrain_row(
+                w_i, tile_ids[i], lam, A, B, pos, neg,
+                strict=strict, mode=mode, alphabet=alphabet, rounding=rounding,
+            )
+        else:
+            q = quantize_int(w_i, alphabet, rounding)
+        d = hinv_u[i, i]
+        err = (w_i - q) / d  # (C,)
+        # propagate to not-yet-quantized rows only (j > i)
+        row = jnp.where(col > i, hinv_u[i, :], 0.0)  # (K,)
+        W = W - jnp.outer(row, err)
+        Q = jax.lax.dynamic_update_slice_in_dim(Q, q[None, :], i, axis=0)
+        return (W, Q, pos, neg)
+
+    Q0 = jnp.zeros_like(w_int)
+    W, Q, pos, neg = jax.lax.fori_loop(0, K, body, (w_int, Q0, pos0, neg0))
+    return Q, pos, neg
+
+
+def optq(
+    w: jax.Array,
+    hessian: jax.Array,
+    w_alphabet: Alphabet,
+    act_alphabet: Alphabet | None = None,
+    axe: AxeConfig | None = None,
+    rounding: str = ROUND_NEAREST,
+    act_order: bool = True,
+) -> GreedyResult:
+    """OPTQ with optional AXE constraints (Algorithm 2).
+
+    ``hessian``: the (K, K) proxy from :func:`hessian_proxy` (already damped).
+    ``act_order``: quantize rows in descending diag(H) order (the GPTQ
+    `--act-order` trick the paper also adopts, §C.1).
+    """
+    K = w.shape[0]
+    if hessian.shape != (K, K):
+        raise ValueError(f"hessian must be ({K}, {K}), got {hessian.shape}")
+
+    scale = weight_scales(w, w_alphabet)
+    w_int = to_int_domain(w, scale)
+    state = make_axe_state(w_int, axe, act_alphabet, rounding, K)
+
+    if act_order:
+        order = jnp.argsort(-jnp.diag(hessian))
+    else:
+        order = jnp.arange(K)
+    inv_order = jnp.argsort(order)
+    h_perm = hessian[order][:, order]
+    hinv_u = inverse_cholesky(h_perm)
+
+    if state is None:
+        C = w.shape[1]
+        lam = jnp.zeros((1, C), w_int.dtype)
+        A = jnp.asarray(0.0)
+        B = jnp.asarray(0.0)
+        tile_ids = jnp.zeros((K,), jnp.int32)
+        pos0 = jnp.zeros((1, C), w_int.dtype)
+        neg0 = jnp.zeros((1, C), w_int.dtype)
+        strict, mode, has_axe = False, "split", False
+    else:
+        lam, A, B = state["lam"], state["A"], state["B"]
+        tile_ids, pos0, neg0 = state["tile_ids"], state["pos"], state["neg"]
+        strict, mode, has_axe = state["strict"], state["mode"], True
+
+    Q_perm, pos, neg = _optq_loop(
+        w_int[order],
+        hinv_u,
+        lam,
+        A,
+        B,
+        tile_ids[order] if state is not None else tile_ids,
+        pos0,
+        neg0,
+        w_bits=w_alphabet.bits,
+        w_signed=w_alphabet.signed,
+        rounding=rounding,
+        strict=strict,
+        mode=mode,
+        has_axe=has_axe,
+    )
+    q_int = Q_perm[inv_order]
+    return GreedyResult(
+        q_int=q_int,
+        scale=scale,
+        w_alphabet=w_alphabet,
+        act_alphabet=act_alphabet,
+        axe=axe,
+        aux={"pos": pos, "neg": neg},
+    )

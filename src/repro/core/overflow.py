@@ -1,0 +1,159 @@
+"""Overflow-avoidance certification (the paper's central guarantee).
+
+Given integer-domain quantized weights Q, an activation alphabet A_N, and an
+accumulation datapath (monolithic P or multi-stage (T, P_I, P_O)), these
+routines compute the *exact worst case* of every (tile-)partial dot product
+over all x in A_N^K (Eq. 6) and compare it against the accumulator range.
+This is an analytic certificate — no input distribution assumptions — plus a
+simulation harness that evaluates real integer accumulations in int64 and
+reports the bit usage watermark (used by the property tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .alphabet import Alphabet, accumulator_range, outer_accumulator_bits
+from .ep_init import tiled
+
+
+@dataclass
+class CertReport:
+    ok: bool
+    p_bits: int  # inner accumulator target
+    p_outer: int  # outer accumulator (== p_bits when monolithic)
+    tile: int | None
+    worst_hi: float  # max over channels/tiles of worst-case partial sum
+    worst_lo: float
+    headroom_bits: float  # log2 margin below the limit (>= 0 iff ok)
+    outer_hi: float
+    outer_lo: float
+    outer_ok: bool
+
+    def __bool__(self) -> bool:
+        return self.ok and self.outer_ok
+
+
+def tile_signed_sums(q_int: jax.Array, tile: int | None) -> tuple[jax.Array, jax.Array]:
+    """Per (channel, tile) sums of positive / negative integer weights.
+
+    ``q_int``: (K, C). Returns (pos, neg) with shape (C, n_tiles).
+    """
+    k = q_int.shape[0]
+    t = tile or k
+    q_ct = tiled(q_int.T, t)  # (C, n_tiles, T)
+    pos = jnp.sum(jnp.maximum(q_ct, 0.0), axis=-1)
+    neg = jnp.sum(jnp.minimum(q_ct, 0.0), axis=-1)
+    return pos, neg
+
+
+def certify(
+    q_int: jax.Array,
+    act: Alphabet,
+    p_bits: int,
+    tile: int | None = None,
+) -> CertReport:
+    """Analytic overflow certificate for ``q_int`` (K, C).
+
+    Monolithic: every channel's worst-case dot product must fit a signed
+    ``p_bits`` register. Multi-stage: every (channel, tile) partial must fit
+    ``p_bits`` (= P_I) and the total must fit P_O from Eq. 22.
+    """
+    k = q_int.shape[0]
+    pos, neg = tile_signed_sums(q_int, tile)  # (C, n_tiles)
+    hi = act.nu * pos + act.mu * neg  # worst-case max per tile (Eq. 6/7)
+    lo = act.mu * pos + act.nu * neg  # worst-case min per tile (Eq. 6/8)
+
+    lo_lim, hi_lim = accumulator_range(p_bits)
+    worst_hi = float(jnp.max(hi))
+    worst_lo = float(jnp.min(lo))
+    inner_ok = worst_hi <= hi_lim and worst_lo >= lo_lim
+
+    if tile is None or tile >= k:
+        p_outer = p_bits
+        outer_hi, outer_lo, outer_ok = worst_hi, worst_lo, inner_ok
+    else:
+        p_outer = outer_accumulator_bits(p_bits, k, tile)
+        o_lo_lim, o_hi_lim = accumulator_range(p_outer)
+        # outer accumulator sums the tile partials; worst cases add up
+        outer_hi = float(jnp.max(jnp.sum(hi, axis=-1)))
+        outer_lo = float(jnp.min(jnp.sum(lo, axis=-1)))
+        outer_ok = outer_hi <= o_hi_lim and outer_lo >= o_lo_lim
+
+    peak = max(worst_hi, -worst_lo, 1.0)
+    headroom = float(np.log2(hi_lim) - np.log2(peak)) if peak > 0 else float("inf")
+    return CertReport(
+        ok=inner_ok,
+        p_bits=p_bits,
+        p_outer=p_outer,
+        tile=tile,
+        worst_hi=worst_hi,
+        worst_lo=worst_lo,
+        headroom_bits=headroom,
+        outer_hi=outer_hi,
+        outer_lo=outer_lo,
+        outer_ok=outer_ok,
+    )
+
+
+def simulate_accumulation(
+    q_int: jax.Array,
+    x_int: jax.Array,
+    tile: int | None = None,
+) -> dict:
+    """Evaluate integer dot products exactly (int64) and report watermarks.
+
+    ``q_int``: (K, C), ``x_int``: (D, K) integer activation codes. Returns
+    per-tile partial-sum extrema and the bit width actually needed — used by
+    property tests to confirm the analytic certificate is an upper bound.
+    Runs in numpy int64 (JAX defaults to 32-bit ints; this check must be
+    exact).
+    """
+    q = np.asarray(q_int, np.int64)
+    x = np.asarray(x_int, np.int64)
+    k = q.shape[0]
+    t = tile or k
+    n_tiles = (k + t - 1) // t
+    pad = n_tiles * t - k
+    if pad:
+        q = np.pad(q, [(0, pad), (0, 0)])
+        x = np.pad(x, [(0, 0), (0, pad)])
+    q_t = q.T.reshape(q.shape[1], n_tiles, t)  # (C, n_tiles, T)
+    x_t = x.reshape(x.shape[0], n_tiles, t)  # (D, n_tiles, T)
+    # partials: (D, C, n_tiles)
+    partials = np.einsum("dnt,cnt->dcn", x_t, q_t)
+    totals = np.sum(partials, axis=-1)  # (D, C)
+    p_hi = partials.max()
+    p_lo = partials.min()
+    t_hi = totals.max()
+    t_lo = totals.min()
+
+    def bits_needed(hi, lo):
+        peak = max(int(hi), -int(lo), 1)
+        return int(np.ceil(np.log2(peak + 1))) + 1
+
+    return {
+        "partial_hi": int(p_hi),
+        "partial_lo": int(p_lo),
+        "total_hi": int(t_hi),
+        "total_lo": int(t_lo),
+        "inner_bits_used": bits_needed(p_hi, p_lo),
+        "outer_bits_used": bits_needed(t_hi, t_lo),
+    }
+
+
+def worst_case_inputs(q_int: jax.Array, act: Alphabet) -> tuple[jax.Array, jax.Array]:
+    """The maximizing / minimizing activation vectors u, v of Eq. 6 per channel.
+
+    Returns (u, v) with shape (C, K): dotting u[c] with q[:, c] attains the
+    analytic worst-case maximum (and v the minimum) — used by tests to show
+    the certificate is *tight*.
+    """
+    qt = q_int.T  # (C, K)
+    u = jnp.where(qt >= 0, act.nu, act.mu)
+    v = jnp.where(qt >= 0, act.mu, act.nu)
+    return u, v

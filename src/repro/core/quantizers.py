@@ -1,0 +1,138 @@
+"""Uniform affine quantizers (paper Eq. 1 / §C.1) in JAX.
+
+Two domains are used throughout the code base:
+
+  * the *real* domain: weights/activations as floating point arrays;
+  * the *integer* domain: elements of an :class:`~repro.core.alphabet.Alphabet`.
+
+The greedy algorithms (GPFQ/OPTQ) and all accumulator bookkeeping run in the
+integer domain — weights are pre-divided by their per-channel scale so that
+the budgets of Eq. 21 are exact integer-unit quantities. These helpers handle
+the scale derivation, the domain changes and the two rounding modes the paper
+studies (round-to-nearest vs round-to-zero).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .alphabet import Alphabet
+
+ROUND_NEAREST = "nearest"
+ROUND_ZERO = "zero"
+
+ROUNDING_SLACK = {ROUND_NEAREST: 0.5, ROUND_ZERO: 0.0}
+
+
+def round_fn(x: jax.Array, mode: str) -> jax.Array:
+    if mode == ROUND_NEAREST:
+        return jnp.rint(x)
+    if mode == ROUND_ZERO:
+        return jnp.trunc(x)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def quantize_int(x: jax.Array, alphabet: Alphabet, rounding: str = ROUND_NEAREST) -> jax.Array:
+    """Integer-domain quantizer: round then clip to the alphabet (float carrier)."""
+    return jnp.clip(round_fn(x, rounding), alphabet.qmin, alphabet.qmax)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (symmetric, per-channel scales; paper Eq. 27)
+# ---------------------------------------------------------------------------
+def weight_scales(w: jax.Array, alphabet: Alphabet, axis: int = 0, eps: float = 1e-12) -> jax.Array:
+    """s = max|w| / (2^(M-1)-1) per output channel.
+
+    ``w`` has shape (K, C) with rows = input dims; channel axis is 1, so the
+    reduction runs over ``axis`` (default 0 = input dim).
+    """
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    return jnp.maximum(absmax / float(alphabet.qmax), eps)
+
+
+def to_int_domain(w: jax.Array, scale: jax.Array) -> jax.Array:
+    return w / scale
+
+
+def from_int_domain(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q * scale
+
+
+def quantize_weights_rtn(
+    w: jax.Array, alphabet: Alphabet, rounding: str = ROUND_NEAREST
+) -> tuple[jax.Array, jax.Array]:
+    """Baseline direct (non-greedy) weight quantization.
+
+    Returns (q_int, scale) with q_int float-carried integers in the alphabet.
+    """
+    scale = weight_scales(w, alphabet)
+    q = quantize_int(to_int_domain(w, scale), alphabet, rounding)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (asymmetric unsigned, per-tensor; paper §C.1)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ActQuantParams:
+    """Per-tensor activation quantizer state: x_int = clip(round(x/s) + z)."""
+
+    scale: float
+    zero_point: int
+    bits: int
+    signed: bool = False
+
+    @property
+    def alphabet(self) -> Alphabet:
+        return Alphabet(bits=self.bits, signed=self.signed, symmetric=True)
+
+
+def calibrate_act_quant(
+    lo: jax.Array | float, hi: jax.Array | float, alphabet: Alphabet
+) -> ActQuantParams:
+    """Derive (scale, zero_point) from a calibrated [lo, hi] real range.
+
+    ``lo``/``hi`` are typically low/high percentiles of the calibration
+    activations (paper uses the 99th percentile). Zero is always exactly
+    representable (uniform *integer* quantization, §2.1).
+    """
+    lo = float(lo)
+    hi = float(hi)
+    lo = min(lo, 0.0)
+    hi = max(hi, 0.0)
+    span = max(hi - lo, 1e-12)
+    if alphabet.signed:
+        # symmetric signed: scale from absmax, zero_point = 0
+        scale = max(abs(lo), abs(hi)) / float(alphabet.qmax)
+        return ActQuantParams(scale=max(scale, 1e-12), zero_point=0,
+                              bits=alphabet.bits, signed=True)
+    scale = span / float(alphabet.span)
+    zero_point = int(round(-lo / scale))
+    zero_point = max(0, min(alphabet.qmax, zero_point))
+    return ActQuantParams(scale=scale, zero_point=zero_point,
+                          bits=alphabet.bits, signed=False)
+
+
+@partial(jax.jit, static_argnames=("bits", "signed"))
+def _quantize_act(x, scale, zero_point, bits: int, signed: bool):
+    alpha = Alphabet(bits=bits, signed=signed, symmetric=True)
+    q = jnp.rint(x / scale) + zero_point
+    return jnp.clip(q, alpha.qmin, alpha.qmax)
+
+
+def quantize_act(x: jax.Array, p: ActQuantParams) -> jax.Array:
+    """Real -> integer activation codes (float carrier)."""
+    return _quantize_act(x, p.scale, p.zero_point, p.bits, p.signed)
+
+
+def dequantize_act(xq: jax.Array, p: ActQuantParams) -> jax.Array:
+    return (xq - p.zero_point) * p.scale
+
+
+def fake_quantize_act(x: jax.Array, p: ActQuantParams) -> jax.Array:
+    """Quantize-dequantize (simulated integer activation path)."""
+    return dequantize_act(quantize_act(x, p), p)

@@ -1,0 +1,15 @@
+from .pipeline import (
+    DataConfig,
+    FileTokenSource,
+    SyntheticMarkovSource,
+    TokenBatcher,
+    make_source,
+)
+
+__all__ = [
+    "DataConfig",
+    "FileTokenSource",
+    "SyntheticMarkovSource",
+    "TokenBatcher",
+    "make_source",
+]

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots:
+
+  * w4a8_mm       — packed-int4 x int8 GEMM with multi-stage accumulation
+                    (the datapath AXE certifies; paper §3.3, Fig. 2)
+  * gpfq_solve    — sequential-grid GPFQ panel solver (VMEM-resident error)
+  * quant_rmsnorm — fused RMSNorm + int8 activation quantization
+
+Each has a pure-jnp oracle in ref.py and jit wrappers in ops.py; validated
+in interpret mode on CPU (tests/test_kernels.py), compiled for TPU on real
+hardware.
+"""
+
+from . import ops, ref
+from .ops import (
+    gpfq_quantize_panel,
+    norm_and_quantize,
+    pack_int4,
+    quantized_linear_w4a8,
+    unpack_int4,
+    w4a8_matmul,
+)

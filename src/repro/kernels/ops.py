@@ -1,0 +1,52 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the same call sites serve tests and production.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gpfq_solve import gpfq_solve
+from .quant_rmsnorm import quant_rmsnorm
+from .w4a8_mm import pack_int4, unpack_int4, w4a8_matmul
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantized_linear_w4a8(
+    x_codes: jax.Array,
+    w_packed: jax.Array,
+    w_scale: jax.Array,
+    act_scale: float,
+    act_zp: int,
+    **kw,
+):
+    """Serving-path W4A8 linear: integer GEMM + dequant epilogue."""
+    kw.setdefault("interpret", default_interpret())
+    return w4a8_matmul(x_codes, w_packed, w_scale, act_scale, act_zp, **kw)
+
+
+def norm_and_quantize(x, gamma, act_scale, act_zp, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return quant_rmsnorm(x, gamma, act_scale, act_zp, **kw)
+
+
+def gpfq_quantize_panel(w_int, xg, xh, lam, budget_b, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return gpfq_solve(w_int, xg, xh, lam, budget_b, **kw)
+
+
+__all__ = [
+    "default_interpret",
+    "gpfq_quantize_panel",
+    "norm_and_quantize",
+    "pack_int4",
+    "quantized_linear_w4a8",
+    "unpack_int4",
+    "w4a8_matmul",
+]

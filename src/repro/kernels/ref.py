@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets of
+tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def w4a8_matmul_ref(x_int8, w_packed, w_scale, act_scale, act_zp):
+    """Dequantize-then-matmul in fp32 — exact integer semantics."""
+    from .w4a8_mm import unpack_int4
+
+    q = unpack_int4(w_packed).astype(jnp.int32)  # (K, N)
+    x = x_int8.astype(jnp.int32)
+    acc = (x @ q).astype(jnp.float32)
+    corr = (jnp.sum(q, axis=0) * act_zp).astype(jnp.float32)
+    return (acc - corr[None, :]) * act_scale * w_scale.astype(jnp.float32)[None, :]
+
+
+def w4a8_tile_partials_ref(x_int8, w_packed, tile: int):
+    """Per-K-tile int32 partial sums (the inner-accumulator watermark)."""
+    from .w4a8_mm import unpack_int4
+
+    q = unpack_int4(w_packed).astype(jnp.int32)
+    x = x_int8.astype(jnp.int32)
+    m, k = x.shape
+    n = q.shape[1]
+    nt = k // tile
+    xt = x.reshape(m, nt, tile)
+    qt = q.reshape(nt, tile, n)
+    return jnp.einsum("mti,tin->mtn", xt, qt)  # (M, n_tiles, N)
+
+
+def gpfq_solve_ref(w_int, xg, xh, *, w_bits, lam, budget_b, tile, rounding="nearest"):
+    """Memory-efficient GPFQ loop (core implementation is the oracle)."""
+    import jax.numpy as jnp
+
+    from repro.core.gpfq import _gpfq_loop
+
+    K, C = w_int.shape
+    n_tiles = (K + tile - 1) // tile
+    tile_ids = jnp.arange(K) // tile
+    Q, _, _, _ = _gpfq_loop(
+        w_int,
+        xg,
+        xh,
+        jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (n_tiles, C)),
+        jnp.asarray(-budget_b, jnp.float32),
+        jnp.asarray(budget_b, jnp.float32),
+        tile_ids,
+        jnp.zeros((n_tiles, C), jnp.float32),
+        jnp.zeros((n_tiles, C), jnp.float32),
+        w_bits=w_bits,
+        w_signed=True,
+        rounding=rounding,
+        strict=True,
+        mode="split",
+        has_axe=True,
+    )
+    return Q
+
+
+def quant_rmsnorm_ref(x, gamma, act_scale, act_zp, *, eps=1e-6, bits=8):
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = xf * scale * gamma.astype(jnp.float32)
+    q = jnp.rint(y / act_scale) + act_zp
+    return jnp.clip(q, 0, 2**bits - 1).astype(jnp.uint8)

@@ -1,0 +1,141 @@
+"""W4A8 integer GEMM with multi-stage accumulation — the inference hot-spot
+AXE certifies (paper §3.3 / §4.2), as a Pallas TPU kernel.
+
+Datapath (Figure 2 of the paper, mapped to the TPU memory hierarchy):
+
+  * weights arrive int4-PACKED (two codes per int8 byte along K) — half the
+    HBM->VMEM traffic of int8 weights;
+  * activations arrive as int8 codes (asymmetric, zero-point handled by a
+    per-channel correction term computed once outside the kernel);
+  * the K axis is processed in tiles of T = ``block_k`` (128 = one MXU pass,
+    the paper's T): each tile's dot product is the *inner* accumulator —
+    AXE guarantees it fits P_I bits (16 in the LLM recipe), which is what
+    would let a hypothetical int16 systolic datapath run at 2x throughput;
+  * per-tile partials are accumulated across the sequential K grid dimension
+    into a VMEM int32 scratch — the *outer* accumulator (P_O of Eq. 22);
+  * the epilogue applies s_x * s_w[n] and the zero-point correction, and
+    writes bf16/f32.
+
+Validated against ref.py in interpret mode over shape/dtype sweeps
+(tests/test_kernels.py); the ``assert_inner`` flag additionally checks the
+P_I bound *inside* the kernel on every tile (interpret mode only — on
+hardware the bound is a theorem, not a runtime check).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """(K//2, N) int8 -> (K, N) int8 in [-8, 7]; row 2k = low nibble."""
+    low = jnp.left_shift(packed, 4)
+    low = jnp.right_shift(low, 4)  # arithmetic: sign-extends
+    high = jnp.right_shift(packed, 4)
+    k2, n = packed.shape
+    out = jnp.stack([low, high], axis=1)  # (K//2, 2, N)
+    return out.reshape(2 * k2, n)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(K, N) int codes in [-8, 7] -> (K//2, N) int8 packed."""
+    q = q.astype(jnp.int8)
+    k, n = q.shape
+    assert k % 2 == 0, "K must be even to pack int4"
+    pairs = q.reshape(k // 2, 2, n)
+    low = jnp.bitwise_and(pairs[:, 0], 0x0F)
+    high = jnp.left_shift(jnp.bitwise_and(pairs[:, 1], 0x0F), 4)
+    return jnp.bitwise_or(low, high).astype(jnp.int8)
+
+
+def _kernel(x_ref, wp_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
+            n_k: int, p_inner: int, assert_inner: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (bm, bk) int8 codes
+    w = unpack_int4(wp_ref[...]).astype(jnp.int32)  # (bk, bn)
+    # inner accumulator: one K-tile MAC — AXE certifies |partial| < 2^(P_I-1)
+    partial = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    if assert_inner:  # interpret-mode verification of the paper's guarantee
+        limit = 2 ** (p_inner - 1) - 1
+        pl.debug_check(jnp.max(jnp.abs(partial)) <= limit,
+                       "inner accumulator overflow")
+    # outer accumulator (P_O of Eq. 22)
+    acc_ref[...] += partial
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        # zero-point correction (zp * sum_k q[k,n], precomputed per channel)
+        # then the fused dequant scale s_x * s_w[n]
+        out_ref[...] = ((acc - corr_ref[...]) * sw_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "p_inner",
+                     "assert_inner", "interpret", "out_dtype"),
+)
+def w4a8_matmul(
+    x_int8: jax.Array,  # (M, K) int8 activation codes
+    w_packed: jax.Array,  # (K//2, N) int8 packed int4 weights
+    w_scale: jax.Array,  # (N,) f32 per-channel weight scales
+    act_scale: float,
+    act_zp: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,  # the paper's tile size T
+    p_inner: int = 16,
+    assert_inner: bool = False,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    m, k = x_int8.shape
+    k2, n = w_packed.shape
+    assert k == 2 * k2, (x_int8.shape, w_packed.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+
+    # per-channel zero-point correction: zp * sum_k q[k, n] (int32), and the
+    # fused dequant scale s_x * s_w — both computed once outside the kernel
+    col_sums = jnp.sum(unpack_int4(w_packed).astype(jnp.int32), axis=0)  # (N,)
+    corr = (col_sums * act_zp).astype(jnp.float32)[None, :]  # (1, N)
+    sw = (w_scale.astype(jnp.float32) * act_scale)[None, :]  # (1, N)
+
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(
+        _kernel,
+        n_k=n_k,
+        p_inner=p_inner,
+        assert_inner=assert_inner,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k // 2, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_int8, w_packed, sw, corr)

@@ -1,0 +1,161 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The compiled module is already SPMD-partitioned, so ``cost_analysis()``
+FLOPs/bytes are *per device*. Collective bytes are not in cost_analysis;
+we parse the compiled HLO text and charge each collective by its result
+shape with a per-op wire factor:
+
+    all-gather          1x result     (each device receives result-size)
+    reduce-scatter      1x operand ~ result * n (we see the scattered result;
+                        charge operand = result * group)  -> handled via shape
+    all-reduce          2x operand    (ring RS + AG)
+    all-to-all          1x operand
+    collective-permute  1x operand
+
+This is a first-order wire model; §Perf iterates on the *relative* change of
+the dominant term, for which a consistent convention is what matters.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from compiled HLO text."""
+    per_op: dict[str, float] = {op: 0.0 for op in _COLLECTIVE_OPS}
+    counts: dict[str, int] = {op: 0 for op in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls.startswith("%") and not ls.startswith("ROOT"):
+            continue
+        m = re.match(r"(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\([^)]*\)|[^=\s]+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        base = None
+        for op in _COLLECTIVE_OPS:
+            if opname == op or opname.startswith(op + "-"):
+                base = op
+                break
+        if base is None:
+            continue
+        per_op[base] += _shape_bytes(shape_str)
+        counts[base] += 1
+    wire = sum(_WIRE_FACTOR[op] * b for op, b in per_op.items())
+    return {"bytes_by_op": per_op, "counts": counts, "wire_bytes": wire}
+
+
+@dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    coll_bytes: float  # per device, wire-factored
+    model_flops_global: float  # 6ND (train) / 2ND (serve)
+    chips: int
+
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device) — remat/redundancy waste."""
+        per_dev_model = self.model_flops_global / self.chips
+        return per_dev_model / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time: fraction of the roofline the
+        step achieves if executed at the dominant term's bandwidth."""
+        per_dev_model = self.model_flops_global / self.chips
+        return (per_dev_model / PEAK_FLOPS) / max(self.bound_s, 1e-30)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """MODEL_FLOPS: 6 N D for training, 2 N D for forward-only serving
+    (deviation from the assignment's single 6ND noted in EXPERIMENTS.md)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Tests override via REPRO_DRYRUN_XLA_FLAGS in a subprocess.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+placeholder devices and extract the roofline terms (EXPERIMENTS.md §Dry-run
+/ §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Success here proves the distribution config is coherent: sharding
+mismatches, compile-time OOM analysis and unsupported collectives all
+surface as hard failures.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    applicable,
+    batch_specs,
+    cache_specs,
+    get_config,
+)
+from repro.launch.analysis import Roofline, model_flops
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models.config import param_count
+from repro.optim import OptimizerConfig
+from repro.runtime.steps import (
+    TrainRunConfig,
+    lower_decode_step,
+    lower_prefill_step,
+    lower_train_step,
+)
+
+# per-(arch) training overrides: microbatching bounds activation memory on
+# the big cells; bf16 moments keep 400B-class optimizer state inside HBM.
+TRAIN_OVERRIDES: dict[str, TrainRunConfig] = {}
+
+
+def train_run_config(arch: str, cfg, shape) -> TrainRunConfig:
+    if arch in TRAIN_OVERRIDES:
+        return TRAIN_OVERRIDES[arch]
+    n = param_count(cfg)["total"]
+    big = n > 2e10
+    moment_dtype = "bfloat16" if big else "float32"
+    accum = "bfloat16" if big else "float32"
+    # microbatching bounds activation + logits memory; 8 keeps the
+    # per-microbatch global batch (32) divisible by both mesh data extents
+    # (16 single-pod, 2x16 multi-pod)
+    return TrainRunConfig(
+        optimizer=OptimizerConfig(moment_dtype=moment_dtype),
+        num_microbatches=8,
+        accum_dtype=accum,
+    )
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
+             quantized: bool = False) -> dict:
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_PERF_BASELINE") == "1":
+        # §Perf A/B: pre-iteration defaults (stepwise recurrent prefill,
+        # unpadded vocab; MoE legacy sharding via the moe.py env switch)
+        cfg = cfg.scaled(prefill_mode="stepwise", vocab_pad_multiple=1)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+    t0 = time.time()
+    bspec = batch_specs(cfg, shape)
+
+    if shape.kind == "train":
+        run = train_run_config(arch, cfg, shape)
+        _, lowered, _ = lower_train_step(cfg, run, mesh, bspec)
+    elif shape.kind == "prefill":
+        _, lowered, _ = lower_prefill_step(cfg, mesh, bspec, max_len=shape.seq_len)
+    else:
+        cspec = cache_specs(cfg, shape)
+        _, lowered, _ = lower_decode_step(cfg, mesh, bspec, cspec,
+                                          quantized=quantized)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-corrected instruction-level costs (XLA's cost_analysis
+    # counts while bodies once — see hlo_analysis module docstring)
+    parsed = analyze(hlo)
+
+    pc = param_count(cfg)
+    hbm_bytes = parsed.bytes
+    quant_correction = None
+    if quantized:
+        # the in-graph dequant is charged at unfused bf16 rates by the HLO
+        # byte parser; on TPU it fuses into the GEMM's VMEM pipeline (the
+        # w4a8_mm kernel datapath), so weight HBM traffic is the packed
+        # 0.5 B/elem. Correct: remove (fusion-out 2B + dot-read 2B) per
+        # weight element (packed read stays charged by the parser).
+        from repro.quant.serve_packed import packed_weight_bytes
+
+        wb = packed_weight_bytes(cfg)
+        overcount = 4.0 * wb["weight_elems"] / chips
+        quant_correction = {
+            "raw_bytes_per_dev": parsed.bytes,
+            "removed_unfused_dequant_bytes_per_dev": overcount,
+            **{k: v for k, v in wb.items()},
+        }
+        hbm_bytes = max(parsed.bytes - overcount, 0.0)
+    rl = Roofline(
+        flops=parsed.flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=parsed.coll_wire_bytes,
+        model_flops_global=model_flops(cfg, shape, pc["active"]),
+        chips=chips,
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_label,
+        "chips": chips,
+        "quantized": quantized,
+        "quant_correction": quant_correction,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "collectives": {
+            "bytes_by_op": parsed.coll_by_op,
+            "counts": parsed.coll_counts,
+            "wire_bytes": parsed.coll_wire_bytes,
+        },
+        "hlo_stats": {
+            "n_while": parsed.n_while,
+            "max_trip_product": parsed.max_trip_product,
+            "xla_cost_analysis_flops_uncorrected": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes_uncorrected": float(cost.get("bytes accessed", 0.0)),
+        },
+        "roofline": rl.to_dict(),
+        "params": pc,
+    }
+    print(compiled.memory_analysis())
+    ca_scalars = {k: v for k, v in cost.items() if isinstance(v, (int, float))}
+    print(json.dumps({k: ca_scalars[k] for k in ("flops", "bytes accessed") if k in ca_scalars}))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--mesh-shape", type=str, default=None,
+                    help="override, e.g. '2,4' or '2,2,2' (tests)")
+    ap.add_argument("--all", action="store_true", help="every applicable cell")
+    ap.add_argument("--quantized", action="store_true",
+                    help="decode with the packed-int4 W4A8 serving artifact")
+    ap.add_argument("--out", type=str, default=None, help="output dir for JSON")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh_shape:
+        shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        meshes.append((make_mesh(shape), args.mesh_shape))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append((make_production_mesh(multi_pod=False), "single"))
+        if args.mesh in ("multi", "both"):
+            meshes.append((make_production_mesh(multi_pod=True), "multi"))
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for sname, sp in SHAPES.items():
+                if applicable(cfg, sp):
+                    cells.append((arch, sname))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    suffix = "__w4a8" if args.quantized else ""
+    for arch, sname in cells:
+        for mesh, label in meshes:
+            tag = f"{arch}|{sname}{suffix}|{label}"
+            try:
+                result = run_cell(arch, sname, mesh, label,
+                                  quantized=args.quantized)
+                print(f"[dryrun] OK   {tag}  compile={result['compile_s']}s "
+                      f"dominant={result['roofline']['dominant']}")
+            except Exception as e:
+                failures += 1
+                result = {
+                    "arch": arch, "shape": sname, "mesh": label,
+                    "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fname = f"{arch}__{sname}{suffix}__{label}.json".replace("/", "_")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(result, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""PTQ launcher: checkpoint -> calibration -> AXE quantization -> certified
+quantized artifact.
+
+    PYTHONPATH=src python -m repro.launch.quantize --arch tiny-lm-s \
+        --ckpt-dir /tmp/run1 --algorithm gpfq --w-bits 4 --act-bits 8 \
+        --p-bits 16 --tile 128 --out /tmp/run1_w4a8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, save_pytree
+from repro.configs import get_config, get_smoke
+from repro.core import PTQConfig
+from repro.data import DataConfig, TokenBatcher
+from repro.kernels import pack_int4
+from repro.models.transformer import init_model
+from repro.quant import calibrate_and_quantize
+from repro.quant.pipeline import float_ppl, quantized_ppl
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--algorithm", default="gpfq",
+                    choices=("gpfq", "optq", "rtn", "ep_init"))
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--act-bits", type=int, default=8)
+    ap.add_argument("--p-bits", type=int, default=16)
+    ap.add_argument("--tile", type=int, default=128)
+    ap.add_argument("--no-constrain", action="store_true",
+                    help="unconstrained Base algorithm (Table 1)")
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--calib-batch-size", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    data = TokenBatcher(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.calib_batch_size, seed=args.seed)
+    )
+
+    params = init_model(jax.random.key(args.seed), cfg)
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir)
+        restored = ckpt.restore_latest({"params": params})
+        if restored is None:
+            raise SystemExit(f"no checkpoint under {args.ckpt_dir}")
+        _, tree, _ = restored
+        params = tree["params"] if "params" in tree else tree
+
+    ptq = PTQConfig(
+        w_bits=args.w_bits,
+        act_bits=args.act_bits,
+        p_bits=args.p_bits,
+        tile=args.tile,
+        algorithm=args.algorithm,
+        constrain=not args.no_constrain,
+    )
+    calib = [data.batch(10_000 + i) for i in range(args.calib_batches)]
+    evalb = list(data.eval_batches(args.eval_batches))
+
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    cert = qm.cert_summary()
+    ppl_f = float_ppl(params, cfg, evalb)
+    ppl_q = quantized_ppl(qm, evalb)
+    report = {
+        "arch": cfg.name,
+        "ptq": {k: getattr(ptq, k) for k in
+                ("w_bits", "act_bits", "p_bits", "tile", "algorithm", "constrain")},
+        "cert": cert,
+        "float_ppl": ppl_f,
+        "quant_ppl": ppl_q,
+        "naive_p_star_K_dmodel": ptq.naive_p_star(cfg.d_model),
+        "outer_bits_K_dmodel": ptq.outer_bits(cfg.d_model),
+    }
+    print(json.dumps(report, indent=2, default=float))
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        artifact = {}
+        for i, b in enumerate(qm.blocks):
+            for name in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+                ql = getattr(b, name)
+                if ql is None:
+                    continue
+                q = np.asarray(ql.q_int, np.int8)
+                k = q.shape[0]
+                packed = pack_int4(q) if args.w_bits <= 4 and k % 2 == 0 else q
+                artifact[f"layer{i}/{name}/q"] = packed
+                artifact[f"layer{i}/{name}/scale"] = np.asarray(ql.scale)
+                artifact[f"layer{i}/{name}/bias"] = np.asarray(ql.bias)
+                artifact[f"layer{i}/{name}/act"] = np.asarray(
+                    [ql.act.scale, ql.act.zero_point], np.float64
+                )
+        save_pytree(artifact, os.path.join(args.out, "quantized"), report)
+        print(f"[quantize] artifact -> {args.out}/quantized")
+    return report
+
+
+if __name__ == "__main__":
+    main()

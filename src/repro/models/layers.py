@@ -1,0 +1,283 @@
+"""Core layers: norms, RoPE, GQA attention (full / online-softmax chunked /
+decode), MLPs, embeddings. Pure-JAX pytree parameters (dicts of arrays) —
+no framework dependency, fully shardable under pjit.
+
+Activation sharding annotations go through
+:func:`repro.runtime.sharding.logical_constraint` so the same model code runs
+single-device (tests) and on the production mesh (dry-run / launcher).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def constraint(x, names):
+    """Logical sharding constraint (no-op without an active mesh)."""
+    from repro.runtime.sharding import logical_constraint
+
+    return logical_constraint(x, names)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig):
+    p = {"w": jnp.ones((cfg.d_model,), _dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((cfg.d_model,), _dtype(cfg.param_dtype))
+    return p
+
+
+def norm(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * scale * params["w"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["w"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(ks[0], (d, nh * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (nh * hd, d)) * s).astype(dt),
+    }
+
+
+def resolve_weight(params, name):
+    """Weight accessor that transparently dequantizes packed-int4 leaves
+    (the W4A8 serving artifact — see repro.quant.serve_packed). On TPU the
+    unpack+scale fuses into the consuming matmul's VMEM pipeline (the
+    repro.kernels.w4a8_mm datapath), so HBM weight traffic is 0.5 B/elem."""
+    v = params[name]
+    if isinstance(v, dict) and "packed" in v:
+        from repro.kernels.w4a8_mm import unpack_int4
+
+        return unpack_int4(v["packed"]).astype(v["scale"].dtype) * v["scale"]
+    return v
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ resolve_weight(params, "wq")).reshape(B, S, nh, hd)
+    k = (x @ resolve_weight(params, "wk")).reshape(B, S, nkv, hd)
+    v = (x @ resolve_weight(params, "wv")).reshape(B, S, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constraint(q, ("batch", None, "heads", None))
+    k = constraint(k, ("batch", None, "kv_heads", None))
+    v = constraint(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _full_causal_attention(q, k, v, cfg: ModelConfig):
+    """Materialized causal attention (S <= attn_chunk_threshold)."""
+    B, S, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qg = q.reshape(B, S, nkv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = _softcap(scores / math.sqrt(hd), cfg.attn_logit_softcap)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(causal, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, S, nh, hd)
+
+
+def _chunked_causal_attention(q, k, v, cfg: ModelConfig):
+    """Online-softmax attention, scanned over KV chunks — O(S * chunk)
+    peak memory instead of O(S^2). The pure-JAX flash-attention analogue
+    (the TPU-kernel version of this belongs in repro.kernels if attention
+    ever becomes the quantization target; for this paper it is not)."""
+    B, S0, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    chunk = cfg.attn_chunk
+    pad = (-S0) % chunk
+    if pad:  # ragged tail: causal mask keeps padded KV unattended
+        padding = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, padding) for t in (q, k, v))
+    S = S0 + pad
+    n_chunks = S // chunk
+    qg = q.reshape(B, S, nkv, g, hd)
+    k_ch = k.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def body(carry, kv):
+        m, l, acc, idx = carry
+        kc, vc = kv  # (B, chunk, nkv, hd)
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc).astype(jnp.float32)
+        s = _softcap(s / math.sqrt(hd), cfg.attn_logit_softcap)
+        mask = q_pos[:, None] >= kv_pos[None, :]  # (S, chunk)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (future chunks): keep m finite
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((B, nkv, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, S), jnp.float32)
+    acc0 = jnp.zeros((B, nkv, g, S, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (k_ch, v_ch))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, nh, hd)
+    return out[:, :S0].astype(q.dtype)
+
+
+def attention(params, x, cfg: ModelConfig, positions):
+    """Training / prefill attention. Returns (y, (k, v)) — k/v for caching."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, positions)
+    if S > cfg.attn_chunk_threshold:
+        out = _chunked_causal_attention(q, k, v, cfg)
+    else:
+        out = _full_causal_attention(q, k, v, cfg)
+    y = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ resolve_weight(params, "wo")
+    return constraint(y, ("batch", None, "residual")), (k, v)
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v, index):
+    """Single-token decode against a (B, S_max, nkv, hd) KV cache.
+
+    ``index``: scalar int32 — current position (cache fill level).
+    Returns (y, new_k, new_v).
+    """
+    B, S1, _ = x.shape  # S1 == 1
+    positions = jnp.full((B, S1), index, jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, index, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, index, 0, 0))
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = nh // nkv
+    qg = q.reshape(B, nkv, g, hd)  # S1 == 1 squeezed
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k).astype(jnp.float32)
+    s = _softcap(s / math.sqrt(hd), cfg.attn_logit_softcap)
+    valid = jnp.arange(cache_k.shape[1])[None, :] <= index  # (1, S_max)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v)
+    y = out.reshape(B, 1, nh * hd) @ resolve_weight(params, "wo")
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = _dtype(cfg.param_dtype)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wg": (jax.random.normal(ks[0], (d, f)) * s_in).astype(dt),
+            "wu": (jax.random.normal(ks[1], (d, f)) * s_in).astype(dt),
+            "wd": (jax.random.normal(ks[2], (f, d)) * s_out).astype(dt),
+        }
+    return {
+        "wi": (jax.random.normal(ks[0], (d, f)) * s_in).astype(dt),
+        "wd": (jax.random.normal(ks[1], (f, d)) * s_out).astype(dt),
+    }
+
+
+def mlp(params, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ resolve_weight(params, "wg")) * (
+            x @ resolve_weight(params, "wu")
+        )
+    else:
+        h = jax.nn.gelu(x @ resolve_weight(params, "wi"))
+    h = constraint(h, ("batch", None, "ffn"))
+    return constraint(h @ resolve_weight(params, "wd"), ("batch", None, "residual"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig):
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    v = cfg.vocab_padded  # padded so the vocab dim always TP-shards
+    p = {"embed": (jax.random.normal(ks[0], (v, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = (
+            jax.random.normal(ks[1], (v, cfg.d_model)) / math.sqrt(cfg.d_model)
+        ).astype(dt)
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constraint(x, ("batch", None, "residual"))
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    head = params.get("head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask pad rows so softmax/logsumexp are exact over the real vocab
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.finfo(logits.dtype).min, logits)
+    return constraint(logits, ("batch", None, "vocab"))

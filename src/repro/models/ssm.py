@@ -1,0 +1,174 @@
+"""Mamba-1 selective SSM block (Gu & Dao, arXiv:2312.00752), pure JAX.
+
+Training/prefill uses a *chunked associative scan*: within a chunk the
+recurrence h_t = Abar_t h_{t-1} + Bbar_t x_t runs as a parallel
+``associative_scan`` (TPU-friendly, log-depth), across chunks a ``lax.scan``
+carries the (B, d_in, d_state) state so peak memory is O(chunk), not O(S).
+Decode is the exact single-step recurrence (used for the 500k-token
+long-context cells — state size is sequence-length independent).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dtr = cfg.dt_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    sci = 1.0 / math.sqrt(d_in)
+    # S4D-real initialization for A; dt bias sampled for softplus(dt) in
+    # [dt_min, dt_max] as in the reference implementation
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    dt_min, dt_max = 1e-3, 1e-1
+    u = jax.random.uniform(ks[5], (d_in,))
+    dt_init = jnp.exp(u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in)) * sc).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": (jax.random.normal(ks[2], (d_in, dtr + 2 * s.d_state)) * sci).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, d_in)) * (1.0 / math.sqrt(dtr))).astype(dt),
+        "dt_bias": dt_bias.astype(dt),
+        "A_log": jnp.log(a).astype(dt),
+        "D": jnp.ones((d_in,), dt),
+        "out_proj": (jax.random.normal(ks[4], (d_in, d)) * sci).astype(dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, d_in); w: (K, d_in).
+
+    ``state``: (B, K-1, d_in) trailing inputs from the previous segment
+    (decode); returns (y, new_state).
+    """
+    ksz = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], ksz - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(ksz)) + b
+    new_state = xp[:, -(ksz - 1) :, :] if ksz > 1 else state
+    return y, new_state
+
+
+def _ssm_params(params, x, cfg: ModelConfig):
+    """Input-dependent (dt, B, C) and the fixed A. x: (B, S, d_in)."""
+    s = cfg.ssm
+    dtr = cfg.dt_rank
+    proj = x @ params["x_proj"]  # (B, S, dtr + 2N)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"])  # (B,S,d_in)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_in, N)
+    return dt, b_ssm, c_ssm, a
+
+
+def _scan_chunk(h0, abar, bu):
+    """Parallel first-order recurrence within a chunk.
+
+    h_t = abar_t * h_{t-1} + bu_t, h_0 given. abar/bu: (B, L, d_in, N).
+    """
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_acc, b_acc = jax.lax.associative_scan(op, (abar, bu), axis=1)
+    return a_acc * h0[:, None] + b_acc  # (B, L, d_in, N)
+
+
+def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = False):
+    """Training/prefill forward. x: (B, S, d_model) -> (B, S, d_model).
+
+    ``return_state``: also return the decode-ready end-of-sequence state
+    {"conv", "ssm"} (chunkwise-parallel prefill — §Perf iteration 1)."""
+    from .layers import constraint
+
+    B, S, _ = x.shape
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    xz = x @ params["in_proj"]
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin, _ = _causal_conv(xin_raw, params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin)
+    xin = constraint(xin, ("batch", None, "ffn"))
+
+    dt, b_ssm, c_ssm, a = _ssm_params(params, xin, cfg)
+    dtf = dt.astype(jnp.float32)
+    abar = jnp.exp(dtf[..., None] * a)  # (B, S, d_in, N)
+    bu = (dtf * xin.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[:, :, None, :]
+
+    S0 = S
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:  # ragged tail: abar=1, bu=0 keeps state; outputs sliced off below
+        abar = jnp.pad(abar, [(0, 0), (0, pad), (0, 0), (0, 0)], constant_values=1.0)
+        bu = jnp.pad(bu, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        S = S + pad
+    nc = S // L
+    abar_c = abar.reshape(B, nc, L, d_in, s.d_state).transpose(1, 0, 2, 3, 4)
+    bu_c = bu.reshape(B, nc, L, d_in, s.d_state).transpose(1, 0, 2, 3, 4)
+
+    def body(h, inputs):
+        ab, bb = inputs  # (B, L, d_in, N)
+        hs = _scan_chunk(h, ab, bb)
+        return hs[:, -1], hs
+
+    h0 = jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    h_last, hs = jax.lax.scan(body, h0, (abar_c, bu_c))  # (nc, B, L, d_in, N)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, s.d_state)[:, :S0]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * xin.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = constraint(y @ params["out_proj"], ("batch", None, "residual"))
+    if not return_state:
+        return out
+    ksz = params["conv_w"].shape[0]
+    pad_needed = max(ksz - 1 - S0, 0)
+    tail = xin_raw[:, max(S0 - (ksz - 1), 0) : S0, :]
+    if pad_needed:
+        tail = jnp.pad(tail, [(0, 0), (pad_needed, 0), (0, 0)])
+    return out, {"conv": tail.astype(jnp.dtype(cfg.act_dtype)), "ssm": h_last}
+
+
+def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
+    """Exact single-token step. x: (B, 1, d_model).
+
+    conv_state: (B, d_conv-1, d_in); ssm_state: (B, d_in, N) fp32.
+    Returns (y, conv_state, ssm_state).
+    """
+    s = cfg.ssm
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    dt, b_ssm, c_ssm, a = _ssm_params(params, xin, cfg)
+    dtf = dt[:, 0].astype(jnp.float32)  # (B, d_in)
+    abar = jnp.exp(dtf[..., None] * a)  # (B, d_in, N)
+    bu = (dtf * xin[:, 0].astype(jnp.float32))[..., None] * b_ssm[:, 0].astype(jnp.float32)[:, None, :]
+    ssm_state = abar * ssm_state + bu
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c_ssm[:, 0].astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * xin[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
+    return y @ params["out_proj"], conv_state, ssm_state
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, d_in), jnp.dtype(cfg.act_dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,352 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+exponential gating) and sLSTM (scalar memory, real recurrence).
+
+mLSTM has no nonlinearity across time in its state update, so we implement
+the *chunkwise-parallel* form for training/prefill (intra-chunk quadratic
+attention-like compute + inter-chunk recurrent state, all in stabilized
+log-space) and the exact recurrent form for decode and as the test oracle.
+State size is O(d_head^2) per head — sequence-length independent, which is
+what makes the 500k-token long-context cells tractable.
+
+sLSTM's recurrence is nonlinear (h feeds back through the gates), so there is
+no parallel form — training scans over time, exactly as the paper designs it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .ssm import _causal_conv
+
+NEG = -1e30  # finite stand-in for -inf in log-space stabilizers
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(key, cfg: ModelConfig):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = x.mlstm_expand * d
+    h = x.mlstm_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(d_in)
+    return {
+        "up": (jax.random.normal(ks[0], (d, 2 * d_in)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "wq": (jax.random.normal(ks[2], (d_in, d_in)) * si).astype(dt),
+        "wk": (jax.random.normal(ks[3], (d_in, d_in)) * si).astype(dt),
+        "wv": (jax.random.normal(ks[4], (d_in, d_in)) * si).astype(dt),
+        "wi": (jax.random.normal(ks[5], (d_in, h)) * si).astype(dt),
+        "wf": (jax.random.normal(ks[6], (d_in, h)) * si).astype(dt),
+        "f_bias": jnp.full((h,), 3.0, dt),  # forget gates open at init
+        "skip": jnp.ones((d_in,), dt),
+        "norm_w": jnp.ones((d_in,), dt),
+        "down": (jax.random.normal(ks[7], (d_in, d)) * si).astype(dt),
+    }
+
+
+def _mlstm_qkvgates(params, xin, cfg: ModelConfig, conv_state=None):
+    """Shared pre-cell computation. xin: (B, S, d_in)."""
+    x = cfg.xlstm
+    h = x.mlstm_heads
+    B, S, d_in = xin.shape
+    dh = d_in // h
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (xc @ params["wk"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = (xin @ params["wv"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    q = q * (dh**-0.5)
+    ig = (xin @ params["wi"]).transpose(0, 2, 1).astype(jnp.float32)  # (B,H,S)
+    fg = (xin @ params["wf"] + params["f_bias"]).transpose(0, 2, 1).astype(jnp.float32)
+    return q, k, v, ig, fg, xc, conv_state
+
+
+def mlstm_cell_recurrent(q, k, v, ig, fg):
+    """Exact recurrence (test oracle + decode building block).
+
+    q/k/v: (B, H, S, dh); ig/fg: (B, H, S). Returns h: (B, H, S, dh).
+    """
+    B, H, S, dh = q.shape
+    lf = jax.nn.log_sigmoid(fg)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, lft = inp
+        m_new = jnp.maximum(lft + m, it)
+        fp = jnp.exp(lft + m - m_new)
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        qn = jnp.einsum("bhd,bhd->bh", qt, n)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), NEG, jnp.float32)
+    xs = (
+        q.transpose(2, 0, 1, 3).astype(jnp.float32),
+        k.transpose(2, 0, 1, 3).astype(jnp.float32),
+        v.transpose(2, 0, 1, 3).astype(jnp.float32),
+        ig.transpose(2, 0, 1),
+        lf.transpose(2, 0, 1),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3)  # (B, H, S, dh)
+
+
+def mlstm_cell_chunkwise(q, k, v, ig, fg, chunk: int = 64, return_state: bool = False):
+    """Chunkwise-parallel mLSTM (stabilized), the training path.
+
+    Matches :func:`mlstm_cell_recurrent` to fp32 tolerance (tested).
+    ``return_state``: also return the end-of-sequence (C, n, m) carry for
+    decode (chunkwise-parallel prefill — §Perf iteration 1).
+    """
+    B, H, S0, dh = q.shape
+    L = min(chunk, S0)
+    pad = (-S0) % L
+    if pad:  # ragged tail: i-gate = -inf (no input), f-gate = +30
+        # (log-sigmoid ~ 0: no decay) so padded steps leave the carried
+        # state exactly untouched; outputs there are sliced off below
+        p4 = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q, k, v = (jnp.pad(t, p4) for t in (q, k, v))
+        ig = jnp.pad(ig, [(0, 0), (0, 0), (0, pad)], constant_values=NEG)
+        fg = jnp.pad(fg, [(0, 0), (0, 0), (0, pad)], constant_values=30.0)
+    S = S0 + pad
+    nc = S // L
+    lf = jax.nn.log_sigmoid(fg)
+
+    q_c = q.reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    k_c = k.reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    v_c = v.reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    ig_c = ig.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+    lf_c = lf.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, lfc = inp
+        b = jnp.cumsum(lfc, axis=-1)  # (B,H,L) inclusive log-decay
+        s_cm = jax.lax.cummax(ic - b, axis=ic.ndim - 1)
+        m_t = b + jnp.maximum(m[..., None], s_cm)  # (B,H,L)
+        # inter-chunk contribution from carried state
+        inter_scale = jnp.exp(b + m[..., None] - m_t)  # (B,H,L)
+        h_inter = jnp.einsum("bhld,bhde->bhle", qc, C) * inter_scale[..., None]
+        n_inter = n[:, :, None, :] * inter_scale[..., None]  # (B,H,L,dh)
+        # intra-chunk attention-like term
+        logd = ic[:, :, None, :] + b[:, :, :, None] - b[:, :, None, :] - m_t[..., None]
+        dmat = jnp.where(tril[None, None], jnp.exp(logd), 0.0)  # (B,H,Lt,Lj)
+        smat = jnp.einsum("bhtd,bhjd->bhtj", qc, kc) * dmat
+        h_intra = jnp.einsum("bhtj,bhjd->bhtd", smat, vc)
+        n_intra = jnp.einsum("bhtj,bhjd->bhtd", dmat, kc)
+        n_vec = n_inter + n_intra
+        qn = jnp.einsum("bhld,bhld->bhl", qc, n_vec)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / den[..., None]
+        # carry to next chunk
+        g = b[..., -1]  # total chunk decay
+        m_next = g + jnp.maximum(m, s_cm[..., -1])
+        w_c = jnp.exp(ic + g[..., None] - b - m_next[..., None])  # (B,H,L)
+        C = C * jnp.exp(g + m - m_next)[..., None, None] + jnp.einsum(
+            "bhl,bhld,bhle->bhde", w_c, kc, vc
+        )
+        n = n * jnp.exp(g + m - m_next)[..., None] + jnp.einsum("bhl,bhld->bhd", w_c, kc)
+        return (C, n, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), NEG, jnp.float32)
+    carry, hs = jax.lax.scan(body, (C0, n0, m0), (q_c, k_c, v_c, ig_c, lf_c))
+    # (nc, B, H, L, dh) -> (B, H, S, dh)
+    out = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)[:, :, :S0]
+    if return_state:
+        return out, carry  # padded tail steps have i-gate=-inf: state exact
+    return out
+
+
+def _mlstm_out(params, h_cell, xc, z, cfg: ModelConfig):
+    """Head-merge, per-head norm, learnable conv skip, z-gate, down proj."""
+    x = cfg.xlstm
+    B, H, S, dh = h_cell.shape
+    h = h_cell.transpose(0, 2, 1, 3)  # (B,S,H,dh)
+    # per-head RMS norm ("multi-head norm" in the official block)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-6)
+    h = h.reshape(B, S, H * dh).astype(z.dtype) * params["norm_w"]
+    h = h + params["skip"] * xc
+    h = h * jax.nn.silu(z)
+    return h @ params["down"]
+
+
+def mlstm(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill mLSTM block. x: (B, S, d_model)."""
+    from .layers import constraint
+
+    xz = x @ params["up"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constraint(xin, ("batch", None, "ffn"))
+    z = constraint(z, ("batch", None, "ffn"))
+    q, k, v, ig, fg, xc, _ = _mlstm_qkvgates(params, xin, cfg)
+    cell = mlstm_cell_chunkwise(q, k, v, ig, fg, cfg.xlstm.chunk,
+                                return_state=return_state)
+    if return_state:
+        h_cell, (C, n, m) = cell
+    else:
+        h_cell = cell
+    y = _mlstm_out(params, h_cell, xc, z, cfg)
+    y = constraint(y, ("batch", None, "residual"))
+    if not return_state:
+        return y
+    S0 = x.shape[1]
+    tail = xin[:, max(S0 - 3, 0):, :]
+    if S0 < 3:
+        tail = jnp.pad(tail, [(0, 0), (3 - S0, 0), (0, 0)])
+    return y, {"conv": tail.astype(jnp.dtype(cfg.act_dtype)), "C": C, "n": n, "m": m}
+
+
+def mlstm_decode(params, x, cfg: ModelConfig, conv_state, C, n, m):
+    """Single-token step. States: conv (B,3,d_in), C (B,H,dh,dh) fp32,
+    n (B,H,dh) fp32, m (B,H) fp32."""
+    xz = x @ params["up"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, ig, fg, xc, conv_state = _mlstm_qkvgates(params, xin, cfg, conv_state)
+    qt = q[:, :, 0].astype(jnp.float32)
+    kt = k[:, :, 0].astype(jnp.float32)
+    vt = v[:, :, 0].astype(jnp.float32)
+    it, lft = ig[:, :, 0], jax.nn.log_sigmoid(fg[:, :, 0])
+    m_new = jnp.maximum(lft + m, it)
+    fp = jnp.exp(lft + m - m_new)
+    ip = jnp.exp(it - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, C)
+    qn = jnp.einsum("bhd,bhd->bh", qt, n)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h_cell = (num / den[..., None])[:, :, None, :]  # (B,H,1,dh)
+    y = _mlstm_out(params, h_cell, xc, z, cfg)
+    return y, conv_state, C, n, m_new
+
+
+def mlstm_state_shapes(cfg: ModelConfig, batch: int):
+    x = cfg.xlstm
+    d_in = x.mlstm_expand * cfg.d_model
+    h = x.mlstm_heads
+    dh = d_in // h
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, d_in), jnp.dtype(cfg.act_dtype)),
+        "C": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(key, cfg: ModelConfig):
+    x = cfg.xlstm
+    d = cfg.d_model
+    h = x.slstm_heads
+    dh = d // h
+    f = int(d * x.slstm_proj_factor)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    sh = 1.0 / math.sqrt(dh)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(dt),  # z,i,f,o
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh)) * sh).astype(dt),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(dt),
+        "norm_w": jnp.ones((d,), dt),
+        "up": (jax.random.normal(ks[2], (d, f)) * s).astype(dt),
+        "down": (jax.random.normal(ks[3], (f, d)) * (1.0 / math.sqrt(f))).astype(dt),
+    }
+
+
+def _slstm_step(params, xt_proj, state, cfg: ModelConfig):
+    """One recurrence step. xt_proj: (B, 4d) precomputed input projection."""
+    x = cfg.xlstm
+    h_heads = x.slstm_heads
+    d = cfg.d_model
+    dh = d // h_heads
+    h_prev, c, n, m = state  # (B,d), (B,d), (B,d), (B,d)
+    B = h_prev.shape[0]
+    hh = h_prev.reshape(B, h_heads, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, params["r"].astype(jnp.float32))  # (4,B,H,dh)
+    rec = rec.reshape(4, B, d)
+    pre = xt_proj.astype(jnp.float32).reshape(B, 4, d).transpose(1, 0, 2) + rec
+    zt = jnp.tanh(pre[0])
+    it, ft, ot = pre[1], pre[2], pre[3]
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-12)
+    return (h_new, c, n, m_new)
+
+
+def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill sLSTM block — sequential scan (no parallel form).
+
+    x: (B, S, d_model)."""
+    from .layers import constraint
+
+    B, S, d = x.shape
+    proj = x @ params["w_in"] + params["b"]  # (B, S, 4d)
+
+    def step(state, xt):
+        new = _slstm_step(params, xt, state, cfg)
+        return new, new[0]
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), NEG, jnp.float32)
+    final, hs = jax.lax.scan(step, (z0, z0, z0, m0), proj.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)  # (B,S,d)
+    # head-wise norm then the block's gated FFN (proj factor 4/3)
+    hheads = h.reshape(B, S, cfg.xlstm.slstm_heads, -1)
+    var = jnp.mean(jnp.square(hheads.astype(jnp.float32)), axis=-1, keepdims=True)
+    hn = (hheads * jax.lax.rsqrt(var + 1e-6).astype(h.dtype)).reshape(B, S, d)
+    hn = hn * params["norm_w"]
+    y = jax.nn.gelu(hn @ params["up"]) @ params["down"]
+    y = constraint(y, ("batch", None, "residual"))
+    if not return_state:
+        return y
+    hf, cf, nf, mf = final
+    return y, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_decode(params, x, cfg: ModelConfig, h, c, n, m):
+    """Single-token step. x: (B, 1, d_model); states (B, d) fp32."""
+    B = x.shape[0]
+    d = cfg.d_model
+    proj = (x[:, 0] @ params["w_in"] + params["b"]).astype(jnp.float32)
+    h, c, n, m = _slstm_step(params, proj, (h, c, n, m), cfg)
+    hheads = h.reshape(B, 1, cfg.xlstm.slstm_heads, -1)
+    var = jnp.mean(jnp.square(hheads), axis=-1, keepdims=True)
+    hn = (hheads * jax.lax.rsqrt(var + 1e-6)).reshape(B, 1, d).astype(x.dtype)
+    hn = hn * params["norm_w"]
+    y = jax.nn.gelu(hn @ params["up"]) @ params["down"]
+    return y, h, c, n, m
+
+
+def slstm_state_shapes(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+    }

@@ -1,0 +1,17 @@
+from .adamw import (
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_at_step,
+)
+
+__all__ = [
+    "OptimizerConfig",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_opt_state",
+    "lr_at_step",
+]

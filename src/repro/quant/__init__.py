@@ -1,0 +1,13 @@
+from .pipeline import (
+    QuantizedBlock,
+    QuantizedModel,
+    calibrate_and_quantize,
+    quantized_forward,
+)
+
+__all__ = [
+    "QuantizedBlock",
+    "QuantizedModel",
+    "calibrate_and_quantize",
+    "quantized_forward",
+]

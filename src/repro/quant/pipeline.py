@@ -1,0 +1,281 @@
+"""End-to-end AXE PTQ pipeline for decoder LMs (paper §4 recipe):
+
+  load float params -> [SmoothQuant equalization] -> layer-by-layer
+  calibration with *lockstep analog/quantized propagation* (GPFQ's
+  "first l-1 layers quantized" setup, Eq. 9) -> AXE-GPFQ / AXE-OPTQ per
+  linear -> bias correction -> overflow certification -> quantized model.
+
+Supported family: uniform ("attn", "mlp") patterns (the dense LM family,
+incl. the tiny-lm paper-reproduction ladder). Embedding and LM head stay
+high-precision per the paper (§C.1). The quantized forward has two
+execution paths:
+
+  * simulation (fake-quant weights + activations, CPU/test path) — exactly
+    the integer semantics, carried in fp32;
+  * kernel (packed int4 + uint8 codes through repro.kernels.w4a8_mm) — the
+    TPU path, interpret-mode on CPU.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    LayerStats,
+    PTQConfig,
+    QuantizedLinear,
+    quantize_linear,
+    smoothquant_scales,
+)
+from repro.core.quantizers import fake_quantize_act, quantize_act
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    embed,
+    lm_logits,
+    norm,
+)
+
+LINEAR_SITES = ("qkv", "wo", "mlp_in", "wd")
+
+
+@dataclass
+class QuantizedBlock:
+    """One decoder layer's quantized linears + the float norms."""
+
+    norm1: dict
+    norm2: dict
+    wq: QuantizedLinear
+    wk: QuantizedLinear
+    wv: QuantizedLinear
+    wo: QuantizedLinear
+    # swiglu: (wg, wu, wd); gelu: (wi, wd) with wu None
+    wg: QuantizedLinear
+    wu: QuantizedLinear | None
+    wd: QuantizedLinear
+
+
+@dataclass
+class QuantizedModel:
+    cfg: ModelConfig
+    ptq: PTQConfig
+    embedding: dict
+    final_norm: dict
+    blocks: list[QuantizedBlock] = field(default_factory=list)
+
+    @property
+    def certified(self) -> bool:
+        for b in self.blocks:
+            for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
+                if ql is not None and ql.cert is not None and not bool(ql.cert):
+                    return False
+        return True
+
+    def cert_summary(self) -> dict:
+        worst = float("inf")
+        n = 0
+        for b in self.blocks:
+            for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
+                if ql is not None and ql.cert is not None:
+                    worst = min(worst, ql.cert.headroom_bits)
+                    n += 1
+        return {"n_certified": n, "min_headroom_bits": worst, "ok": self.certified}
+
+
+def _layer_params(params, cfg: ModelConfig, layer: int):
+    slot = layer % cfg.period
+    rep = layer // cfg.period
+    return jax.tree.map(lambda x: x[rep], params["layers"][slot])
+
+
+def _attn_mix(q, k, v, cfg: ModelConfig, positions):
+    """Float attention mixing (scores/softmax stay high-precision, §C.1)."""
+    B, S, _ = q.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+    q = apply_rope(q.reshape(B, S, nh, hd), positions, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, S, nkv, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, nkv, hd)
+    qg = q.reshape(B, S, nkv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(causal, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(B, S, nh * hd)
+
+
+def _check_supported(cfg: ModelConfig):
+    for spec in cfg.pattern:
+        if (spec.mixer, spec.ffn) != ("attn", "mlp"):
+            raise NotImplementedError(
+                f"PTQ pipeline supports the dense attn+mlp family; "
+                f"{cfg.name} has ({spec.mixer}, {spec.ffn}). AXE itself applies "
+                f"per-linear (see DESIGN.md §4); extend the pipeline taps to "
+                f"add the family."
+            )
+
+
+def calibrate_and_quantize(
+    params,
+    cfg: ModelConfig,
+    batches: list[dict],
+    ptq: PTQConfig,
+    equalize: bool = True,
+) -> QuantizedModel:
+    """Run the full PTQ pipeline. ``batches``: list of {"tokens": (B, S)}."""
+    _check_supported(cfg)
+    tokens = jnp.concatenate([b["tokens"] for b in batches], axis=0)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    x_a = embed(params["embedding"], tokens, cfg)  # analog activations
+    x_q = x_a  # quantized-network activations (lockstep)
+    d = cfg.d_model
+    qm = QuantizedModel(
+        cfg=cfg, ptq=ptq, embedding=params["embedding"],
+        final_norm=params["final_norm"],
+    )
+
+    def flat(x):
+        return x.reshape(-1, x.shape[-1])
+
+    for layer in range(cfg.n_layers):
+        p = _layer_params(params, cfg, layer)
+        mixer, ffn = p["mixer"], p["ffn"]
+        norm1, norm2 = dict(p["norm1"]), dict(p["norm2"])
+
+        # ---- attention ----
+        h_a = norm(norm1, x_a, cfg.norm)
+        h_q = norm(norm1, x_q, cfg.norm)
+        wq_w, wk_w, wv_w = mixer["wq"], mixer["wk"], mixer["wv"]
+        if equalize:
+            absmax = jnp.max(jnp.abs(flat(h_q)), axis=0)
+            w_absmax = jnp.max(
+                jnp.abs(jnp.concatenate([wq_w, wk_w, wv_w], axis=1)), axis=1
+            )
+            s_eq = smoothquant_scales(absmax, w_absmax)
+            norm1["w"] = norm1["w"] / s_eq
+            if "b" in norm1:
+                norm1["b"] = norm1["b"] / s_eq
+            h_a = norm(norm1, x_a, cfg.norm)
+            h_q = norm(norm1, x_q, cfg.norm)
+            wq_w, wk_w, wv_w = (w * s_eq[:, None] for w in (wq_w, wk_w, wv_w))
+
+        stats = LayerStats(k=d)
+        stats.update(flat(h_a), flat(h_q))
+        ql_q = quantize_linear(wq_w, stats, ptq)
+        ql_k = quantize_linear(wk_w, stats, ptq)
+        ql_v = quantize_linear(wv_w, stats, ptq)
+
+        ao = _attn_mix(h_a @ wq_w, h_a @ wk_w, h_a @ wv_w, cfg, positions)
+        h_qq = fake_quantize_act(h_q, ql_q.act)
+        aq = _attn_mix(h_qq @ ql_q.w_q, h_qq @ ql_k.w_q, h_qq @ ql_v.w_q,
+                       cfg, positions)
+
+        stats_o = LayerStats(k=cfg.n_heads * cfg.head_dim)
+        stats_o.update(flat(ao), flat(aq))
+        ql_o = quantize_linear(mixer["wo"], stats_o, ptq)
+
+        x_a = x_a + ao @ mixer["wo"]
+        x_q = x_q + ql_o(aq)
+
+        # ---- mlp ----
+        h_a = norm(norm2, x_a, cfg.norm)
+        h_q = norm(norm2, x_q, cfg.norm)
+        swiglu = cfg.act == "swiglu"
+        win_a = ffn["wg"] if swiglu else ffn["wi"]
+        wu_w = ffn.get("wu")
+        if equalize:
+            absmax = jnp.max(jnp.abs(flat(h_q)), axis=0)
+            cat = jnp.concatenate([win_a] + ([wu_w] if swiglu else []), axis=1)
+            s_eq = smoothquant_scales(absmax, jnp.max(jnp.abs(cat), axis=1))
+            norm2["w"] = norm2["w"] / s_eq
+            if "b" in norm2:
+                norm2["b"] = norm2["b"] / s_eq
+            h_a = norm(norm2, x_a, cfg.norm)
+            h_q = norm(norm2, x_q, cfg.norm)
+            win_a = win_a * s_eq[:, None]
+            if swiglu:
+                wu_w = wu_w * s_eq[:, None]
+
+        stats_in = LayerStats(k=d)
+        stats_in.update(flat(h_a), flat(h_q))
+        ql_g = quantize_linear(win_a, stats_in, ptq)
+        ql_u = quantize_linear(wu_w, stats_in, ptq) if swiglu else None
+
+        h_qq = fake_quantize_act(h_q, ql_g.act)
+        if swiglu:
+            mid_a = jax.nn.silu(h_a @ win_a) * (h_a @ wu_w)
+            mid_q = jax.nn.silu(h_qq @ ql_g.w_q) * (h_qq @ ql_u.w_q)
+        else:
+            mid_a = jax.nn.gelu(h_a @ win_a)
+            mid_q = jax.nn.gelu(h_qq @ ql_g.w_q)
+
+        stats_d = LayerStats(k=win_a.shape[1])
+        stats_d.update(flat(mid_a), flat(mid_q))
+        ql_d = quantize_linear(ffn["wd"], stats_d, ptq)
+
+        x_a = x_a + mid_a @ ffn["wd"]
+        x_q = x_q + ql_d(mid_q)
+
+        qm.blocks.append(
+            QuantizedBlock(
+                norm1=norm1, norm2=norm2,
+                wq=ql_q, wk=ql_k, wv=ql_v, wo=ql_o,
+                wg=ql_g, wu=ql_u, wd=ql_d,
+            )
+        )
+    return qm
+
+
+def quantized_forward(qm: QuantizedModel, batch: dict) -> jax.Array:
+    """Simulated-integer forward of the quantized model -> logits."""
+    cfg = qm.cfg
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = embed(qm.embedding, tokens, cfg)
+    for b in qm.blocks:
+        h = norm(b.norm1, x, cfg.norm)
+        hq = fake_quantize_act(h, b.wq.act)
+        ao = _attn_mix(hq @ b.wq.w_q, hq @ b.wk.w_q, hq @ b.wv.w_q, cfg, positions)
+        x = x + b.wo(ao)
+        h = norm(b.norm2, x, cfg.norm)
+        hq = fake_quantize_act(h, b.wg.act)
+        if qm.cfg.act == "swiglu":
+            mid = jax.nn.silu(hq @ b.wg.w_q) * (hq @ b.wu.w_q)
+        else:
+            mid = jax.nn.gelu(hq @ b.wg.w_q)
+        x = x + b.wd(mid)
+    x = norm(qm.final_norm, x, cfg.norm)
+    return lm_logits(qm.embedding, x, cfg)
+
+
+def quantized_ppl(qm: QuantizedModel, batches: list[dict]) -> float:
+    """Perplexity of the quantized model over eval batches."""
+    tot, n = 0.0, 0
+    for b in batches:
+        logits = quantized_forward(qm, b).astype(jnp.float32)
+        pred = logits[:, :-1]
+        labels = b["tokens"][:, 1:]
+        logz = jax.nn.logsumexp(pred, axis=-1)
+        gold = jnp.take_along_axis(pred, labels[..., None], axis=-1)[..., 0]
+        tot += float(jnp.sum(logz - gold))
+        n += labels.size
+    return math.exp(tot / n)
+
+
+def float_ppl(params, cfg: ModelConfig, batches: list[dict]) -> float:
+    from repro.models.transformer import loss_fn
+
+    tot, n = 0.0, 0
+    for b in batches:
+        _, m = loss_fn(params, b, cfg)
+        tot += float(m["ce"]) * (b["tokens"].shape[0] * (b["tokens"].shape[1] - 1))
+        n += b["tokens"].shape[0] * (b["tokens"].shape[1] - 1)
+    return math.exp(tot / n)

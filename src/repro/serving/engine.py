@@ -1,0 +1,90 @@
+"""Batched generation engine: prefill + decode with jitted step reuse.
+
+A fixed-slot batch engine (continuous-batching-lite): all sequences in a
+batch decode together with per-sequence done masks and early exit when all
+finish. The decode step is compiled once per (batch, max_len) bucket —
+repeated calls reuse the jit cache, which is what a production server's
+bucketing achieves.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, prefill
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int | None = None
+    seed: int = 0
+
+
+def _sample(logits, temperature: float, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+class GenerationEngine:
+    def __init__(self, params, cfg: ModelConfig, sampler: SamplerConfig = SamplerConfig()):
+        self.params = params
+        self.cfg = cfg
+        self.sampler = sampler
+
+        @partial(jax.jit, static_argnames=("temperature",))
+        def _step(params, tokens, cache, index, key, temperature):
+            logits, cache = decode_step(params, tokens, cache, index, cfg)
+            nxt = _sample(logits[:, -1], temperature, key)
+            return nxt, cache
+
+        self._step = _step
+        self._prefill_cache = {}
+
+    def _get_prefill(self, max_len: int):
+        fn = self._prefill_cache.get(max_len)
+        if fn is None:
+            fn = jax.jit(lambda p, b: prefill(p, b, self.cfg, max_len))
+            self._prefill_cache[max_len] = fn
+        return fn
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
+        """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens)."""
+        B, S0 = prompts.shape
+        max_len = S0 + max_new_tokens
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, cache = self._get_prefill(max_len)(self.params, batch)
+        key = jax.random.key(self.sampler.seed)
+        key, sub = jax.random.split(key)
+        nxt = _sample(logits[:, -1], self.sampler.temperature, sub)
+        out = [np.asarray(nxt)]
+        done = np.zeros((B,), bool)
+        if self.sampler.eos_id is not None:
+            done |= np.asarray(nxt) == self.sampler.eos_id
+        for t in range(1, max_new_tokens):
+            key, sub = jax.random.split(key)
+            nxt, cache = self._step(
+                self.params, nxt[:, None], cache, jnp.int32(S0 + t - 1), sub,
+                self.sampler.temperature,
+            )
+            tok = np.asarray(nxt)
+            if self.sampler.eos_id is not None:
+                tok = np.where(done, self.sampler.eos_id, tok)
+                done |= tok == self.sampler.eos_id
+            out.append(tok)
+            nxt = jnp.asarray(tok)
+            if self.sampler.eos_id is not None and done.all():
+                # pad remaining positions with eos and stop early
+                pad = np.full((B,), self.sampler.eos_id, np.int32)
+                out.extend([pad] * (max_new_tokens - 1 - t))
+                break
+        gen = np.stack(out, axis=1)
+        return np.concatenate([prompts, gen], axis=1)

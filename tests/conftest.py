@@ -1,0 +1,20 @@
+"""Shared test config.
+
+NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+benches must see the real single-device CPU. Multi-device dry-run tests
+spawn subprocesses with their own XLA_FLAGS (see test_dryrun.py).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Single-core CI box: keep hypothesis snappy and deadline-free (JAX jit
+# compilation on first example would otherwise trip per-example deadlines).
+settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

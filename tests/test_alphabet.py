@@ -1,0 +1,110 @@
+"""Unit + property tests for the accumulator bound algebra (Eqs. 3/4/17/21/22)."""
+
+import math
+
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.alphabet import (
+    Alphabet,
+    accumulator_range,
+    act_alphabet,
+    l1_budget_zero_centered,
+    min_accumulator_bits,
+    outer_accumulator_bits,
+    strict_budgets,
+    weight_alphabet,
+    worst_case_dot_bounds,
+)
+
+
+def test_weight_alphabet_sign_magnitude():
+    a = weight_alphabet(4)
+    assert a.qmin == -7 and a.qmax == 7 and a.span == 14
+
+
+def test_act_alphabet_unsigned():
+    a = act_alphabet(8)
+    assert a.qmin == 0 and a.qmax == 255 and a.span == 255
+    assert a.mu == 0 and a.nu == 255
+
+
+def test_act_alphabet_signed():
+    a = act_alphabet(8, signed=True)
+    assert a.qmin == -127 and a.qmax == 127
+
+
+def test_accumulator_range():
+    lo, hi = accumulator_range(16)
+    assert hi == 32767 and lo == -32767
+
+
+def test_eq3_paper_example():
+    # paper §4.2: W4A8, K == T == 128 gives P* == 20
+    assert min_accumulator_bits(128, 8, 4, signed_input=False) == 20
+
+
+@given(
+    k=st.integers(1, 1 << 20),
+    n=st.integers(2, 8),
+    m=st.integers(2, 8),
+    signed=st.booleans(),
+)
+def test_eq3_is_sufficient(k, n, m, signed):
+    """P* must cover the exact worst-case dot product magnitude."""
+    p = min_accumulator_bits(k, n, m, signed)
+    w_max = 2 ** (m - 1) - 1
+    x_max = (2 ** (n - 1) - 1) if signed else (2**n - 1)
+    worst = k * w_max * x_max
+    lo, hi = accumulator_range(p)
+    assert worst <= hi  # Eq. 3 is a sufficient (not tight) datatype bound
+
+
+@given(p=st.integers(8, 32), n=st.integers(2, 8))
+def test_eq4_budget_positive(p, n):
+    b = l1_budget_zero_centered(p, act_alphabet(n))
+    assert b > 0
+
+
+@given(p=st.integers(10, 32), n=st.integers(2, 8), slack=st.sampled_from([0.0, 0.5]))
+def test_strict_budgets_guarantee(p, n, slack):
+    """Committing pos <= B + slack implies nu*pos <= 2^(P-1)-1 (Eq. 17/21)."""
+    act = act_alphabet(n)
+    bud = strict_budgets(p, act, slack)
+    assert bud.mode == "split"
+    _, hi = accumulator_range(p)
+    assert act.nu * (bud.B + slack) <= hi + 1e-6
+
+
+@given(
+    p_i=st.integers(8, 24),
+    log_k=st.integers(6, 18),
+    log_t=st.integers(4, 10),
+)
+def test_eq22_outer_bits(p_i, log_k, log_t):
+    k, t = 1 << log_k, 1 << log_t
+    if t > k:
+        t = k
+    p_o = outer_accumulator_bits(p_i, k, t)
+    # summing k/t partials each bounded by 2^(P_I-1)-1 must fit P_O
+    n_tiles = k // t
+    worst = n_tiles * (2 ** (p_i - 1) - 1)
+    _, hi = accumulator_range(p_o)
+    assert worst <= hi
+
+
+def test_worst_case_dot_bounds_unsigned():
+    act = act_alphabet(4)  # nu = 15
+    lo, hi = worst_case_dot_bounds(pos_sum=10.0, neg_sum=-4.0, act=act)
+    assert hi == 150.0 and lo == -60.0
+
+
+def test_strict_budget_too_small_raises():
+    with pytest.raises(ValueError):
+        strict_budgets(4, act_alphabet(8), 0.5)
+
+
+def test_alphabet_validation():
+    with pytest.raises(ValueError):
+        Alphabet(bits=0, signed=True)

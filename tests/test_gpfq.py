@@ -1,0 +1,126 @@
+"""GPFQ tests: Theorem B.1 equivalence, error-correction quality, AXE budgets."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AxeConfig,
+    act_alphabet,
+    calibrate_act_quant,
+    certify,
+    fake_quantize_act,
+    gpfq,
+    gpfq_memory_efficient,
+    me_stats,
+    quantize_weights_rtn,
+    strict_budgets,
+    weight_alphabet,
+)
+
+
+def _layer(seed, k=48, c=16, d=128, scale=0.5):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, c)) * scale, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    aq = calibrate_act_quant(np.percentile(x, 1), np.percentile(x, 99), act_alphabet(8))
+    xq = fake_quantize_act(x, aq)
+    return w, x, xq, aq
+
+
+def _recon_err(w, x, xq, w_q):
+    return float(jnp.linalg.norm(x.T @ w - xq.T @ w_q))
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=8)
+def test_theorem_b1_exact_equivalence(seed):
+    """GPFQ(W, X, Xq) == GPFQ(W, G H^-1, H) — exact integer agreement."""
+    w, x, xq, _ = _layer(seed, k=32, c=8, d=96)
+    wa = weight_alphabet(4)
+    r_std = gpfq(w, x, xq, wa)
+    h_half, g = me_stats(x, xq)
+    r_me = gpfq_memory_efficient(w, h_half, g, wa)
+    np.testing.assert_array_equal(np.asarray(r_std.q_int), np.asarray(r_me.q_int))
+
+
+def test_theorem_b1_with_act_order():
+    w, x, xq, _ = _layer(7, k=32, c=8, d=96)
+    wa = weight_alphabet(4)
+    r_std = gpfq(w, x, xq, wa, act_order=True)
+    h_half, g = me_stats(x, xq)
+    r_me = gpfq_memory_efficient(w, h_half, g, wa, act_order=True)
+    np.testing.assert_array_equal(np.asarray(r_std.q_int), np.asarray(r_me.q_int))
+
+
+def test_gpfq_beats_rtn():
+    """Greedy error correction reduces reconstruction error vs direct RTN."""
+    w, x, xq, _ = _layer(0, k=64, c=24, d=256)
+    wa = weight_alphabet(4)
+    r = gpfq(w, x, xq, wa)
+    q_rtn, s_rtn = quantize_weights_rtn(w, wa)
+    assert _recon_err(w, x, xq, r.w_q) < _recon_err(w, x, xq, q_rtn * s_rtn)
+
+
+@given(
+    seed=st.integers(0, 50),
+    p_bits=st.integers(10, 16),
+    tile=st.sampled_from([8, 16, None]),
+)
+@settings(max_examples=10)
+def test_axe_budgets_respected(seed, p_bits, tile):
+    """Committed per-tile signed sums never exceed the true Eq. 17 budget."""
+    w, x, xq, _ = _layer(seed, k=32, c=8, d=96, scale=2.0)
+    wa, na = weight_alphabet(4), act_alphabet(8)
+    h_half, g = me_stats(x, xq)
+    axe = AxeConfig(p_bits=p_bits, tile=tile)
+    r = gpfq_memory_efficient(w, h_half, g, wa, na, axe=axe)
+    cert = certify(r.q_int, na, p_bits, tile)
+    assert bool(cert), (cert.worst_hi, cert.worst_lo)
+
+
+def test_axe_functional_noop_when_loose():
+    """With a 32-bit accumulator the constraints must be no-ops (paper §3.2)."""
+    w, x, xq, _ = _layer(3, k=32, c=8, d=96)
+    wa, na = weight_alphabet(4), act_alphabet(8)
+    h_half, g = me_stats(x, xq)
+    r_plain = gpfq_memory_efficient(w, h_half, g, wa)
+    r_loose = gpfq_memory_efficient(
+        w, h_half, g, wa, na, axe=AxeConfig(p_bits=32, tile=None)
+    )
+    np.testing.assert_array_equal(np.asarray(r_plain.q_int), np.asarray(r_loose.q_int))
+
+
+def test_soft_constraint_reduces_l1():
+    w, x, xq, _ = _layer(1, k=48, c=8, d=128, scale=2.0)
+    wa, na = weight_alphabet(4), act_alphabet(8)
+    h_half, g = me_stats(x, xq)
+    r_hco = gpfq_memory_efficient(
+        w, h_half, g, wa, na, axe=AxeConfig(p_bits=13, soft=False)
+    )
+    r_full = gpfq_memory_efficient(
+        w, h_half, g, wa, na, axe=AxeConfig(p_bits=13, soft=True)
+    )
+    l1 = lambda q: float(jnp.sum(jnp.abs(q)))
+    assert l1(r_full.q_int) <= l1(r_hco.q_int) * (1 + 1e-6)
+
+
+def test_signed_activation_joint_budget():
+    w, x, xq, _ = _layer(5, k=32, c=8, d=96, scale=2.0)
+    wa, na = weight_alphabet(4), act_alphabet(8, signed=True)
+    h_half, g = me_stats(x, xq)
+    r = gpfq_memory_efficient(w, h_half, g, wa, na, axe=AxeConfig(p_bits=12, tile=8))
+    cert = certify(r.q_int, na, 12, 8)
+    assert bool(cert)
+    bud = strict_budgets(12, na, 0.5)
+    l1_tiles = np.abs(np.asarray(r.q_int)).reshape(4, 8, -1).sum(axis=1)
+    assert np.all(l1_tiles <= bud.B + 0.5 + 1e-5)
+
+
+def test_shape_validation():
+    w = jnp.zeros((4, 2))
+    x = jnp.zeros((5, 8))
+    with pytest.raises(ValueError):
+        gpfq(w, x, x, weight_alphabet(4))

@@ -1,0 +1,84 @@
+"""The trip-count-corrected HLO cost model: validated against XLA's own
+cost_analysis on scan-free modules, and against hand-counted FLOPs on
+scanned ones."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[64,64]{1,0}") == 64 * 64 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(s32[], f32[8]{0})") == 4 + 32
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_scan_flops_exact():
+    def scanned(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=13)
+        return y
+
+    c = jax.jit(scanned).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    assert r.flops == 13 * 2 * 32**3
+    assert r.n_while == 1 and r.max_trip_product == 13
+
+
+def test_matches_cost_analysis_when_unrolled():
+    def f(w1, w2, x):
+        return jnp.sum(jax.nn.relu(x @ w1) @ w2)
+
+    g = jax.jit(jax.grad(f, argnums=(0, 1)))
+    specs = (
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 32), jnp.float32),
+        jax.ShapeDtypeStruct((16, 64), jnp.float32),
+    )
+    c = g.lower(*specs).compile()
+    r = analyze(c.as_text())
+    ca = c.cost_analysis()
+    # dots dominate; elementwise flops are not counted by the parser
+    assert abs(r.flops - ca["flops"]) / ca["flops"] < 0.05
+
+
+def test_nested_scan_multiplies():
+    def inner(c):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, c, None, length=3)
+        return y
+
+    def outer(x):
+        def body(c, _):
+            return inner(c), None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    c = jax.jit(outer).lower(jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    assert r.flops == 15 * 2 * 16**3
+    assert r.max_trip_product == 15
+
+
+def test_model_scan_vs_unrolled_parity():
+    """The full train step: parsed costs identical whether layers are
+    scanned or python-unrolled (the correction is exact, not approximate)."""
+    from repro.configs import get_smoke
+    from repro.runtime.steps import TrainRunConfig, abstract_train_state, make_train_step
+
+    run = TrainRunConfig()
+    base = get_smoke("smollm-360m").scaled(n_layers=4, remat="none",
+                                           attn_chunk_threshold=10**9)
+    bspec = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+    flops = {}
+    for scan in (False, True):
+        cfg = base.scaled(scan_layers=scan)
+        state = abstract_train_state(cfg, run)
+        c = jax.jit(make_train_step(cfg, run)).lower(state, bspec).compile()
+        flops[scan] = analyze(c.as_text()).flops
+    assert flops[True] == flops[False]

@@ -1,0 +1,89 @@
+"""OPTQ tests: error correction, Hessian machinery, AXE budget compliance."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AxeConfig,
+    act_alphabet,
+    calibrate_act_quant,
+    certify,
+    fake_quantize_act,
+    hessian_proxy,
+    inverse_cholesky,
+    optq,
+    quantize_weights_rtn,
+    weight_alphabet,
+)
+
+
+def _layer(seed, k=48, c=16, d=192, scale=0.5):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, c)) * scale, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    aq = calibrate_act_quant(np.percentile(x, 1), np.percentile(x, 99), act_alphabet(8))
+    xq = fake_quantize_act(x, aq)
+    return w, x, xq
+
+
+def _recon_err(w, x, xq, w_q):
+    return float(jnp.linalg.norm(x.T @ w - xq.T @ w_q))
+
+
+def test_hessian_proxy_spd():
+    _, _, xq = _layer(0)
+    h = hessian_proxy(xq)
+    evals = np.linalg.eigvalsh(np.asarray(h))
+    assert evals.min() > 0
+
+
+def test_inverse_cholesky_factorization():
+    _, _, xq = _layer(1, k=24)
+    h = np.asarray(hessian_proxy(xq), np.float64)
+    r = np.asarray(inverse_cholesky(jnp.asarray(h, jnp.float32)), np.float64)
+    assert np.allclose(r, np.triu(r))  # upper triangular
+    np.testing.assert_allclose(r.T @ r, np.linalg.inv(h), rtol=2e-2, atol=2e-4)
+
+
+def test_optq_beats_rtn():
+    w, x, xq = _layer(0, k=64, c=24, d=256)
+    wa = weight_alphabet(4)
+    r = optq(w, hessian_proxy(xq), wa)
+    q_rtn, s_rtn = quantize_weights_rtn(w, wa)
+    assert _recon_err(w, x, xq, r.w_q) < _recon_err(w, x, xq, q_rtn * s_rtn)
+
+
+def test_act_order_consistent():
+    """act_order permutes internally but output rows stay aligned with input."""
+    w, x, xq = _layer(2, k=32, c=8)
+    wa = weight_alphabet(8)
+    h = hessian_proxy(xq)
+    r1 = optq(w, h, wa, act_order=True)
+    # at 8 bits quantization error is tiny; dequantized weights ~ originals
+    np.testing.assert_allclose(np.asarray(r1.w_q), np.asarray(w), atol=0.05)
+
+
+@given(
+    seed=st.integers(0, 50),
+    p_bits=st.integers(10, 16),
+    tile=st.sampled_from([8, 16, None]),
+)
+@settings(max_examples=10)
+def test_axe_optq_certified(seed, p_bits, tile):
+    w, x, xq = _layer(seed, k=32, c=8, d=96, scale=2.0)
+    wa, na = weight_alphabet(4), act_alphabet(8)
+    axe = AxeConfig(p_bits=p_bits, tile=tile)
+    r = optq(w, hessian_proxy(xq), wa, na, axe=axe)
+    cert = certify(r.q_int, na, p_bits, tile)
+    assert bool(cert), (cert.worst_hi, cert.worst_lo)
+
+
+def test_axe_noop_when_loose():
+    w, _, xq = _layer(3, k=32, c=8)
+    wa, na = weight_alphabet(4), act_alphabet(8)
+    h = hessian_proxy(xq)
+    r_plain = optq(w, h, wa)
+    r_loose = optq(w, h, wa, na, axe=AxeConfig(p_bits=32, tile=None))
+    np.testing.assert_array_equal(np.asarray(r_plain.q_int), np.asarray(r_loose.q_int))

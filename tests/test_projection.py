@@ -1,0 +1,92 @@
+"""l1-ball projection / lambda threshold (Eqs. 15-16) and EP-init tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import (
+    ep_init,
+    l1_projection_threshold,
+    project_l1_ball,
+    soft_threshold,
+    tiled,
+    untiled,
+    weight_alphabet,
+)
+
+
+def _reference_project(w, z):
+    """O(K log K) reference projection (Duchi et al. 2008), pure numpy."""
+    w = np.asarray(w, np.float64)
+    if np.abs(w).sum() <= z:
+        return w
+    mu = np.sort(np.abs(w))[::-1]
+    cssv = np.cumsum(mu) - z
+    idx = np.arange(1, len(w) + 1)
+    rho = idx[mu * idx > cssv][-1]
+    lam = cssv[rho - 1] / rho
+    return np.sign(w) * np.maximum(np.abs(w) - lam, 0)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    k=st.integers(1, 64),
+    z=st.floats(0.1, 50.0),
+)
+def test_projection_matches_reference(seed, k, z):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k,)) * rng.uniform(0.1, 5)
+    got = np.asarray(project_l1_ball(jnp.asarray(w, jnp.float32), z))
+    want = _reference_project(w, z)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 64), z=st.floats(0.1, 50.0))
+def test_projection_satisfies_constraint(seed, k, z):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k,)) * 3, jnp.float32)
+    v = project_l1_ball(w, z)
+    assert float(jnp.sum(jnp.abs(v))) <= z * (1 + 1e-4)
+
+
+def test_lambda_zero_inside_ball():
+    w = jnp.asarray([0.5, -0.25, 0.1])
+    lam = l1_projection_threshold(w, 10.0)
+    assert float(lam) == 0.0
+
+
+def test_lambda_batched_channels(rng):
+    w = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)  # 8 channels
+    lam = l1_projection_threshold(w, 2.0)
+    assert lam.shape == (8,)
+    v = soft_threshold(w, lam[:, None])
+    l1 = np.asarray(jnp.sum(jnp.abs(v), axis=-1))
+    assert np.all(l1 <= 2.0 * (1 + 1e-4))
+
+
+def test_soft_threshold_shrinks():
+    x = jnp.asarray([-3.0, -1.0, 0.5, 2.0])
+    y = soft_threshold(x, 1.0)
+    np.testing.assert_allclose(np.asarray(y), [-2.0, 0.0, 0.0, 1.0])
+
+
+@given(seed=st.integers(0, 1000), k=st.integers(1, 50), tile=st.integers(1, 16))
+def test_tiled_untiled_roundtrip(seed, k, tile):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(3, k)), jnp.float32)
+    t = tiled(w, tile)
+    assert t.shape[-1] == tile
+    back = untiled(t, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@given(seed=st.integers(0, 5000), z=st.floats(1.0, 20.0))
+def test_ep_init_l1_guarantee(seed, z):
+    """RTZ after projection keeps the integer l1 norm within the radius."""
+    rng = np.random.default_rng(seed)
+    w_int = jnp.asarray(rng.normal(size=(4, 48)) * 5, jnp.float32)
+    q = ep_init(w_int, z, weight_alphabet(4))
+    l1 = np.asarray(jnp.sum(jnp.abs(q), axis=-1))
+    assert np.all(l1 <= z + 1e-5)
+    assert np.all(np.asarray(q) == np.round(np.asarray(q)))  # integers

@@ -1,0 +1,107 @@
+"""End-to-end PTQ pipeline: certification, quality ordering, kernel parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PTQConfig
+from repro.data import DataConfig, TokenBatcher
+from repro.models.transformer import init_model
+from repro.quant import calibrate_and_quantize, quantized_forward
+from repro.quant.pipeline import float_ppl, quantized_ppl
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-lm-xs")
+    params = init_model(jax.random.key(0), cfg)
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=2))
+    calib = [data.batch(100 + i) for i in range(2)]
+    evalb = list(data.eval_batches(2))
+    return cfg, params, calib, evalb
+
+
+def test_pipeline_certified_and_close_to_float(setup):
+    cfg, params, calib, evalb = setup
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=16, tile=64)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    assert qm.certified
+    summary = qm.cert_summary()
+    assert summary["n_certified"] == cfg.n_layers * 7
+    ppl_f = float_ppl(params, cfg, evalb)
+    ppl_q = quantized_ppl(qm, evalb)
+    # untrained net: quantization should not blow up perplexity
+    assert ppl_q < ppl_f * 2.0
+
+
+def test_unconstrained_base_not_certified_at_small_p(setup):
+    """Base GPFQ (no AXE) at W4A8 genuinely risks a 14-bit accumulator."""
+    from repro.core import certify
+
+    cfg, params, calib, _ = setup
+    ptq = PTQConfig(w_bits=4, act_bits=8, constrain=False)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    bad = 0
+    for b in qm.blocks:
+        for ql in (b.wq, b.wo, b.wg, b.wd):
+            cert = certify(ql.q_int, ptq.act_alphabet, p_bits=14, tile=None)
+            bad += 0 if bool(cert) else 1
+    assert bad > 0
+
+
+def test_axe_monolithic_16_certified(setup):
+    cfg, params, calib, _ = setup
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=16, tile=None)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    assert qm.certified
+
+
+def test_quantized_forward_shapes(setup):
+    cfg, params, calib, evalb = setup
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=16, tile=64)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    logits = quantized_forward(qm, evalb[0])
+    assert logits.shape == (*evalb[0]["tokens"].shape, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_kernel_path_matches_simulation(setup):
+    """w4a8 Pallas kernel (interpret) == fake-quant simulation for one linear."""
+    from repro.core.quantizers import quantize_act
+    from repro.kernels import pack_int4, quantized_linear_w4a8
+
+    cfg, params, calib, _ = setup
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=16, tile=64)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    b0 = qm.blocks[0]
+    ql = b0.wq
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, cfg.d_model)), jnp.float32)
+
+    # simulation path (QuantizedLinear.__call__ without bias)
+    from repro.core.quantizers import fake_quantize_act
+
+    y_sim = fake_quantize_act(x, ql.act) @ ql.w_q
+
+    # kernel path: uint8 codes x packed int4
+    codes = jnp.asarray(quantize_act(x, ql.act), jnp.uint8)
+    packed = pack_int4(jnp.asarray(np.asarray(ql.q_int, np.int8)))
+    y_ker = quantized_linear_w4a8(
+        codes, packed, ql.scale[0], ql.act.scale, ql.act.zero_point,
+        interpret=True, block_m=64, block_n=64, block_k=64,
+    )
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_sim),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unsupported_family_raises():
+    from repro.configs import get_smoke
+
+    cfg = get_smoke("jamba-1.5-large-398b")
+    params = init_model(jax.random.key(0), cfg)
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2))
+    with pytest.raises(NotImplementedError):
+        calibrate_and_quantize(params, cfg, [data.batch(0)],
+                               PTQConfig())

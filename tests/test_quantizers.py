@@ -1,0 +1,79 @@
+"""Quantizer unit tests: rounding modes, scales, activation calibration."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import (
+    ROUND_NEAREST,
+    ROUND_ZERO,
+    act_alphabet,
+    calibrate_act_quant,
+    dequantize_act,
+    fake_quantize_act,
+    quantize_act,
+    quantize_int,
+    quantize_weights_rtn,
+    weight_alphabet,
+    weight_scales,
+)
+
+
+def test_round_to_zero_magnitude_never_grows():
+    x = jnp.asarray([-2.7, -0.5, 0.0, 0.49, 1.99, 3.2])
+    q = quantize_int(x, weight_alphabet(4), rounding=ROUND_ZERO)
+    assert np.all(np.abs(np.asarray(q)) <= np.abs(np.asarray(x)))
+    np.testing.assert_array_equal(np.asarray(q), [-2.0, 0.0, 0.0, 0.0, 1.0, 3.0])
+
+
+def test_round_nearest():
+    x = jnp.asarray([-2.7, -0.5, 0.49, 1.5, 7.9, 100.0])
+    q = quantize_int(x, weight_alphabet(4), rounding=ROUND_NEAREST)
+    # banker's rounding on .5 (rint), clip at alphabet edge
+    np.testing.assert_array_equal(np.asarray(q), [-3.0, 0.0, 0.0, 2.0, 7.0, 7.0])
+
+
+def test_weight_scales_per_channel(rng):
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    s = weight_scales(w, weight_alphabet(4))
+    assert s.shape == (1, 4)
+    # max |w/s| lands exactly on qmax
+    np.testing.assert_allclose(np.abs(np.asarray(w / s)).max(axis=0), 7.0, rtol=1e-5)
+
+
+@given(bits=st.integers(2, 8))
+def test_rtn_roundtrip_error_bound(bits):
+    rng = np.random.default_rng(bits)
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    q, s = quantize_weights_rtn(w, weight_alphabet(bits))
+    # RTN error per element <= s/2
+    err = np.abs(np.asarray(q * s - w))
+    assert np.all(err <= np.asarray(s) / 2 + 1e-6)
+
+
+def test_act_quant_zero_exact():
+    """Zero must be exactly representable (uniform integer quantization)."""
+    p = calibrate_act_quant(-1.3, 2.7, act_alphabet(8))
+    z = dequantize_act(jnp.asarray(float(p.zero_point)), p)
+    assert float(z) == 0.0
+
+
+def test_act_quant_codes_in_range(rng):
+    x = jnp.asarray(rng.normal(size=(128,)) * 3, jnp.float32)
+    p = calibrate_act_quant(np.percentile(x, 1), np.percentile(x, 99), act_alphabet(8))
+    codes = np.asarray(quantize_act(x, p))
+    assert codes.min() >= 0 and codes.max() <= 255
+
+
+def test_fake_quant_error_bound(rng):
+    x = jnp.asarray(rng.uniform(-2, 2, size=(256,)), jnp.float32)
+    p = calibrate_act_quant(-2.0, 2.0, act_alphabet(8))
+    xq = fake_quantize_act(x, p)
+    assert float(jnp.max(jnp.abs(xq - x))) <= p.scale / 2 + 1e-6
+
+
+def test_signed_act_quant_symmetric():
+    p = calibrate_act_quant(-3.0, 1.0, act_alphabet(8, signed=True))
+    assert p.zero_point == 0
+    assert abs(p.scale - 3.0 / 127) < 1e-9

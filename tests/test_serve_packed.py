@@ -1,0 +1,82 @@
+"""Packed-int4 serving path: correctness vs float, abstract tracing,
+sharding rules for packed leaves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as T
+from repro.quant.serve_packed import pack_decode_params, packed_weight_bytes
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("smollm-360m").scaled(n_layers=2, vocab=128)
+    params = T.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def test_packed_decode_tracks_float(setup):
+    cfg, params = setup
+    pparams = pack_decode_params(params, cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 12), 0, 128)}
+    _, cache_f = T.prefill(params, batch, cfg, max_len=16)
+    _, cache_q = T.prefill(pparams, batch, cfg, max_len=16)
+    tok = jnp.ones((2, 1), jnp.int32)
+    l_f, _ = T.decode_step(params, tok, cache_f, jnp.int32(12), cfg)
+    l_q, _ = T.decode_step(pparams, tok, cache_q, jnp.int32(12), cfg)
+    corr = float(jnp.corrcoef(l_f.ravel(), l_q.ravel())[0, 1])
+    assert corr > 0.85, corr  # int4 RTN on random weights
+    assert bool(jnp.all(jnp.isfinite(l_q)))
+
+
+def test_pack_works_under_eval_shape(setup):
+    cfg, _ = setup
+    abstract = jax.eval_shape(lambda k: T.init_model(k, cfg), jax.random.key(0))
+    packed = jax.eval_shape(lambda p: pack_decode_params(p, cfg), abstract)
+    leaf = packed["layers"][0]["mixer"]["wq"]
+    k = cfg.d_model
+    assert leaf["packed"].dtype == jnp.int8
+    assert leaf["packed"].shape[-2] == k // 2  # 2 codes per byte
+
+
+def test_packed_param_shardings_resolve(setup):
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.sharding import SERVING_QUANT_RULES, param_shardings
+
+    cfg, params = setup
+    pparams = pack_decode_params(params, cfg)
+    mesh = make_mesh((1, 1))
+    sh = param_shardings(pparams, mesh, SERVING_QUANT_RULES)
+    # every packed/scale leaf got a sharding (no KeyErrors / rank mismatches)
+    n = len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n == len(jax.tree.leaves(pparams))
+
+
+def test_packed_weight_bytes_accounting(setup):
+    cfg, _ = setup
+    wb = packed_weight_bytes(cfg)
+    assert wb["packed_bytes"] * 4 == wb["bf16_bytes"]
+    assert wb["weight_elems"] > 0
+
+
+def test_unsupported_family_raises():
+    cfg = get_smoke("jamba-1.5-large-398b")
+    params = T.init_model(jax.random.key(0), cfg)
+    with pytest.raises(NotImplementedError):
+        pack_decode_params(params, cfg)
+
+
+def test_vocab_padding_masks_pad_logits():
+    cfg = get_smoke("smollm-360m").scaled(n_layers=1, vocab=100,
+                                          vocab_pad_multiple=128)
+    assert cfg.vocab_padded == 128
+    params = T.init_model(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (1, 8), 0, 100)}
+    logits, _ = T.forward(params, batch, cfg)
+    assert logits.shape[-1] == 128
+    pad = np.asarray(logits[..., 100:])
+    real = np.asarray(logits[..., :100])
+    assert pad.max() < real.min()  # -inf-masked: never selected

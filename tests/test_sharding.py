@@ -1,0 +1,79 @@
+"""Sharding rules: divisibility fallbacks, param/batch/cache specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
+from repro.models.transformer import abstract_params, init_cache
+from repro.runtime.sharding import (
+    DEFAULT_RULES,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    resolve_spec,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) != 1:
+        pytest.skip("expects the default single-device test env")
+    return make_mesh((1, 1))  # shape-logic only; axis sizes 1 divide anything
+
+
+def test_resolve_spec_divisibility_fallback():
+    import jax
+
+    m = make_mesh((1, 1))
+    # fabricate a mesh dict-alike: use real mesh but sizes 1 always divide;
+    # exercise the arithmetic directly instead
+    spec = resolve_spec((7, 64), ("vocab", "data_in"), m, DEFAULT_RULES)
+    assert spec == P("model", "data")
+
+
+def test_param_shardings_structure(mesh):
+    cfg = get_smoke("smollm-360m")
+    params = abstract_params(cfg)
+    sh = param_shardings(params, mesh)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_p) == len(flat_s)
+    # stacked layer leaves never shard the repeats axis
+    import jax.tree_util as jtu
+
+    for path, leaf in jtu.tree_flatten_with_path(params)[0]:
+        keys = [getattr(e, "key", None) for e in path]
+        if "layers" in keys:
+            s = sh
+            for e in path:
+                if hasattr(e, "key"):
+                    s = s[e.key]
+                else:
+                    s = s[e.idx]
+            assert s.spec[0] is None
+
+
+def test_batch_shardings_batch_axis(mesh):
+    b = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    sh = batch_shardings(b, mesh)
+    assert sh["tokens"].spec[0] in (("data",), "data", ("pod", "data"))
+
+
+def test_cache_shardings_kv_fallback(mesh):
+    """kv_heads indivisible by model axis -> sequence-sharded KV."""
+    cfg = get_smoke("llama3-405b")  # kv=2 in smoke
+    cache = init_cache(cfg, batch=4, max_len=32, abstract=True)
+    sh = cache_shardings(cache, cfg, mesh)
+    spec = sh[0]["k"].spec
+    assert len(spec) == 5
+
+
+def test_logical_constraint_noop_without_rules():
+    from repro.runtime.sharding import logical_constraint
+
+    x = jnp.ones((4, 4))
+    y = logical_constraint(x, ("batch", None))
+    assert y is x
