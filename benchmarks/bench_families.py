@@ -1,0 +1,54 @@
+"""Per-family PTQ end-to-end: calibrate+quantize+certify+eval one tiny rung
+of every registered model family (dense, MoE, SSM, xLSTM, and a Jamba-style
+hybrid) under the paper's default W4A8 / T=128 / P_I=16 recipe.
+
+The table answers two questions the dense-only benches cannot: does the
+accumulator constraint certify on every family's site set, and what does
+the constraint cost in perplexity relative to the float model per family.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config
+from repro.core import PTQConfig
+from repro.models.transformer import init_model
+
+from .common import (
+    FAST,
+    baseline_float_ppl,
+    calib_batches,
+    csv_row,
+    eval_batches,
+    quantize_and_eval,
+)
+
+FAMILY_LADDER = ["tiny-lm-xs", "tiny-moe", "tiny-ssm", "tiny-xlstm", "tiny-hybrid"]
+if FAST:
+    FAMILY_LADDER = ["tiny-lm-xs", "tiny-moe", "tiny-ssm"]
+
+
+def run():
+    results = {}
+    for arch in FAMILY_LADDER:
+        cfg = get_config(arch)
+        # recurrent/MoE rungs are scored from a fixed float init (the bench
+        # isolates quantization quality, not training quality)
+        params = init_model(jax.random.key(0), cfg)
+        calib = calib_batches(cfg)
+        evalb = eval_batches(cfg)
+        ppl_f = baseline_float_ppl(cfg, params, evalb)
+        r = quantize_and_eval(cfg, params, PTQConfig(), calib, evalb)
+        results[arch] = r
+        csv_row(
+            f"families/{arch}/w4a8_t128_p16",
+            r["quantize_s"] * 1e6,
+            f"certified={r['certified']};min_headroom={r['min_headroom']:.4f};"
+            f"ppl_ratio={r['ppl'] / ppl_f:.3f};sparsity={r['sparsity']:.3f}",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    run()

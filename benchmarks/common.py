@@ -92,13 +92,10 @@ def quantize_and_eval(cfg, params, ptq: PTQConfig, calib=None, evalb=None):
 
 def _sparsity(qm) -> float:
     z, n = 0, 0
-    for b in qm.blocks:
-        for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
-            if ql is None:
-                continue
-            q = np.asarray(ql.q_int)
-            z += (q == 0).sum()
-            n += q.size
+    for _, ql in qm.quantized_linears():
+        q = np.asarray(ql.q_int)
+        z += (q == 0).sum()
+        n += q.size
     return float(z) / max(n, 1)
 
 

@@ -13,7 +13,7 @@ import sys
 import time
 import traceback
 
-BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline")
+BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline", "families")
 
 
 def main(argv=None) -> None:
@@ -48,6 +48,10 @@ def main(argv=None) -> None:
                 from . import bench_kernels
 
                 bench_kernels.run()
+            elif name == "families":
+                from . import bench_families
+
+                bench_families.run()
             elif name == "roofline":
                 from . import bench_roofline
 

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification + one tiny end-to-end quantize-and-certify smoke per
+# model family (dense, MoE, SSM, xLSTM, hybrid) through the real launcher.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+for arch in tiny-lm-xs tiny-moe tiny-ssm tiny-xlstm tiny-hybrid; do
+  echo "== PTQ smoke: ${arch} =="
+  report=$(python -m repro.launch.quantize --arch "${arch}" \
+    --calib-batches 1 --calib-batch-size 2 --seq 32 --eval-batches 1)
+  echo "${report}" | python -c '
+import json, sys
+arch = sys.argv[1]
+report = json.load(sys.stdin)
+cert = report["cert"]
+assert cert["ok"], f"{arch}: certification failed: {cert}"
+headroom = cert["min_headroom_bits"]
+ppl = report["quant_ppl"]
+print(f"{arch}: certified ok, min_headroom={headroom:.4f}, quant_ppl={ppl:.2f}")
+' "${arch}"
+done
+
+echo "== all checks passed =="

@@ -53,7 +53,14 @@ from .equalization import (
 )
 from .gpfq import AxeConfig, GreedyResult, gpfq, gpfq_memory_efficient, me_stats
 from .optq import hessian_proxy, inverse_cholesky, optq
-from .overflow import CertReport, certify, simulate_accumulation, worst_case_inputs
+from .overflow import (
+    CertReport,
+    StackedCertReport,
+    certify,
+    certify_stacked,
+    simulate_accumulation,
+    worst_case_inputs,
+)
 from .quantizers import (
     ActQuantParams,
     ROUND_NEAREST,
@@ -80,7 +87,8 @@ __all__ = [
     "smoothquant_scales",
     "AxeConfig", "GreedyResult", "gpfq", "gpfq_memory_efficient", "me_stats",
     "hessian_proxy", "inverse_cholesky", "optq",
-    "CertReport", "certify", "simulate_accumulation", "worst_case_inputs",
+    "CertReport", "StackedCertReport", "certify", "certify_stacked",
+    "simulate_accumulation", "worst_case_inputs",
     "ActQuantParams", "ROUND_NEAREST", "ROUND_ZERO", "calibrate_act_quant",
     "dequantize_act", "fake_quantize_act", "quantize_act", "quantize_int",
     "quantize_weights_rtn", "weight_scales",

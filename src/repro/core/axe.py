@@ -30,7 +30,7 @@ from .ep_init import ep_init
 from .equalization import bias_correction
 from .gpfq import AxeConfig, GreedyResult, gpfq_memory_efficient
 from .optq import optq
-from .overflow import CertReport, certify
+from .overflow import CertReport, StackedCertReport, certify, certify_stacked
 from .quantizers import (
     ActQuantParams,
     ROUND_NEAREST,
@@ -107,13 +107,18 @@ class PTQConfig:
 class QuantizedLinear:
     """Deployable artifact for one linear layer."""
 
-    q_int: jax.Array  # (K, C) integer codes (int8 storage; int4 packs 2/byte)
-    scale: jax.Array  # (1, C)
+    q_int: jax.Array  # (K, C) integer codes, or (E, K, C) expert-stacked
+    scale: jax.Array  # (1, C), or (E, 1, C) stacked
     act: ActQuantParams
-    bias: jax.Array | None  # (C,) corrected bias
-    cert: CertReport | None
+    bias: jax.Array | None  # (C,) corrected bias; (E, 1, C) stacked
+    cert: CertReport | StackedCertReport | None
     cfg: PTQConfig
     aux: dict = field(default_factory=dict)
+
+    @property
+    def stacked(self) -> bool:
+        """True for expert-stacked (E, K, C) artifacts (MoE)."""
+        return self.q_int.ndim == 3
 
     @property
     def w_q(self) -> jax.Array:
@@ -122,8 +127,9 @@ class QuantizedLinear:
     def __call__(self, x: jax.Array) -> jax.Array:
         """Simulated-quantized forward (fake-quant activations, real matmul).
 
-        The true-integer path (packed int4 x int8 with multi-stage
-        accumulation) lives in :mod:`repro.kernels.w4a8`.
+        Stacked artifacts accept (E, n, K) inputs (matmul broadcasting over
+        the expert axis). The true-integer path (packed int4 x int8 with
+        multi-stage accumulation) lives in :mod:`repro.kernels.w4a8`.
         """
         from .quantizers import fake_quantize_act
 
@@ -134,62 +140,96 @@ class QuantizedLinear:
         return y
 
 
+def _make_solver(stats: LayerStats, cfg: PTQConfig, k: int):
+    """Build solve((K, C) w) -> GreedyResult with the heavy stats-derived
+    quantities (eigendecomposition / Hessian) computed exactly once — so the
+    expert-stacked path can vmap ``solve`` over the stack with shared
+    statistics."""
+    if cfg.algorithm == GPFQ:
+        h_half, g = stats.gpfq_stats(cfg.gpfq_eta)
+
+        def solve(w):
+            return gpfq_memory_efficient(
+                w, h_half, g, cfg.w_alphabet, cfg.act_alphabet,
+                axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+            )
+    elif cfg.algorithm == OPTQ:
+        hess = stats.optq_hessian(cfg.damp_frac)
+
+        def solve(w):
+            return optq(
+                w, hess, cfg.w_alphabet, cfg.act_alphabet,
+                axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+            )
+    elif cfg.algorithm == RTN:
+
+        def solve(w):
+            q_int, scale = quantize_weights_rtn(w, cfg.w_alphabet, cfg.rounding)
+            return GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
+    elif cfg.algorithm == EPINIT:
+        axe = cfg.axe or AxeConfig(p_bits=cfg.p_bits, tile=cfg.tile)
+        from .alphabet import strict_budgets
+        from .ep_init import tiled, untiled
+
+        budgets = strict_budgets(axe.p_bits, cfg.act_alphabet, 0.0)
+        t = axe.tile or k
+
+        def solve(w):
+            scale = weight_scales(w, cfg.w_alphabet)
+            w_int = to_int_domain(w, scale)
+            # EP-init projects each tile row onto the l1 ball of the *strict*
+            # radius (RTZ keeps it valid post-rounding), per A2Q+ / §2.3.
+            w_ct = tiled(w_int.T, t)  # (C, n_tiles, T)
+            # Conservative A2Q-style radius ||q||_1 <= (2^(P-1)-1)/nu:
+            # certifiable *without* the zero-centering assumption of the
+            # A2Q+/Eq.4 budget, which a post-hoc projection cannot enforce
+            # (paper §2.3 discussion).
+            q_ct = ep_init(w_ct, budgets.B, cfg.w_alphabet)
+            q_int = untiled(q_ct, k).T
+            return GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
+    else:
+        raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
+    return solve
+
+
 def quantize_linear(
     w: jax.Array,
     stats: LayerStats,
     cfg: PTQConfig,
     bias: jax.Array | None = None,
 ) -> QuantizedLinear:
-    """Quantize one (K, C) linear layer from its streamed statistics."""
-    k = w.shape[0]
+    """Quantize one linear layer from its streamed statistics.
+
+    ``w`` is (K, C), or expert-stacked (E, K, C) — the MoE path: the solver
+    is vmapped over the stack with shared calibration statistics, which is
+    exactly equivalent to quantizing each (K, C) slice independently
+    (tested), and certificates are issued per expert.
+    """
+    k = w.shape[-2]
     if stats.k != k:
         raise ValueError(f"stats built for K={stats.k}, weights have K={k}")
     act_params = stats.observer.act_quant(cfg.act_alphabet)
+    solve = _make_solver(stats, cfg, k)
+    want_cert = cfg.constrain or cfg.algorithm == EPINIT
 
-    if cfg.algorithm == GPFQ:
-        h_half, g = stats.gpfq_stats(cfg.gpfq_eta)
-        res = gpfq_memory_efficient(
-            w, h_half, g, cfg.w_alphabet, cfg.act_alphabet,
-            axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+    if w.ndim == 3:  # expert-stacked
+        if bias is not None:
+            raise ValueError("stacked quantization does not take an input bias")
+        q_int, scale = jax.vmap(lambda we: (lambda r: (r.q_int, r.scale))(solve(we)))(w)
+        delta = jnp.einsum("k,ekc->ec", stats.x_mean, w - q_int * scale)
+        cert = certify_stacked(q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile) if want_cert else None
+        return QuantizedLinear(
+            q_int=q_int,
+            scale=scale,
+            act=act_params,
+            bias=delta[:, None, :],
+            cert=cert,
+            cfg=cfg,
         )
-    elif cfg.algorithm == OPTQ:
-        hess = stats.optq_hessian(cfg.damp_frac)
-        res = optq(
-            w, hess, cfg.w_alphabet, cfg.act_alphabet,
-            axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
-        )
-    elif cfg.algorithm == RTN:
-        q_int, scale = quantize_weights_rtn(w, cfg.w_alphabet, cfg.rounding)
-        res = GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
-    elif cfg.algorithm == EPINIT:
-        scale = weight_scales(w, cfg.w_alphabet)
-        w_int = to_int_domain(w, scale)
-        axe = cfg.axe or AxeConfig(p_bits=cfg.p_bits, tile=cfg.tile)
-        from .alphabet import strict_budgets
 
-        budgets = strict_budgets(axe.p_bits, cfg.act_alphabet, 0.0)
-        # EP-init projects each tile row onto the l1 ball of the *strict*
-        # radius (RTZ keeps it valid post-rounding), per A2Q+ / paper §2.3.
-        from .ep_init import tiled, untiled
-
-        t = axe.tile or k
-        w_ct = tiled(w_int.T, t)  # (C, n_tiles, T)
-        # Conservative A2Q-style radius ||q||_1 <= (2^(P-1)-1)/nu: certifiable
-        # *without* the zero-centering assumption of the A2Q+/Eq.4 budget,
-        # which a post-hoc projection cannot enforce (paper §2.3 discussion).
-        radius = budgets.B
-        q_ct = ep_init(w_ct, radius, cfg.w_alphabet)
-        q_int = untiled(q_ct, k).T
-        res = GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
-    else:
-        raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
-
+    res = solve(w)
     new_bias = bias_correction(stats.x_mean, w, res.w_q, bias)
-
-    cert = None
-    if cfg.constrain or cfg.algorithm == EPINIT:
-        cert = certify(res.q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile)
-
+    cert = certify(res.q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile) if want_cert else None
     return QuantizedLinear(
         q_int=res.q_int,
         scale=res.scale,

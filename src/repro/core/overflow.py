@@ -38,6 +38,38 @@ class CertReport:
         return self.ok and self.outer_ok
 
 
+@dataclass
+class StackedCertReport:
+    """Aggregate certificate for an expert-stacked (E, K, C) weight.
+
+    Behaves like a :class:`CertReport` where it matters (truthiness, the
+    ``ok``/``headroom_bits`` summary fields) while keeping every per-expert
+    report addressable — each expert slice is an independent K-deep MAC
+    reduction and is certified independently.
+    """
+
+    reports: tuple[CertReport, ...]
+
+    def __bool__(self) -> bool:
+        return all(bool(r) for r in self.reports)
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.reports)
+
+    @property
+    def headroom_bits(self) -> float:
+        return min(r.headroom_bits for r in self.reports)
+
+    @property
+    def p_bits(self) -> int:
+        return self.reports[0].p_bits
+
+    @property
+    def tile(self) -> int | None:
+        return self.reports[0].tile
+
+
 def tile_signed_sums(q_int: jax.Array, tile: int | None) -> tuple[jax.Array, jax.Array]:
     """Per (channel, tile) sums of positive / negative integer weights.
 
@@ -97,6 +129,18 @@ def certify(
         outer_hi=outer_hi,
         outer_lo=outer_lo,
         outer_ok=outer_ok,
+    )
+
+
+def certify_stacked(
+    q_int: jax.Array,
+    act: Alphabet,
+    p_bits: int,
+    tile: int | None = None,
+) -> StackedCertReport:
+    """Per-expert analytic certificates for stacked (E, K, C) weights."""
+    return StackedCertReport(
+        reports=tuple(certify(q_int[e], act, p_bits, tile) for e in range(q_int.shape[0]))
     )
 
 

@@ -31,25 +31,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def unpack_int4(packed: jax.Array) -> jax.Array:
-    """(K//2, N) int8 -> (K, N) int8 in [-8, 7]; row 2k = low nibble."""
+    """(..., K//2, N) int8 -> (..., K, N) int8 in [-8, 7]; row 2k = low
+    nibble. Leading dims (repeat stacks, MoE expert stacks) pass through."""
     low = jnp.left_shift(packed, 4)
     low = jnp.right_shift(low, 4)  # arithmetic: sign-extends
     high = jnp.right_shift(packed, 4)
-    k2, n = packed.shape
-    out = jnp.stack([low, high], axis=1)  # (K//2, 2, N)
-    return out.reshape(2 * k2, n)
+    *lead, k2, n = packed.shape
+    out = jnp.stack([low, high], axis=-2)  # (..., K//2, 2, N)
+    return out.reshape(*lead, 2 * k2, n)
 
 
 def pack_int4(q: jax.Array) -> jax.Array:
-    """(K, N) int codes in [-8, 7] -> (K//2, N) int8 packed."""
+    """(..., K, N) int codes in [-8, 7] -> (..., K//2, N) int8 packed."""
     q = q.astype(jnp.int8)
-    k, n = q.shape
+    *lead, k, n = q.shape
     assert k % 2 == 0, "K must be even to pack int4"
-    pairs = q.reshape(k // 2, 2, n)
-    low = jnp.bitwise_and(pairs[:, 0], 0x0F)
-    high = jnp.left_shift(jnp.bitwise_and(pairs[:, 1], 0x0F), 4)
+    pairs = q.reshape(*lead, k // 2, 2, n)
+    low = jnp.bitwise_and(pairs[..., 0, :], 0x0F)
+    high = jnp.left_shift(jnp.bitwise_and(pairs[..., 1, :], 0x0F), 4)
     return jnp.bitwise_or(low, high).astype(jnp.int8)
 
 
@@ -134,7 +138,7 @@ def w4a8_matmul(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

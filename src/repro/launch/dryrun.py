@@ -97,6 +97,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # old jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # trip-count-corrected instruction-level costs (XLA's cost_analysis
     # counts while bodies once — see hlo_analysis module docstring)

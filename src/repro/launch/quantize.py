@@ -91,20 +91,18 @@ def main(argv=None):
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         artifact = {}
-        for i, b in enumerate(qm.blocks):
-            for name in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
-                ql = getattr(b, name)
-                if ql is None:
-                    continue
-                q = np.asarray(ql.q_int, np.int8)
-                k = q.shape[0]
-                packed = pack_int4(q) if args.w_bits <= 4 and k % 2 == 0 else q
-                artifact[f"layer{i}/{name}/q"] = packed
-                artifact[f"layer{i}/{name}/scale"] = np.asarray(ql.scale)
-                artifact[f"layer{i}/{name}/bias"] = np.asarray(ql.bias)
-                artifact[f"layer{i}/{name}/act"] = np.asarray(
-                    [ql.act.scale, ql.act.zero_point], np.float64
-                )
+        # registry-driven: every site of every family (incl. expert-stacked
+        # MoE weights) lands in the artifact under its qualified name
+        for name, ql in qm.quantized_linears():
+            q = np.asarray(ql.q_int, np.int8)
+            k = q.shape[-2]
+            packed = pack_int4(q) if args.w_bits <= 4 and k % 2 == 0 else q
+            artifact[f"{name}/q"] = packed
+            artifact[f"{name}/scale"] = np.asarray(ql.scale)
+            artifact[f"{name}/bias"] = np.asarray(ql.bias)
+            artifact[f"{name}/act"] = np.asarray(
+                [ql.act.scale, ql.act.zero_point], np.float64
+            )
         save_pytree(artifact, os.path.join(args.out, "quantized"), report)
         print(f"[quantize] artifact -> {args.out}/quantized")
     return report

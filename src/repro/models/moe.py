@@ -71,10 +71,12 @@ def _dispatch_combine(gates_topv, gates_topi, e: int, c: int):
     return dispatch, combine
 
 
-def moe(params, x, cfg: ModelConfig):
-    """x: (B, S, d_model) -> (B, S, d_model), plus aux losses in out dict."""
-    from .layers import constraint
+def route(router_w, x, cfg: ModelConfig):
+    """Group tokens and build the routing tensors (shared by the float model
+    and the PTQ families adapter, which must route identically).
 
+    x: (B, S, d). Returns (xf (G, g, d), dispatch, combine, gates, topi, c).
+    """
     mo = cfg.moe
     B, S, d = x.shape
     n_tok = B * S
@@ -85,11 +87,21 @@ def moe(params, x, cfg: ModelConfig):
     c = expert_capacity(cfg, g)
     xf = x.reshape(G, g, d)
 
-    logits = (xf @ params["router"]).astype(jnp.float32)  # (G, g, E)
+    logits = (xf @ router_w).astype(jnp.float32)  # (G, g, E)
     gates = jax.nn.softmax(logits, axis=-1)
     topv, topi = jax.lax.top_k(gates, mo.top_k)  # (G, g, k)
     topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
     dispatch, combine = _dispatch_combine(topv.astype(x.dtype), topi, mo.n_experts, c)
+    return xf, dispatch, combine, gates, topi, c
+
+
+def moe(params, x, cfg: ModelConfig):
+    """x: (B, S, d_model) -> (B, S, d_model), plus aux losses in out dict."""
+    from .layers import constraint
+
+    mo = cfg.moe
+    B, S, d = x.shape
+    xf, dispatch, combine, gates, topi, c = route(params["router"], x, cfg)
     # token-side tensors stay sharded with the tokens (unconstrained they
     # were replicated by SPMD -> TB-scale all-gathers; §Perf iteration 2)
     if not _PERF_BASELINE:
@@ -108,15 +120,17 @@ def moe(params, x, cfg: ModelConfig):
         exp_names = (None, "batch", None, None)
         hid_names = (None, "batch", None, "ffn")
 
+    from .layers import resolve_weight
+
     xe = jnp.einsum("gsec,gsd->egcd", dispatch, xf)
     xe = constraint(xe, exp_names)
     if cfg.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, params["wg"]))
-        h = h * jnp.einsum("egcd,edf->egcf", xe, params["wu"])
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wg")))
+        h = h * jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wu"))
     else:
-        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, params["wi"]))
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wi")))
     h = constraint(h, hid_names)
-    ye = jnp.einsum("egcf,efd->egcd", h, params["wd"])
+    ye = jnp.einsum("egcf,efd->egcd", h, resolve_weight(params, "wd"))
     ye = constraint(ye, exp_names)
     y = jnp.einsum("gsec,egcd->gsd", combine, ye)
 

@@ -64,11 +64,15 @@ def _causal_conv(x, w, b, state=None):
 
 def _ssm_params(params, x, cfg: ModelConfig):
     """Input-dependent (dt, B, C) and the fixed A. x: (B, S, d_in)."""
+    from .layers import resolve_weight
+
     s = cfg.ssm
     dtr = cfg.dt_rank
-    proj = x @ params["x_proj"]  # (B, S, dtr + 2N)
+    proj = x @ resolve_weight(params, "x_proj")  # (B, S, dtr + 2N)
     dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
-    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"])  # (B,S,d_in)
+    dt = jax.nn.softplus(
+        dt_r @ resolve_weight(params, "dt_proj") + params["dt_bias"]
+    )  # (B,S,d_in)
     a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_in, N)
     return dt, b_ssm, c_ssm, a
 
@@ -88,23 +92,17 @@ def _scan_chunk(h0, abar, bu):
     return a_acc * h0[:, None] + b_acc  # (B, L, d_in, N)
 
 
-def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = False):
-    """Training/prefill forward. x: (B, S, d_model) -> (B, S, d_model).
+def selective_scan(
+    xin, dt, b_ssm, c_ssm, a, d_param, d_state: int,
+    chunk: int = 256, return_state: bool = False,
+):
+    """Chunked selective-SSM core: (xin, dt, B, C) -> y (B, S, d_in) fp32.
 
-    ``return_state``: also return the decode-ready end-of-sequence state
-    {"conv", "ssm"} (chunkwise-parallel prefill — §Perf iteration 1)."""
-    from .layers import constraint
-
-    B, S, _ = x.shape
-    s = cfg.ssm
-    d_in = s.expand * cfg.d_model
-    xz = x @ params["in_proj"]
-    xin_raw, z = jnp.split(xz, 2, axis=-1)
-    xin, _ = _causal_conv(xin_raw, params["conv_w"], params["conv_b"])
-    xin = jax.nn.silu(xin)
-    xin = constraint(xin, ("batch", None, "ffn"))
-
-    dt, b_ssm, c_ssm, a = _ssm_params(params, xin, cfg)
+    Pure-array signature so the PTQ families adapter can run the exact same
+    high-precision scan on its paired calibration streams. ``return_state``
+    additionally returns the end-of-sequence (B, d_in, N) state.
+    """
+    B, S, d_in = xin.shape
     dtf = dt.astype(jnp.float32)
     abar = jnp.exp(dtf[..., None] * a)  # (B, S, d_in, N)
     bu = (dtf * xin.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[:, :, None, :]
@@ -117,21 +115,48 @@ def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = Fa
         bu = jnp.pad(bu, [(0, 0), (0, pad), (0, 0), (0, 0)])
         S = S + pad
     nc = S // L
-    abar_c = abar.reshape(B, nc, L, d_in, s.d_state).transpose(1, 0, 2, 3, 4)
-    bu_c = bu.reshape(B, nc, L, d_in, s.d_state).transpose(1, 0, 2, 3, 4)
+    abar_c = abar.reshape(B, nc, L, d_in, d_state).transpose(1, 0, 2, 3, 4)
+    bu_c = bu.reshape(B, nc, L, d_in, d_state).transpose(1, 0, 2, 3, 4)
 
     def body(h, inputs):
         ab, bb = inputs  # (B, L, d_in, N)
         hs = _scan_chunk(h, ab, bb)
         return hs[:, -1], hs
 
-    h0 = jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    h0 = jnp.zeros((B, d_in, d_state), jnp.float32)
     h_last, hs = jax.lax.scan(body, h0, (abar_c, bu_c))  # (nc, B, L, d_in, N)
-    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, s.d_state)[:, :S0]
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, d_state)[:, :S0]
     y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm.astype(jnp.float32))
-    y = y + params["D"].astype(jnp.float32) * xin.astype(jnp.float32)
+    y = y + d_param.astype(jnp.float32) * xin.astype(jnp.float32)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = False):
+    """Training/prefill forward. x: (B, S, d_model) -> (B, S, d_model).
+
+    ``return_state``: also return the decode-ready end-of-sequence state
+    {"conv", "ssm"} (chunkwise-parallel prefill — §Perf iteration 1)."""
+    from .layers import constraint, resolve_weight
+
+    B, S0, _ = x.shape
+    s = cfg.ssm
+    xz = x @ resolve_weight(params, "in_proj")
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin, _ = _causal_conv(xin_raw, params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin)
+    xin = constraint(xin, ("batch", None, "ffn"))
+
+    dt, b_ssm, c_ssm, a = _ssm_params(params, xin, cfg)
+    y, h_last = selective_scan(
+        xin, dt, b_ssm, c_ssm, a, params["D"], s.d_state,
+        chunk=chunk, return_state=True,
+    )
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
-    out = constraint(y @ params["out_proj"], ("batch", None, "residual"))
+    out = constraint(
+        y @ resolve_weight(params, "out_proj"), ("batch", None, "residual")
+    )
     if not return_state:
         return out
     ksz = params["conv_w"].shape[0]
@@ -148,8 +173,10 @@ def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     conv_state: (B, d_conv-1, d_in); ssm_state: (B, d_in, N) fp32.
     Returns (y, conv_state, ssm_state).
     """
+    from .layers import resolve_weight
+
     s = cfg.ssm
-    xz = x @ params["in_proj"]
+    xz = x @ resolve_weight(params, "in_proj")
     xin, z = jnp.split(xz, 2, axis=-1)
     xin, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
     xin = jax.nn.silu(xin)
@@ -162,7 +189,7 @@ def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     y = jnp.einsum("bdn,bn->bd", ssm_state, c_ssm[:, 0].astype(jnp.float32))
     y = y + params["D"].astype(jnp.float32) * xin[:, 0].astype(jnp.float32)
     y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
-    return y @ params["out_proj"], conv_state, ssm_state
+    return y @ resolve_weight(params, "out_proj"), conv_state, ssm_state
 
 
 def mamba_state_shapes(cfg: ModelConfig, batch: int):

@@ -59,11 +59,13 @@ def _mlstm_qkvgates(params, xin, cfg: ModelConfig, conv_state=None):
     h = x.mlstm_heads
     B, S, d_in = xin.shape
     dh = d_in // h
+    from .layers import resolve_weight
+
     xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
     xc = jax.nn.silu(xc)
-    q = (xc @ params["wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
-    k = (xc @ params["wk"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
-    v = (xin @ params["wv"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    q = (xc @ resolve_weight(params, "wq")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (xc @ resolve_weight(params, "wk")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = (xin @ resolve_weight(params, "wv")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
     q = q * (dh**-0.5)
     ig = (xin @ params["wi"]).transpose(0, 2, 1).astype(jnp.float32)  # (B,H,S)
     fg = (xin @ params["wf"] + params["f_bias"]).transpose(0, 2, 1).astype(jnp.float32)
@@ -174,9 +176,10 @@ def mlstm_cell_chunkwise(q, k, v, ig, fg, chunk: int = 64, return_state: bool = 
     return out
 
 
-def _mlstm_out(params, h_cell, xc, z, cfg: ModelConfig):
-    """Head-merge, per-head norm, learnable conv skip, z-gate, down proj."""
-    x = cfg.xlstm
+def _mlstm_merge(params, h_cell, xc, z, cfg: ModelConfig):
+    """Head-merge, per-head norm, learnable conv skip, z-gate — everything
+    between the cell and the down projection (split out so the PTQ adapter
+    can tap the down projection separately)."""
     B, H, S, dh = h_cell.shape
     h = h_cell.transpose(0, 2, 1, 3)  # (B,S,H,dh)
     # per-head RMS norm ("multi-head norm" in the official block)
@@ -184,15 +187,20 @@ def _mlstm_out(params, h_cell, xc, z, cfg: ModelConfig):
     h = h * jax.lax.rsqrt(var + 1e-6)
     h = h.reshape(B, S, H * dh).astype(z.dtype) * params["norm_w"]
     h = h + params["skip"] * xc
-    h = h * jax.nn.silu(z)
-    return h @ params["down"]
+    return h * jax.nn.silu(z)
+
+
+def _mlstm_out(params, h_cell, xc, z, cfg: ModelConfig):
+    from .layers import resolve_weight
+
+    return _mlstm_merge(params, h_cell, xc, z, cfg) @ resolve_weight(params, "down")
 
 
 def mlstm(params, x, cfg: ModelConfig, return_state: bool = False):
     """Training/prefill mLSTM block. x: (B, S, d_model)."""
-    from .layers import constraint
+    from .layers import constraint, resolve_weight
 
-    xz = x @ params["up"]
+    xz = x @ resolve_weight(params, "up")
     xin, z = jnp.split(xz, 2, axis=-1)
     xin = constraint(xin, ("batch", None, "ffn"))
     z = constraint(z, ("batch", None, "ffn"))
@@ -217,7 +225,9 @@ def mlstm(params, x, cfg: ModelConfig, return_state: bool = False):
 def mlstm_decode(params, x, cfg: ModelConfig, conv_state, C, n, m):
     """Single-token step. States: conv (B,3,d_in), C (B,H,dh,dh) fp32,
     n (B,H,dh) fp32, m (B,H) fp32."""
-    xz = x @ params["up"]
+    from .layers import resolve_weight
+
+    xz = x @ resolve_weight(params, "up")
     xin, z = jnp.split(xz, 2, axis=-1)
     q, k, v, ig, fg, xc, conv_state = _mlstm_qkvgates(params, xin, cfg, conv_state)
     qt = q[:, :, 0].astype(jnp.float32)
@@ -298,14 +308,12 @@ def _slstm_step(params, xt_proj, state, cfg: ModelConfig):
     return (h_new, c, n, m_new)
 
 
-def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
-    """Training/prefill sLSTM block — sequential scan (no parallel form).
-
-    x: (B, S, d_model)."""
-    from .layers import constraint
-
-    B, S, d = x.shape
-    proj = x @ params["w_in"] + params["b"]  # (B, S, 4d)
+def slstm_scan(params, proj, cfg: ModelConfig):
+    """Run the (inherently sequential) sLSTM recurrence over precomputed
+    input projections. proj: (B, S, 4d). Returns (h (B, S, d), final state).
+    Split out so the PTQ adapter can tap the surrounding projections."""
+    B, S, _ = proj.shape
+    d = cfg.d_model
 
     def step(state, xt):
         new = _slstm_step(params, xt, state, cfg)
@@ -314,13 +322,30 @@ def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
     z0 = jnp.zeros((B, d), jnp.float32)
     m0 = jnp.full((B, d), NEG, jnp.float32)
     final, hs = jax.lax.scan(step, (z0, z0, z0, m0), proj.transpose(1, 0, 2))
-    h = hs.transpose(1, 0, 2).astype(x.dtype)  # (B,S,d)
-    # head-wise norm then the block's gated FFN (proj factor 4/3)
+    return hs.transpose(1, 0, 2), final
+
+
+def slstm_headnorm(params, h, cfg: ModelConfig):
+    """Head-wise RMS norm + elementwise weight preceding the block FFN."""
+    B, S, d = h.shape
     hheads = h.reshape(B, S, cfg.xlstm.slstm_heads, -1)
     var = jnp.mean(jnp.square(hheads.astype(jnp.float32)), axis=-1, keepdims=True)
     hn = (hheads * jax.lax.rsqrt(var + 1e-6).astype(h.dtype)).reshape(B, S, d)
-    hn = hn * params["norm_w"]
-    y = jax.nn.gelu(hn @ params["up"]) @ params["down"]
+    return hn * params["norm_w"]
+
+
+def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill sLSTM block — sequential scan (no parallel form).
+
+    x: (B, S, d_model)."""
+    from .layers import constraint, resolve_weight
+
+    proj = x @ resolve_weight(params, "w_in") + params["b"]  # (B, S, 4d)
+    hs, final = slstm_scan(params, proj, cfg)
+    h = hs.astype(x.dtype)  # (B,S,d)
+    # head-wise norm then the block's gated FFN (proj factor 4/3)
+    hn = slstm_headnorm(params, h, cfg)
+    y = jax.nn.gelu(hn @ resolve_weight(params, "up")) @ resolve_weight(params, "down")
     y = constraint(y, ("batch", None, "residual"))
     if not return_state:
         return y
@@ -330,15 +355,17 @@ def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
 
 def slstm_decode(params, x, cfg: ModelConfig, h, c, n, m):
     """Single-token step. x: (B, 1, d_model); states (B, d) fp32."""
+    from .layers import resolve_weight
+
     B = x.shape[0]
     d = cfg.d_model
-    proj = (x[:, 0] @ params["w_in"] + params["b"]).astype(jnp.float32)
+    proj = (x[:, 0] @ resolve_weight(params, "w_in") + params["b"]).astype(jnp.float32)
     h, c, n, m = _slstm_step(params, proj, (h, c, n, m), cfg)
     hheads = h.reshape(B, 1, cfg.xlstm.slstm_heads, -1)
     var = jnp.mean(jnp.square(hheads), axis=-1, keepdims=True)
     hn = (hheads * jax.lax.rsqrt(var + 1e-6)).reshape(B, 1, d).astype(x.dtype)
     hn = hn * params["norm_w"]
-    y = jax.nn.gelu(hn @ params["up"]) @ params["down"]
+    y = jax.nn.gelu(hn @ resolve_weight(params, "up")) @ resolve_weight(params, "down")
     return y, h, c, n, m
 
 

@@ -1,13 +1,19 @@
 from .pipeline import (
     QuantizedBlock,
+    QuantizedComponent,
     QuantizedModel,
     calibrate_and_quantize,
+    float_ppl,
     quantized_forward,
+    quantized_ppl,
 )
 
 __all__ = [
     "QuantizedBlock",
+    "QuantizedComponent",
     "QuantizedModel",
     "calibrate_and_quantize",
+    "float_ppl",
     "quantized_forward",
+    "quantized_ppl",
 ]

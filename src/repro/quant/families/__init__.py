@@ -1,0 +1,98 @@
+"""Quantizable-site registry — one adapter per (kind, LayerSpec value).
+
+The registry is the single source of truth for *what* gets quantized in
+every model family. The PTQ pipeline (:mod:`repro.quant.pipeline`), the
+packed-serving transform (:mod:`repro.quant.serve_packed`) and the PTQ
+launcher (:mod:`repro.launch.quantize`) all consume it; none of them hold
+hardcoded leaf-name lists anymore.
+
+Registering a new family:
+
+    from repro.quant.families import register_adapter
+    from repro.quant.families.base import BlockAdapter
+
+    class MyMixerAdapter(BlockAdapter):
+        kind = "mixer"; name = "my_mixer"
+        ...
+
+    register_adapter(MyMixerAdapter())
+
+See docs/families.md for the adapter protocol and per-family site tables.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+from .base import BlockAdapter, Pair, SiteSpec, TapContext, TapFn, both
+from .dense import AttentionAdapter, MLPAdapter
+from .moe import MoEAdapter
+from .ssm import MambaAdapter
+from .xlstm import MLSTMAdapter, SLSTMAdapter
+
+_REGISTRY: dict[tuple[str, str], BlockAdapter] = {}
+
+
+def register_adapter(adapter: BlockAdapter) -> BlockAdapter:
+    """Register (or replace) the adapter for (adapter.kind, adapter.name)."""
+    if adapter.kind not in ("mixer", "ffn"):
+        raise ValueError(f"adapter kind must be 'mixer' or 'ffn', got {adapter.kind!r}")
+    _REGISTRY[(adapter.kind, adapter.name)] = adapter
+    return adapter
+
+
+def registered_families() -> dict[str, tuple[str, ...]]:
+    """{"mixer": (names...), "ffn": (names...)} of registered adapters."""
+    out: dict[str, list[str]] = {"mixer": [], "ffn": []}
+    for kind, name in sorted(_REGISTRY):
+        out[kind].append(name)
+    return {k: tuple(v) for k, v in out.items()}
+
+
+def get_adapter(kind: str, name: str) -> BlockAdapter:
+    """Look up the adapter for a LayerSpec component, or raise a
+    NotImplementedError that lists what *is* registered."""
+    try:
+        return _REGISTRY[(kind, name)]
+    except KeyError:
+        fam = registered_families()
+        raise NotImplementedError(
+            f"no PTQ adapter registered for {kind} {name!r}. Registered "
+            f"mixers: {fam['mixer']}; ffns: {fam['ffn']}. AXE applies to any "
+            f"K-deep linear reduction — implement the BlockAdapter protocol "
+            f"(repro.quant.families.base, docs/families.md) and "
+            f"register_adapter() it."
+        ) from None
+
+
+def check_supported(cfg: ModelConfig) -> None:
+    """Raise NotImplementedError unless every pattern component has an
+    adapter ("none" components are skipped)."""
+    for spec in cfg.pattern:
+        for kind, name in (("mixer", spec.mixer), ("ffn", spec.ffn)):
+            if name != "none":
+                get_adapter(kind, name)
+
+
+for _adapter in (
+    AttentionAdapter(),
+    MLPAdapter(),
+    MoEAdapter(),
+    MambaAdapter(),
+    MLSTMAdapter(),
+    SLSTMAdapter(),
+):
+    register_adapter(_adapter)
+
+__all__ = [
+    "BlockAdapter",
+    "Pair",
+    "SiteSpec",
+    "TapContext",
+    "TapFn",
+    "both",
+    "check_supported",
+    "get_adapter",
+    "register_adapter",
+    "registered_families",
+]

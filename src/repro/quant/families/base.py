@@ -1,0 +1,119 @@
+"""Quantizable-site adapter protocol (the family-agnostic PTQ contract).
+
+The AXE guarantee is *per-linear*: any K-deep dot product can be constrained
+to a (T, P) accumulation datapath (paper §3.3; A2Q arXiv:2308.13504, A2Q+
+arXiv:2401.10432 establish the same for any MAC reduction). The pipeline
+therefore never needs to know a model family's internals — it only needs,
+per block component (mixer or ffn):
+
+  * ``enumerate_sites(cfg)`` — the named (K, C) linear reductions the
+    component owns, derived purely from the model config (so serving-side
+    consumers can enumerate without materializing parameters);
+  * ``forward_with_taps(p, x, ctx, tap)`` — the component forward expressed
+    over *paired* (analog, quantized) streams, with every quantizable matmul
+    routed through ``tap``. The same function serves three roles:
+      1. calibration: the pipeline's tap streams layer statistics from the
+         paired inputs, quantizes the site, and returns
+         ``(x_a @ W, fake_quant(x_q) @ W_q)`` — GPFQ's lockstep "first l-1
+         layers quantized" propagation (paper Eq. 9);
+      2. simulated-integer inference: the tap looks up the stored
+         :class:`~repro.core.QuantizedLinear` and returns its output for
+         both streams (the pair collapses — see :func:`both`);
+      3. site-name-driven packing/export (via the enumeration alone).
+  * two optional SmoothQuant hooks describing which weights consume the
+    component's (normed) input, so equalization stays functionally
+    invariant per family.
+
+Everything that is *not* a tap stays in high precision: softmax/RoPE, the
+selective-SSM scan, mLSTM/sLSTM cell recurrences and gate nonlinearities,
+MoE router logits — mirroring the paper's §C.1 exclusions (documented per
+family in docs/families.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+
+from repro.models.config import ModelConfig
+
+#: A pair of (analog, quantized) activation streams. During simulated-integer
+#: inference both elements are the *same object*, which :func:`both` exploits
+#: to evaluate the float ops between taps only once.
+Pair = tuple[jax.Array, jax.Array]
+
+#: tap(site_name, x_pair, stats_from=...) -> y_pair. Provided by the
+#: pipeline; adapters never touch weights of quantizable sites directly.
+TapFn = Callable[..., Pair]
+
+
+@dataclass(frozen=True)
+class SiteSpec:
+    """One quantizable linear reduction inside a block component.
+
+    ``path`` addresses the float weight inside the component's param dict;
+    ``k``/``c`` are the per-matrix reduction depth and output width;
+    ``stacked`` is the leading expert-stack size for (E, K, C) weights
+    (MoE experts) and None for plain 2D sites. ``use_bias`` controls whether
+    the bias-corrected bias is applied when the quantized site is evaluated
+    (the pipeline convention: only the output-side projection of each
+    component carries the correction at runtime).
+    """
+
+    name: str
+    path: tuple[str, ...]
+    k: int
+    c: int
+    stacked: int | None = None
+    use_bias: bool = False
+
+
+@dataclass
+class TapContext:
+    """Per-call context threaded through ``forward_with_taps``."""
+
+    cfg: ModelConfig
+    positions: jax.Array | None = None
+
+
+def both(f, *pairs: Pair) -> Pair:
+    """Apply a float (non-tap) op to each stream of the paired activations.
+
+    When every input pair carries the same object on both sides (the
+    simulated-integer forward), the op runs once and the identity is
+    preserved — so a whole block forward written against pairs costs a
+    single stream outside calibration.
+    """
+    q = f(*(p[1] for p in pairs))
+    if all(p[0] is p[1] for p in pairs):
+        return (q, q)
+    return (f(*(p[0] for p in pairs)), q)
+
+
+class BlockAdapter:
+    """Base class for family adapters. Subclasses set ``kind`` ("mixer" or
+    "ffn") and ``name`` (the :class:`~repro.models.config.LayerSpec` value
+    they implement) and override the four protocol methods."""
+
+    kind: str = ""
+    name: str = ""
+
+    def enumerate_sites(self, cfg: ModelConfig) -> tuple[SiteSpec, ...]:
+        raise NotImplementedError
+
+    def input_weight_absmax(self, p, cfg: ModelConfig) -> jax.Array | None:
+        """Per-input-dim abs-max of the weight(s) consuming the component's
+        normed input, for SmoothQuant scale derivation. ``None`` disables
+        equalization for this component."""
+        return None
+
+    def scale_input_weights(self, p: dict, s_eq: jax.Array, cfg: ModelConfig) -> dict:
+        """Return params with every consumer of the normed input row-scaled
+        by ``s_eq`` (keeping the float function invariant after 1/s_eq is
+        folded into the preceding norm)."""
+        return p
+
+    def forward_with_taps(self, p: dict, x: Pair, ctx: TapContext, tap: TapFn) -> Pair:
+        raise NotImplementedError

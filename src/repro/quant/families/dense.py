@@ -1,0 +1,116 @@
+"""Dense transformer adapters: GQA attention mixer + (SwiGLU | GELU) MLP.
+
+This is the paper's original family (§4 recipe), re-expressed as the first
+two :class:`~repro.quant.families.base.BlockAdapter` implementations — the
+refactor is behavior-preserving: the dense pipeline produces bit-identical
+quantized weights and perplexities to the pre-registry monolithic loop
+(pinned by tests/test_quant_pipeline.py golden values).
+
+High-precision (§C.1): RoPE, attention scores/softmax, the SwiGLU/GELU
+nonlinearities, norms, embedding and LM head.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope
+
+from .base import BlockAdapter, Pair, SiteSpec, TapContext, TapFn, both
+
+
+def attn_mix(q, k, v, cfg: ModelConfig, positions):
+    """Float attention mixing (scores/softmax stay high-precision, §C.1)."""
+    B, S, _ = q.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+    q = apply_rope(q.reshape(B, S, nh, hd), positions, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, S, nkv, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, nkv, hd)
+    qg = q.reshape(B, S, nkv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(causal, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(B, S, nh * hd)
+
+
+class AttentionAdapter(BlockAdapter):
+    kind = "mixer"
+    name = "attn"
+
+    def enumerate_sites(self, cfg: ModelConfig) -> tuple[SiteSpec, ...]:
+        d, hd = cfg.d_model, cfg.head_dim
+        nh, nkv = cfg.n_heads, cfg.n_kv_heads
+        return (
+            SiteSpec("wq", ("wq",), d, nh * hd),
+            SiteSpec("wk", ("wk",), d, nkv * hd),
+            SiteSpec("wv", ("wv",), d, nkv * hd),
+            SiteSpec("wo", ("wo",), nh * hd, d, use_bias=True),
+        )
+
+    def input_weight_absmax(self, p, cfg: ModelConfig):
+        cat = jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=1)
+        return jnp.max(jnp.abs(cat), axis=1)
+
+    def scale_input_weights(self, p, s_eq, cfg: ModelConfig):
+        p = dict(p)
+        for name in ("wq", "wk", "wv"):
+            p[name] = p[name] * s_eq[:, None]
+        return p
+
+    def forward_with_taps(self, p, x: Pair, ctx: TapContext, tap: TapFn) -> Pair:
+        q = tap("wq", x)
+        k = tap("wk", x)
+        v = tap("wv", x)
+        mix = both(
+            lambda qs, ks, vs: attn_mix(qs, ks, vs, ctx.cfg, ctx.positions),
+            q, k, v,
+        )
+        return tap("wo", mix)
+
+
+class MLPAdapter(BlockAdapter):
+    kind = "ffn"
+    name = "mlp"
+
+    def enumerate_sites(self, cfg: ModelConfig) -> tuple[SiteSpec, ...]:
+        d, f = cfg.d_model, cfg.d_ff
+        if cfg.act == "swiglu":
+            return (
+                SiteSpec("wg", ("wg",), d, f),
+                SiteSpec("wu", ("wu",), d, f),
+                SiteSpec("wd", ("wd",), f, d, use_bias=True),
+            )
+        return (
+            SiteSpec("wi", ("wi",), d, f),
+            SiteSpec("wd", ("wd",), f, d, use_bias=True),
+        )
+
+    def input_weight_absmax(self, p, cfg: ModelConfig):
+        if cfg.act == "swiglu":
+            cat = jnp.concatenate([p["wg"], p["wu"]], axis=1)
+        else:
+            cat = p["wi"]
+        return jnp.max(jnp.abs(cat), axis=1)
+
+    def scale_input_weights(self, p, s_eq, cfg: ModelConfig):
+        p = dict(p)
+        names = ("wg", "wu") if cfg.act == "swiglu" else ("wi",)
+        for name in names:
+            p[name] = p[name] * s_eq[:, None]
+        return p
+
+    def forward_with_taps(self, p, x: Pair, ctx: TapContext, tap: TapFn) -> Pair:
+        if ctx.cfg.act == "swiglu":
+            g = tap("wg", x)
+            u = tap("wu", x)
+            mid = both(lambda gs, us: jax.nn.silu(gs) * us, g, u)
+        else:
+            mid = both(jax.nn.gelu, tap("wi", x))
+        return tap("wd", mid)

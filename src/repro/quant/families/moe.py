@@ -1,0 +1,96 @@
+"""MoE FFN adapter: GShard-style top-k routed experts with expert-stacked
+(E, K, C) weights.
+
+Quantizable sites are the stacked expert matrices themselves — AXE applies
+per expert slice, since each expert performs an ordinary K-deep MAC
+reduction. The stacked weights go through the vmapped
+:func:`repro.core.quantize_linear` path, which produces per-expert
+certificates identical to quantizing each slice independently (tested).
+
+High-precision (§C.1): the router logits/softmax/top-k and the dispatch/
+combine einsums (0/1 and gate-weighted mixing matrices, not MAC reductions
+over quantized weights).
+
+Calibration statistics for the expert up-projections are streamed from the
+*pre-dispatch* tokens (the normed block input): every expert consumes a
+capacity-selected subset of exactly those rows, so the shared (K, K)
+sufficient statistics stay O(K^2) regardless of expert count while
+remaining a superset of what each expert sees. Routing during lockstep
+calibration is computed from the quantized stream (what the deployed
+quantized network will route on) and the same dispatch is applied to the
+analog stream so the (X, Xq) sample rows stay paired.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.moe import route
+
+from .base import BlockAdapter, Pair, SiteSpec, TapContext, TapFn, both
+
+
+class MoEAdapter(BlockAdapter):
+    kind = "ffn"
+    name = "moe"
+
+    def enumerate_sites(self, cfg: ModelConfig) -> tuple[SiteSpec, ...]:
+        mo = cfg.moe
+        d, f, e = cfg.d_model, mo.d_ff_expert, mo.n_experts
+        if cfg.act == "swiglu":
+            return (
+                SiteSpec("wg", ("wg",), d, f, stacked=e),
+                SiteSpec("wu", ("wu",), d, f, stacked=e),
+                SiteSpec("wd", ("wd",), f, d, stacked=e, use_bias=True),
+            )
+        return (
+            SiteSpec("wi", ("wi",), d, f, stacked=e),
+            SiteSpec("wd", ("wd",), f, d, stacked=e, use_bias=True),
+        )
+
+    def input_weight_absmax(self, p, cfg: ModelConfig):
+        ws = [p["wg"], p["wu"]] if cfg.act == "swiglu" else [p["wi"]]
+        cat = jnp.concatenate(ws, axis=2)  # (E, d, sum f)
+        return jnp.max(jnp.abs(cat), axis=(0, 2))
+
+    def scale_input_weights(self, p, s_eq, cfg: ModelConfig):
+        p = dict(p)
+        names = ("wg", "wu") if cfg.act == "swiglu" else ("wi",)
+        for name in names:
+            p[name] = p[name] * s_eq[None, :, None]
+        # the router also consumes the normed input: scale it too so the
+        # float function (and therefore the routing) stays invariant
+        p["router"] = p["router"] * s_eq[:, None]
+        return p
+
+    def forward_with_taps(self, p, x: Pair, ctx: TapContext, tap: TapFn) -> Pair:
+        cfg = ctx.cfg
+        B, S, d = x[1].shape
+        e = cfg.moe.n_experts
+        # route on the quantized stream (what the deployed network routes
+        # on), via the float model's own routing code, then apply the same
+        # dispatch to both streams so sample rows stay paired
+        xf_q, dispatch, combine, _, _, c = route(p["router"], x[1], cfg)
+        G, g, _ = xf_q.shape
+        # keep the pair-identity collapse when both streams are one object
+        xf = (xf_q, xf_q) if x[0] is x[1] else (x[0].reshape(G, g, d), xf_q)
+
+        xe = both(
+            lambda t: jnp.einsum("gsec,gsd->egcd", dispatch, t).reshape(e, G * c, d),
+            xf,
+        )
+        if cfg.act == "swiglu":
+            hg = tap("wg", xe, stats_from=x)
+            hu = tap("wu", xe, stats_from=x)
+            mid = both(lambda a, b: jax.nn.silu(a) * b, hg, hu)
+        else:
+            mid = both(jax.nn.gelu, tap("wi", xe, stats_from=x))
+        ye = tap("wd", mid)  # (E, G*c, d)
+
+        def comb(ys):
+            y = jnp.einsum("gsec,egcd->gsd", combine, ys.reshape(e, G, c, d))
+            return y.reshape(B, S, d).astype(x[1].dtype)
+
+        return both(comb, ye)

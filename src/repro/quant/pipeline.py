@@ -3,23 +3,32 @@
   load float params -> [SmoothQuant equalization] -> layer-by-layer
   calibration with *lockstep analog/quantized propagation* (GPFQ's
   "first l-1 layers quantized" setup, Eq. 9) -> AXE-GPFQ / AXE-OPTQ per
-  linear -> bias correction -> overflow certification -> quantized model.
+  linear site -> bias correction -> overflow certification -> quantized
+  model.
 
-Supported family: uniform ("attn", "mlp") patterns (the dense LM family,
-incl. the tiny-lm paper-reproduction ladder). Embedding and LM head stay
-high-precision per the paper (§C.1). The quantized forward has two
-execution paths:
+The pipeline is family-agnostic: every block component (mixer or ffn of a
+:class:`~repro.models.config.LayerSpec`) is handled by a registered
+:class:`~repro.quant.families.base.BlockAdapter` that enumerates its
+quantizable (K, C) linear sites and expresses its forward over *paired*
+(analog, quantized) activation streams with each site routed through a tap.
+Dense attn+mlp, MoE, Mamba and mLSTM/sLSTM adapters ship by default
+(hybrid patterns like Jamba's compose for free); see
+:mod:`repro.quant.families` to register more.
+
+Embedding and LM head stay high-precision per the paper (§C.1). The
+quantized forward has two execution paths:
 
   * simulation (fake-quant weights + activations, CPU/test path) — exactly
     the integer semantics, carried in fp32;
   * kernel (packed int4 + uint8 codes through repro.kernels.w4a8_mm) — the
-    TPU path, interpret-mode on CPU.
+    TPU path, interpret-mode on CPU (see repro.quant.serve_packed).
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -31,32 +40,87 @@ from repro.core import (
     quantize_linear,
     smoothquant_scales,
 )
-from repro.core.quantizers import fake_quantize_act, quantize_act
-from repro.models.config import ModelConfig
-from repro.models.layers import (
-    apply_rope,
-    embed,
-    lm_logits,
-    norm,
-)
+from repro.core.quantizers import fake_quantize_act
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import embed, lm_logits, norm
 
-LINEAR_SITES = ("qkv", "wo", "mlp_in", "wd")
+from .families import SiteSpec, TapContext, check_supported, get_adapter
+
+
+@dataclass
+class QuantizedComponent:
+    """One quantized block component (mixer or ffn).
+
+    ``params`` keeps the component's high-precision leaves (norms excluded —
+    they live on the block); leaves consumed by quantized sites are replaced
+    with ``None`` (adapters only reach weights through taps, so the float
+    originals can be dropped). ``linears`` maps site name ->
+    :class:`~repro.core.QuantizedLinear`, ``specs`` site name -> its spec.
+    """
+
+    adapter: str
+    kind: str
+    params: dict
+    linears: dict[str, QuantizedLinear]
+    specs: dict[str, SiteSpec]
 
 
 @dataclass
 class QuantizedBlock:
-    """One decoder layer's quantized linears + the float norms."""
+    """One decoder layer: generic site-name -> QuantizedLinear mappings plus
+    the float norms, for any registered family."""
 
-    norm1: dict
-    norm2: dict
-    wq: QuantizedLinear
-    wk: QuantizedLinear
-    wv: QuantizedLinear
-    wo: QuantizedLinear
-    # swiglu: (wg, wu, wd); gelu: (wi, wd) with wu None
-    wg: QuantizedLinear
-    wu: QuantizedLinear | None
-    wd: QuantizedLinear
+    spec: LayerSpec
+    norm1: dict | None = None
+    norm2: dict | None = None
+    mixer: QuantizedComponent | None = None
+    ffn: QuantizedComponent | None = None
+
+    def quantized_linears(self) -> Iterator[tuple[str, QuantizedLinear]]:
+        """Yield ("mixer.wq"-style qualified name, QuantizedLinear)."""
+        for comp_name in ("mixer", "ffn"):
+            comp = getattr(self, comp_name)
+            if comp is not None:
+                for name, ql in comp.linears.items():
+                    yield f"{comp_name}.{name}", ql
+
+    # -- dense-family compatibility accessors --------------------------------
+    def _site(self, comp: QuantizedComponent | None, *names: str):
+        if comp is None:
+            return None
+        for n in names:
+            if n in comp.linears:
+                return comp.linears[n]
+        return None
+
+    @property
+    def wq(self):
+        return self._site(self.mixer, "wq")
+
+    @property
+    def wk(self):
+        return self._site(self.mixer, "wk")
+
+    @property
+    def wv(self):
+        return self._site(self.mixer, "wv")
+
+    @property
+    def wo(self):
+        return self._site(self.mixer, "wo")
+
+    @property
+    def wg(self):
+        # gelu models historically stored wi in the wg slot
+        return self._site(self.ffn, "wg", "wi")
+
+    @property
+    def wu(self):
+        return self._site(self.ffn, "wu")
+
+    @property
+    def wd(self):
+        return self._site(self.ffn, "wd")
 
 
 @dataclass
@@ -67,23 +131,39 @@ class QuantizedModel:
     final_norm: dict
     blocks: list[QuantizedBlock] = field(default_factory=list)
 
+    def quantized_linears(self) -> Iterator[tuple[str, QuantizedLinear]]:
+        """Yield ("layer3/ffn.wd", QuantizedLinear) over the whole model."""
+        for i, b in enumerate(self.blocks):
+            for name, ql in b.quantized_linears():
+                yield f"layer{i}/{name}", ql
+
     @property
     def certified(self) -> bool:
-        for b in self.blocks:
-            for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
-                if ql is not None and ql.cert is not None and not bool(ql.cert):
-                    return False
+        for _, ql in self.quantized_linears():
+            if ql.cert is not None and not bool(ql.cert):
+                return False
         return True
 
     def cert_summary(self) -> dict:
-        worst = float("inf")
+        """Aggregate certificate report.
+
+        ``ok`` is explicit no-vacuous-truth semantics: a model with *no*
+        certificates (e.g. ``constrain=False``) reports ``ok: False`` and
+        ``min_headroom_bits: None`` — absence of a certificate is not a
+        guarantee.
+        """
+        worst = None
         n = 0
-        for b in self.blocks:
-            for ql in (b.wq, b.wk, b.wv, b.wo, b.wg, b.wu, b.wd):
-                if ql is not None and ql.cert is not None:
-                    worst = min(worst, ql.cert.headroom_bits)
-                    n += 1
-        return {"n_certified": n, "min_headroom_bits": worst, "ok": self.certified}
+        for _, ql in self.quantized_linears():
+            if ql.cert is not None:
+                h = ql.cert.headroom_bits
+                worst = h if worst is None else min(worst, h)
+                n += 1
+        return {
+            "n_certified": n,
+            "min_headroom_bits": worst,
+            "ok": n > 0 and self.certified,
+        }
 
 
 def _layer_params(params, cfg: ModelConfig, layer: int):
@@ -92,32 +172,93 @@ def _layer_params(params, cfg: ModelConfig, layer: int):
     return jax.tree.map(lambda x: x[rep], params["layers"][slot])
 
 
-def _attn_mix(q, k, v, cfg: ModelConfig, positions):
-    """Float attention mixing (scores/softmax stay high-precision, §C.1)."""
-    B, S, _ = q.shape
-    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    g = nh // nkv
-    q = apply_rope(q.reshape(B, S, nh, hd), positions, cfg.rope_theta)
-    k = apply_rope(k.reshape(B, S, nkv, hd), positions, cfg.rope_theta)
-    v = v.reshape(B, S, nkv, hd)
-    qg = q.reshape(B, S, nkv, g, hd)
-    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
-    causal = jnp.tril(jnp.ones((S, S), bool))
-    s = jnp.where(causal, s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
-    return out.reshape(B, S, nh * hd)
+def _flat(x):
+    return x.reshape(-1, x.shape[-1])
 
 
-def _check_supported(cfg: ModelConfig):
-    for spec in cfg.pattern:
-        if (spec.mixer, spec.ffn) != ("attn", "mlp"):
-            raise NotImplementedError(
-                f"PTQ pipeline supports the dense attn+mlp family; "
-                f"{cfg.name} has ({spec.mixer}, {spec.ffn}). AXE itself applies "
-                f"per-linear (see DESIGN.md §4); extend the pipeline taps to "
-                f"add the family."
-            )
+def _weight_at(p: dict, path: tuple[str, ...]):
+    for key in path:
+        p = p[key]
+    return p
+
+
+def _strip_quantized(p: dict, specs: dict[str, SiteSpec]) -> dict:
+    """Replace quantized weight leaves with None (keys kept so adapters'
+    float-leaf access patterns are unchanged)."""
+    out = dict(p)
+    for spec in specs.values():
+        d = out
+        for key in spec.path[:-1]:
+            d[key] = dict(d[key])
+            d = d[key]
+        d[spec.path[-1]] = None
+    return out
+
+
+def _apply_quantized(ql: QuantizedLinear, x: jax.Array, use_bias: bool) -> jax.Array:
+    """Simulated-integer site evaluation: fake-quant activations, real
+    matmul against dequantized weights, optional corrected bias."""
+    xq = fake_quantize_act(x, ql.act)
+    y = xq @ ql.w_q
+    if use_bias and ql.bias is not None:
+        y = y + ql.bias
+    return y
+
+
+def _calibrate_component(adapter, p, nrm, x_a, x_q, cfg, ptq, positions, equalize):
+    """Norm -> optional SmoothQuant fold -> tapped dual-stream forward.
+
+    Returns ((y_a, y_q) component outputs, QuantizedComponent, updated norm).
+    """
+    h_a = norm(nrm, x_a, cfg.norm)
+    h_q = norm(nrm, x_q, cfg.norm)
+    if equalize:
+        w_absmax = adapter.input_weight_absmax(p, cfg)
+        if w_absmax is not None:
+            absmax = jnp.max(jnp.abs(_flat(h_q)), axis=0)
+            s_eq = smoothquant_scales(absmax, w_absmax)
+            nrm["w"] = nrm["w"] / s_eq
+            if "b" in nrm:
+                nrm["b"] = nrm["b"] / s_eq
+            h_a = norm(nrm, x_a, cfg.norm)
+            h_q = norm(nrm, x_q, cfg.norm)
+            p = adapter.scale_input_weights(p, s_eq, cfg)
+
+    specs = {s.name: s for s in adapter.enumerate_sites(cfg)}
+    linears: dict[str, QuantizedLinear] = {}
+    # LayerStats shared across sites fed by the same activation pair (e.g.
+    # wq/wk/wv): keyed by identity so the O(K^2) accumulation and the
+    # eigendecomposition inside the solver run once per distinct input.
+    stats_cache: list[tuple[jax.Array, jax.Array, LayerStats]] = []
+
+    def tap(name, xp, stats_from=None):
+        spec = specs[name]
+        sa, sq = stats_from if stats_from is not None else xp
+        stats = None
+        for ca, cq, cs in stats_cache:
+            if ca is sa and cq is sq and cs.k == spec.k:
+                stats = cs
+                break
+        if stats is None:
+            stats = LayerStats(k=spec.k)
+            stats.update(_flat(sa), _flat(sq))
+            stats_cache.append((sa, sq, stats))
+        w = _weight_at(p, spec.path)
+        ql = quantize_linear(w, stats, ptq)
+        linears[name] = ql
+        x_a_in, x_q_in = xp
+        return (x_a_in @ w, _apply_quantized(ql, x_q_in, spec.use_bias))
+
+    ctx = TapContext(cfg=cfg, positions=positions)
+    y_a, y_q = adapter.forward_with_taps(p, (h_a, h_q), ctx, tap)
+    comp = QuantizedComponent(
+        adapter=adapter.name,
+        kind=adapter.kind,
+        params=_strip_quantized(p, specs),
+        linears=linears,
+        specs=specs,
+    )
+    return (y_a, y_q), comp, nrm
 
 
 def calibrate_and_quantize(
@@ -128,109 +269,59 @@ def calibrate_and_quantize(
     equalize: bool = True,
 ) -> QuantizedModel:
     """Run the full PTQ pipeline. ``batches``: list of {"tokens": (B, S)}."""
-    _check_supported(cfg)
+    check_supported(cfg)
     tokens = jnp.concatenate([b["tokens"] for b in batches], axis=0)
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
     x_a = embed(params["embedding"], tokens, cfg)  # analog activations
     x_q = x_a  # quantized-network activations (lockstep)
-    d = cfg.d_model
     qm = QuantizedModel(
         cfg=cfg, ptq=ptq, embedding=params["embedding"],
         final_norm=params["final_norm"],
     )
 
-    def flat(x):
-        return x.reshape(-1, x.shape[-1])
-
     for layer in range(cfg.n_layers):
         p = _layer_params(params, cfg, layer)
-        mixer, ffn = p["mixer"], p["ffn"]
-        norm1, norm2 = dict(p["norm1"]), dict(p["norm2"])
-
-        # ---- attention ----
-        h_a = norm(norm1, x_a, cfg.norm)
-        h_q = norm(norm1, x_q, cfg.norm)
-        wq_w, wk_w, wv_w = mixer["wq"], mixer["wk"], mixer["wv"]
-        if equalize:
-            absmax = jnp.max(jnp.abs(flat(h_q)), axis=0)
-            w_absmax = jnp.max(
-                jnp.abs(jnp.concatenate([wq_w, wk_w, wv_w], axis=1)), axis=1
+        spec = cfg.pattern[layer % cfg.period]
+        block = QuantizedBlock(spec=spec)
+        if spec.mixer != "none":
+            adapter = get_adapter("mixer", spec.mixer)
+            (y_a, y_q), comp, nrm = _calibrate_component(
+                adapter, dict(p["mixer"]), dict(p["norm1"]),
+                x_a, x_q, cfg, ptq, positions, equalize,
             )
-            s_eq = smoothquant_scales(absmax, w_absmax)
-            norm1["w"] = norm1["w"] / s_eq
-            if "b" in norm1:
-                norm1["b"] = norm1["b"] / s_eq
-            h_a = norm(norm1, x_a, cfg.norm)
-            h_q = norm(norm1, x_q, cfg.norm)
-            wq_w, wk_w, wv_w = (w * s_eq[:, None] for w in (wq_w, wk_w, wv_w))
-
-        stats = LayerStats(k=d)
-        stats.update(flat(h_a), flat(h_q))
-        ql_q = quantize_linear(wq_w, stats, ptq)
-        ql_k = quantize_linear(wk_w, stats, ptq)
-        ql_v = quantize_linear(wv_w, stats, ptq)
-
-        ao = _attn_mix(h_a @ wq_w, h_a @ wk_w, h_a @ wv_w, cfg, positions)
-        h_qq = fake_quantize_act(h_q, ql_q.act)
-        aq = _attn_mix(h_qq @ ql_q.w_q, h_qq @ ql_k.w_q, h_qq @ ql_v.w_q,
-                       cfg, positions)
-
-        stats_o = LayerStats(k=cfg.n_heads * cfg.head_dim)
-        stats_o.update(flat(ao), flat(aq))
-        ql_o = quantize_linear(mixer["wo"], stats_o, ptq)
-
-        x_a = x_a + ao @ mixer["wo"]
-        x_q = x_q + ql_o(aq)
-
-        # ---- mlp ----
-        h_a = norm(norm2, x_a, cfg.norm)
-        h_q = norm(norm2, x_q, cfg.norm)
-        swiglu = cfg.act == "swiglu"
-        win_a = ffn["wg"] if swiglu else ffn["wi"]
-        wu_w = ffn.get("wu")
-        if equalize:
-            absmax = jnp.max(jnp.abs(flat(h_q)), axis=0)
-            cat = jnp.concatenate([win_a] + ([wu_w] if swiglu else []), axis=1)
-            s_eq = smoothquant_scales(absmax, jnp.max(jnp.abs(cat), axis=1))
-            norm2["w"] = norm2["w"] / s_eq
-            if "b" in norm2:
-                norm2["b"] = norm2["b"] / s_eq
-            h_a = norm(norm2, x_a, cfg.norm)
-            h_q = norm(norm2, x_q, cfg.norm)
-            win_a = win_a * s_eq[:, None]
-            if swiglu:
-                wu_w = wu_w * s_eq[:, None]
-
-        stats_in = LayerStats(k=d)
-        stats_in.update(flat(h_a), flat(h_q))
-        ql_g = quantize_linear(win_a, stats_in, ptq)
-        ql_u = quantize_linear(wu_w, stats_in, ptq) if swiglu else None
-
-        h_qq = fake_quantize_act(h_q, ql_g.act)
-        if swiglu:
-            mid_a = jax.nn.silu(h_a @ win_a) * (h_a @ wu_w)
-            mid_q = jax.nn.silu(h_qq @ ql_g.w_q) * (h_qq @ ql_u.w_q)
-        else:
-            mid_a = jax.nn.gelu(h_a @ win_a)
-            mid_q = jax.nn.gelu(h_qq @ ql_g.w_q)
-
-        stats_d = LayerStats(k=win_a.shape[1])
-        stats_d.update(flat(mid_a), flat(mid_q))
-        ql_d = quantize_linear(ffn["wd"], stats_d, ptq)
-
-        x_a = x_a + mid_a @ ffn["wd"]
-        x_q = x_q + ql_d(mid_q)
-
-        qm.blocks.append(
-            QuantizedBlock(
-                norm1=norm1, norm2=norm2,
-                wq=ql_q, wk=ql_k, wv=ql_v, wo=ql_o,
-                wg=ql_g, wu=ql_u, wd=ql_d,
+            x_a = x_a + y_a
+            x_q = x_q + y_q
+            block.norm1 = nrm
+            block.mixer = comp
+        if spec.ffn != "none":
+            adapter = get_adapter("ffn", spec.ffn)
+            (y_a, y_q), comp, nrm = _calibrate_component(
+                adapter, dict(p["ffn"]), dict(p["norm2"]),
+                x_a, x_q, cfg, ptq, positions, equalize,
             )
-        )
+            x_a = x_a + y_a
+            x_q = x_q + y_q
+            block.norm2 = nrm
+            block.ffn = comp
+        qm.blocks.append(block)
     return qm
+
+
+def _quantized_component_forward(comp: QuantizedComponent, h, cfg, positions):
+    """Single-stream simulated-integer component forward: the same adapter
+    code path as calibration, with taps resolving to stored artifacts and
+    the paired streams collapsed (see families.base.both)."""
+    adapter = get_adapter(comp.kind, comp.adapter)
+
+    def tap(name, xp, stats_from=None):
+        y = _apply_quantized(comp.linears[name], xp[1], comp.specs[name].use_bias)
+        return (y, y)
+
+    ctx = TapContext(cfg=cfg, positions=positions)
+    return adapter.forward_with_taps(comp.params, (h, h), ctx, tap)[1]
+
 
 
 def quantized_forward(qm: QuantizedModel, batch: dict) -> jax.Array:
@@ -241,17 +332,12 @@ def quantized_forward(qm: QuantizedModel, batch: dict) -> jax.Array:
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x = embed(qm.embedding, tokens, cfg)
     for b in qm.blocks:
-        h = norm(b.norm1, x, cfg.norm)
-        hq = fake_quantize_act(h, b.wq.act)
-        ao = _attn_mix(hq @ b.wq.w_q, hq @ b.wk.w_q, hq @ b.wv.w_q, cfg, positions)
-        x = x + b.wo(ao)
-        h = norm(b.norm2, x, cfg.norm)
-        hq = fake_quantize_act(h, b.wg.act)
-        if qm.cfg.act == "swiglu":
-            mid = jax.nn.silu(hq @ b.wg.w_q) * (hq @ b.wu.w_q)
-        else:
-            mid = jax.nn.gelu(hq @ b.wg.w_q)
-        x = x + b.wd(mid)
+        if b.mixer is not None:
+            h = norm(b.norm1, x, cfg.norm)
+            x = x + _quantized_component_forward(b.mixer, h, cfg, positions)
+        if b.ffn is not None:
+            h = norm(b.norm2, x, cfg.norm)
+            x = x + _quantized_component_forward(b.ffn, h, cfg, positions)
     x = norm(qm.final_norm, x, cfg.norm)
     return lm_logits(qm.embedding, x, cfg)
 

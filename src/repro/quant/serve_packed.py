@@ -1,12 +1,19 @@
 """Packed-int4 serving parameters (the §Perf-3 / beyond-paper decode path).
 
-``pack_decode_params`` transforms a dense (attn+mlp) model's layer weights
-into {"packed": (K/2, N) int8, "scale": (1, N)} leaves; the model layers
-dequantize transparently via ``resolve_weight``. Decode at large batch is
-weight-traffic-bound, so int4 packing cuts the dominant HBM term ~4x vs
-bf16 (the paper's W4A8 + AXE certificate is what makes the low-precision
-*accumulation* of this datapath safe — see repro.kernels.w4a8_mm for the
-true-integer TPU kernel).
+``pack_decode_params`` transforms a model's layer weights into
+{"packed": (..., K/2, N) int8, "scale": (..., 1, N)} leaves; the model
+layers dequantize transparently via ``resolve_weight``. Decode at large
+batch is weight-traffic-bound, so int4 packing cuts the dominant HBM term
+~4x vs bf16 (the paper's W4A8 + AXE certificate is what makes the
+low-precision *accumulation* of this datapath safe — see
+repro.kernels.w4a8_mm for the true-integer TPU kernel).
+
+Which leaves get packed is *not* hardcoded: the quantizable-site registry
+(:mod:`repro.quant.families`) enumerates every family's sites from the
+model config alone, so dense, MoE (expert-stacked), Mamba and xLSTM stacks
+— and hybrids like Jamba — all pack through the same transform. Sites
+whose reduction depth K is odd (e.g. an odd Mamba dt_rank) are left in
+high precision rather than padded.
 
 Works under ``jax.eval_shape`` (all ops traceable), so the 405B dry-run can
 lower the quantized decode graph without materializing weights. For real
@@ -23,39 +30,50 @@ import jax.numpy as jnp
 from repro.kernels.w4a8_mm import pack_int4
 from repro.models.config import ModelConfig
 
-PACKABLE = ("wq", "wk", "wv", "wo", "wg", "wu", "wi", "wd")
+from .families import check_supported, get_adapter
+
+
+def packable_sites(cfg: ModelConfig):
+    """Per pattern slot: {"mixer": (SiteSpec...), "ffn": (SiteSpec...)} of
+    sites with an even (packable) reduction depth."""
+    slots = []
+    for spec in cfg.pattern:
+        slot = {}
+        for kind, name in (("mixer", spec.mixer), ("ffn", spec.ffn)):
+            if name == "none":
+                slot[kind] = ()
+                continue
+            sites = get_adapter(kind, name).enumerate_sites(cfg)
+            slot[kind] = tuple(s for s in sites if s.k % 2 == 0)
+        slots.append(slot)
+    return slots
 
 
 def _pack_leaf(w: jax.Array) -> dict:
-    """(..., K, N) -> packed int4 + per-channel scale (stacked-aware)."""
+    """(..., K, N) -> packed int4 + per-channel scale (stack-aware: leading
+    repeat/expert axes pass straight through)."""
     scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) / 7.0
     scale = jnp.maximum(scale, 1e-8)
     q = jnp.clip(jnp.rint(w.astype(jnp.float32) / scale), -7, 7)
-    if w.ndim == 2:
-        packed = pack_int4(q)
-    else:  # stacked over repeats: (R, K, N)
-        packed = jax.vmap(pack_int4)(q)
-    return {"packed": packed, "scale": scale.astype(jnp.bfloat16)}
+    return {"packed": pack_int4(q), "scale": scale.astype(jnp.bfloat16)}
 
 
 def pack_decode_params(params, cfg: ModelConfig):
-    """Replace every packable layer weight with its packed artifact."""
-    for spec in cfg.pattern:
-        if (spec.mixer, spec.ffn) != ("attn", "mlp"):
-            raise NotImplementedError(
-                "packed decode currently supports the dense attn+mlp family"
-            )
+    """Replace every registered quantizable-site weight with its packed
+    artifact. Raises NotImplementedError (listing the registry) when the
+    pattern contains a component with no family adapter."""
+    check_supported(cfg)
     new_layers = []
-    for slot in params["layers"]:
-        new_slot = {"norm1": slot["norm1"], "norm2": slot["norm2"]}
-        new_slot["mixer"] = {
-            k: (_pack_leaf(v) if k in PACKABLE else v)
-            for k, v in slot["mixer"].items()
-        }
-        new_slot["ffn"] = {
-            k: (_pack_leaf(v) if k in PACKABLE else v)
-            for k, v in slot["ffn"].items()
-        }
+    for slot_params, slot_sites in zip(params["layers"], packable_sites(cfg)):
+        new_slot = dict(slot_params)
+        for kind in ("mixer", "ffn"):
+            if kind not in new_slot:
+                continue
+            packable = {s.path[-1] for s in slot_sites[kind]}
+            new_slot[kind] = {
+                k: (_pack_leaf(v) if k in packable else v)
+                for k, v in slot_params[kind].items()
+            }
         new_layers.append(new_slot)
     return {
         "embedding": params["embedding"],
@@ -68,12 +86,13 @@ def packed_weight_bytes(cfg: ModelConfig) -> dict:
     """Analytic per-step weight traffic for the roofline correction:
     bf16 baseline vs fused-dequant packed int4 (what the w4a8_mm kernel
     realizes on TPU — the in-graph dequant here would otherwise be charged
-    at unfused bf16 rates by the HLO byte parser)."""
-    d, hd, nh, nkv, f = (cfg.d_model, cfg.head_dim, cfg.n_heads,
-                         cfg.n_kv_heads, cfg.d_ff)
-    per_layer = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
-    per_layer += 3 * d * f if cfg.act == "swiglu" else 2 * d * f
-    elems = per_layer * cfg.n_layers
+    at unfused bf16 rates by the HLO byte parser). Site-enumeration-driven,
+    so MoE/SSM/xLSTM stacks are counted too."""
+    per_pattern = 0
+    for slot in packable_sites(cfg):
+        for kind in ("mixer", "ffn"):
+            per_pattern += sum(s.k * s.c * (s.stacked or 1) for s in slot[kind])
+    elems = per_pattern * cfg.repeats
     return {
         "weight_elems": elems,
         "bf16_bytes": 2 * elems,

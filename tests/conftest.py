@@ -3,16 +3,25 @@
 NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
 benches must see the real single-device CPU. Multi-device dry-run tests
 spawn subprocesses with their own XLA_FLAGS (see test_dryrun.py).
+
+``hypothesis`` is optional: when absent, the settings profile is skipped
+and property-based tests importing it are collected as skips via their
+own module-level ``pytest.importorskip`` guards.
 """
 
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# Single-core CI box: keep hypothesis snappy and deadline-free (JAX jit
-# compilation on first example would otherwise trip per-example deadlines).
-settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ImportError:  # pragma: no cover - exercised on minimal CI boxes
+    settings = None
+
+if settings is not None:
+    # Single-core CI box: keep hypothesis snappy and deadline-free (JAX jit
+    # compilation on first example would otherwise trip per-example deadlines).
+    settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

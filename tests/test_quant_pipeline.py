@@ -96,12 +96,33 @@ def test_kernel_path_matches_simulation(setup):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_unsupported_family_raises():
-    from repro.configs import get_smoke
+def test_dense_ppl_matches_pre_refactor_pipeline(setup):
+    """The registry refactor is behavior-preserving on the dense family:
+    golden perplexities recorded from the pre-refactor monolithic loop on
+    the same seed/batches (default W4A8 / T=128 / P=16 config)."""
+    cfg, params, calib, evalb = setup
+    qm = calibrate_and_quantize(params, cfg, calib, PTQConfig())
+    assert qm.certified
+    # rtol accommodates cross-jax/BLAS reduction-order drift while still
+    # catching any semantic change in the recipe
+    np.testing.assert_allclose(float_ppl(params, cfg, evalb),
+                               818.2583482083, rtol=1e-4)
+    np.testing.assert_allclose(quantized_ppl(qm, evalb),
+                               813.0594335265, rtol=1e-4)
+    np.testing.assert_allclose(qm.cert_summary()["min_headroom_bits"],
+                               0.005602534910700285, rtol=1e-3)
 
-    cfg = get_smoke("jamba-1.5-large-398b")
-    params = init_model(jax.random.key(0), cfg)
-    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2))
-    with pytest.raises(NotImplementedError):
-        calibrate_and_quantize(params, cfg, [data.batch(0)],
-                               PTQConfig())
+
+def test_unregistered_family_raises_with_registry_listing():
+    """The adapter-lookup error names what IS registered and points at the
+    protocol docs (no more dangling DESIGN.md §4 reference)."""
+    from repro.quant.families import get_adapter, registered_families
+
+    with pytest.raises(NotImplementedError) as ei:
+        get_adapter("mixer", "hyena")
+    msg = str(ei.value)
+    for name in registered_families()["mixer"]:
+        assert name in msg
+    assert "BlockAdapter" in msg
+    assert "docs/families.md" in msg
+    assert "DESIGN.md" not in msg

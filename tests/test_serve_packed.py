@@ -62,11 +62,35 @@ def test_packed_weight_bytes_accounting(setup):
     assert wb["weight_elems"] > 0
 
 
-def test_unsupported_family_raises():
+def test_hybrid_family_packs_under_eval_shape():
+    """Registry-driven packing covers the Jamba-style hybrid (mamba + moe +
+    attn + mlp) that the hardcoded PACKABLE tuple used to reject."""
     cfg = get_smoke("jamba-1.5-large-398b")
+    abstract = jax.eval_shape(lambda k: T.init_model(k, cfg), jax.random.key(0))
+    packed = jax.eval_shape(lambda p: pack_decode_params(p, cfg), abstract)
+    # a mamba in_proj and a stacked moe expert weight both got packed
+    slot0 = packed["layers"][0]
+    assert "packed" in slot0["mixer"]["in_proj"]
+    moe_slot = next(
+        s for s, spec in zip(packed["layers"], cfg.pattern) if spec.ffn == "moe"
+    )
+    wd = moe_slot["ffn"]["wd"]
+    assert wd["packed"].dtype == jnp.int8
+    assert wd["packed"].shape[-2] * 2 == cfg.moe.d_ff_expert
+
+
+def test_packed_ssm_forward_tracks_float():
+    from repro.configs import get_config
+
+    cfg = get_config("tiny-ssm")
     params = T.init_model(jax.random.key(0), cfg)
-    with pytest.raises(NotImplementedError):
-        pack_decode_params(params, cfg)
+    pparams = pack_decode_params(params, cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)}
+    l_f, _ = T.forward(params, batch, cfg)
+    l_q, _ = T.forward(pparams, batch, cfg)
+    corr = float(jnp.corrcoef(l_f.ravel(), l_q.ravel())[0, 1])
+    assert corr > 0.85, corr
+    assert bool(jnp.all(jnp.isfinite(l_q)))
 
 
 def test_vocab_padding_masks_pad_logits():
