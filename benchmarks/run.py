@@ -13,7 +13,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline", "families")
+BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline",
+           "families", "decode")
 
 
 def main(argv=None) -> None:
@@ -52,6 +53,10 @@ def main(argv=None) -> None:
                 from . import bench_families
 
                 bench_families.run()
+            elif name == "decode":
+                from . import bench_decode
+
+                bench_decode.run()
             elif name == "roofline":
                 from . import bench_roofline
 

@@ -24,4 +24,8 @@ print(f"{arch}: certified ok, min_headroom={headroom:.4f}, quant_ppl={ppl:.2f}")
 ' "${arch}"
 done
 
+echo "== decode bench smoke (REPRO_BENCH_FAST grid) =="
+REPRO_BENCH_FAST=1 python -m benchmarks.run --only decode
+test -f BENCH_decode.json && echo "BENCH_decode.json written"
+
 echo "== all checks passed =="

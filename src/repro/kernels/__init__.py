@@ -15,7 +15,9 @@ from .ops import (
     gpfq_quantize_panel,
     norm_and_quantize,
     pack_int4,
+    quantize_activations,
     quantized_linear_w4a8,
     unpack_int4,
+    w4a8_decode_matmul,
     w4a8_matmul,
 )

@@ -11,11 +11,26 @@ import jax.numpy as jnp
 
 from .gpfq_solve import gpfq_solve
 from .quant_rmsnorm import quant_rmsnorm
-from .w4a8_mm import pack_int4, unpack_int4, w4a8_matmul
+from .w4a8_mm import pack_int4, unpack_int4, w4a8_decode_matmul, w4a8_matmul
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def quantize_activations(x: jax.Array):
+    """Dynamic per-tensor asymmetric int8 activation quantization (the
+    serving-path A8 half of W4A8 when no calibrated activation quantizer is
+    attached to the artifact). Returns (codes uint8, scale f32, zp f32) —
+    all traced, so the whole thing stays on device.
+    """
+    xf = x.astype(jnp.float32)
+    lo = jnp.minimum(jnp.min(xf), 0.0)
+    hi = jnp.maximum(jnp.max(xf), 0.0)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-8)
+    zp = jnp.clip(jnp.rint(-lo / scale), 0.0, 255.0)
+    codes = jnp.clip(jnp.rint(xf / scale) + zp, 0.0, 255.0).astype(jnp.uint8)
+    return codes, scale, zp
 
 
 def quantized_linear_w4a8(
@@ -46,7 +61,9 @@ __all__ = [
     "gpfq_quantize_panel",
     "norm_and_quantize",
     "pack_int4",
+    "quantize_activations",
     "quantized_linear_w4a8",
     "unpack_int4",
+    "w4a8_decode_matmul",
     "w4a8_matmul",
 ]

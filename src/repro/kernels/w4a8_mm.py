@@ -20,11 +20,23 @@ Validated against ref.py in interpret mode over shape/dtype sweeps
 (tests/test_kernels.py); the ``assert_inner`` flag additionally checks the
 P_I bound *inside* the kernel on every tile (interpret mode only — on
 hardware the bound is a theorem, not a runtime check).
+
+Two shape regimes share the kernel body:
+
+  * prefill-shaped (M = B*S, hundreds+): the classic 128x128x128 grid; a
+    ragged last M block is padded internally and sliced off after the call;
+  * decode-shaped (M = batch, often < 8): :func:`w4a8_decode_matmul` —
+    GEMV-style grid with a single sub-128 M block (rounded up to the 8-row
+    sublane), N x K tiled as in prefill, and the per-channel ``col_sums``
+    zero-point term taken from the packed artifact instead of recomputed
+    from a full ``unpack_int4`` on every call (that unpack would re-read
+    the whole weight, exactly the HBM traffic packing exists to avoid).
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +85,14 @@ def _kernel(x_ref, wp_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
     )
     if assert_inner:  # interpret-mode verification of the paper's guarantee
         limit = 2 ** (p_inner - 1) - 1
-        pl.debug_check(jnp.max(jnp.abs(partial)) <= limit,
-                       "inner accumulator overflow")
+        watermark = jnp.max(jnp.abs(partial))
+        if hasattr(pl, "debug_check"):
+            pl.debug_check(watermark <= limit, "inner accumulator overflow")
+        else:  # older pallas: host-side assert (interpret mode only)
+            def _check(w, lim=limit):
+                assert int(w) <= lim, f"inner accumulator overflow: {w} > {lim}"
+
+            jax.debug.callback(_check, watermark)
     # outer accumulator (P_O of Eq. 22)
     acc_ref[...] += partial
 
@@ -84,6 +102,18 @@ def _kernel(x_ref, wp_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
         # zero-point correction (zp * sum_k q[k,n], precomputed per channel)
         # then the fused dequant scale s_x * s_w[n]
         out_ref[...] = ((acc - corr_ref[...]) * sw_ref[...]).astype(out_dtype)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _fit_block(dim: int, pref: int) -> int:
+    """Largest block <= pref that divides dim (pref itself when it divides)."""
+    if dim % pref == 0:
+        return pref
+    g = math.gcd(dim, pref)
+    return g if g else dim
 
 
 @functools.partial(
@@ -105,20 +135,46 @@ def w4a8_matmul(
     assert_inner: bool = False,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    col_sums: jax.Array | None = None,  # (N,) or (1, N) int32, pack-time
 ):
     m, k = x_int8.shape
     k2, n = w_packed.shape
     assert k == 2 * k2, (x_int8.shape, w_packed.shape)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+
+    # Ragged shapes: M is padded with zero rows (garbage rows sliced off
+    # after the call — the zero-point correction makes them nonzero, but
+    # they are never read); N and K fall back to the largest divisor block.
+    if m <= block_m:
+        bm = _round_up(m, 8)  # decode regime: one sub-block_m M block
+    else:
+        # prefill regime with a ragged tail: shrink the M block until the
+        # zero-row padding is small (<= max(bm/4, 8) rows) instead of
+        # paying up to a whole extra block of wasted MXU work (m=130 with
+        # bm=128 would pad to 256; an 8-row block pads to 136)
+        bm, c = 8, block_m
+        while c >= 8:
+            if _round_up(m, c) - m <= max(c // 4, 8):
+                bm = c
+                break
+            c //= 2
+    bn = _fit_block(n, block_n)
+    bk = _fit_block(k, block_k)
+    assert bk % 2 == 0, f"K tile {bk} must be even for packed int4 (K={k})"
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        x_int8 = jnp.pad(x_int8, ((0, m_pad - m), (0, 0)))
 
     # per-channel zero-point correction: zp * sum_k q[k, n] (int32), and the
-    # fused dequant scale s_x * s_w — both computed once outside the kernel
-    col_sums = jnp.sum(unpack_int4(w_packed).astype(jnp.int32), axis=0)  # (N,)
-    corr = (col_sums * act_zp).astype(jnp.float32)[None, :]  # (1, N)
-    sw = (w_scale.astype(jnp.float32) * act_scale)[None, :]  # (1, N)
+    # fused dequant scale s_x * s_w — both computed once outside the kernel.
+    # col_sums is precomputed at pack time on the decode path; the fallback
+    # unpack here is the prefill/one-off path.
+    if col_sums is None:
+        col_sums = jnp.sum(unpack_int4(w_packed).astype(jnp.int32), axis=0)
+    corr = (col_sums.reshape(-1).astype(jnp.float32) * act_zp)[None, :]  # (1, N)
+    sw = (w_scale.reshape(-1).astype(jnp.float32) * act_scale)[None, :]  # (1, N)
 
-    n_k = k // block_k
-    grid = (m // block_m, n // block_n, n_k)
+    n_k = k // bk
+    grid = (m_pad // bm, n // bn, n_k)
     kernel = functools.partial(
         _kernel,
         n_k=n_k,
@@ -126,20 +182,46 @@ def w4a8_matmul(
         assert_inner=assert_inner,
         out_dtype=out_dtype,
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k // 2, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(x_int8, w_packed, sw, corr)
+    return out[:m] if m_pad != m else out
+
+
+def w4a8_decode_matmul(
+    x_int8: jax.Array,  # (B, K) activation codes — M = decode batch
+    w_packed: jax.Array,  # (K//2, N)
+    w_scale: jax.Array,  # (N,) or (1, N)
+    col_sums: jax.Array,  # (N,) or (1, N) int32 — REQUIRED, from pack time
+    act_scale,
+    act_zp,
+    **kw,
+):
+    """Decode-shaped W4A8 GEMM: single sub-128 M block (padded up to the
+    8-row sublane), N x K tiled as in prefill, int4 unpack + zero-point
+    correction + per-channel dequant fused in the epilogue. Same
+    ``p_inner``/``assert_inner`` certificate semantics as the prefill path.
+
+    Requiring ``col_sums`` (stored in the packed serving artifact) is what
+    keeps this path free of any full-weight ``unpack_int4``: the jaxpr
+    touches the packed codes only inside the kernel, block by block.
+    """
+    assert col_sums is not None
+    kw.setdefault("block_m", 128)  # min() against M inside w4a8_matmul
+    return w4a8_matmul(
+        x_int8, w_packed, w_scale, act_scale, act_zp, col_sums=col_sums, **kw
+    )

@@ -2,11 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm-s \
         --ckpt-dir /tmp/run1 --batch 8 --prompt-len 32 --max-new 64
+
+``--packed`` packs the weights to the int4 serving artifact first;
+``--packed-backend`` selects the packed-matmul datapath (auto = fused W4A8
+kernel on TPU, in-graph dequant elsewhere; interpret = kernel path in
+pallas interpret mode, for validation). ``--host-loop`` uses the per-token
+host reference loop instead of the fused on-device generation loop.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -15,7 +22,9 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke
 from repro.data import DataConfig, TokenBatcher
+from repro.models.layers import use_packed_backend
 from repro.models.transformer import init_model
+from repro.quant.serve_packed import pack_decode_params
 from repro.serving import GenerationEngine, SamplerConfig
 
 
@@ -29,6 +38,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--packed", action="store_true",
+                    help="serve from the packed-int4 W4A8 artifact")
+    ap.add_argument("--packed-backend", type=str, default="auto",
+                    choices=("auto", "dequant", "kernel", "interpret"))
+    ap.add_argument("--host-loop", action="store_true",
+                    help="per-token host loop instead of the fused device loop")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -39,6 +54,9 @@ def main(argv=None):
             _, tree, _ = restored
             params = tree["params"]
             print(f"[serve] restored step {restored[0]}")
+    if args.packed:
+        params = pack_decode_params(params, cfg)
+        print("[serve] packed int4 serving params")
 
     data = TokenBatcher(
         DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
@@ -48,11 +66,20 @@ def main(argv=None):
     engine = GenerationEngine(
         params, cfg, SamplerConfig(temperature=args.temperature, seed=args.seed)
     )
-    t0 = time.time()
-    out = engine.generate(prompts, args.max_new)
-    dt = time.time() - t0
+    gen = engine.generate_host_loop if args.host_loop else engine.generate
+    backend_ctx = (
+        use_packed_backend(args.packed_backend)
+        if args.packed_backend != "auto"
+        else contextlib.nullcontext()
+    )
+    with backend_ctx:
+        gen(prompts, args.max_new)  # warm the jit bucket outside the timed region
+        t0 = time.time()
+        out = gen(prompts, args.max_new)
+        dt = time.time() - t0
     n_new = out.shape[1] - prompts.shape[1]
-    print(f"[serve] batch={args.batch} new_tokens={n_new} "
+    loop = "host-loop" if args.host_loop else "fused"
+    print(f"[serve] batch={args.batch} new_tokens={n_new} {loop} "
           f"{dt:.2f}s  {args.batch * n_new / dt:.1f} tok/s")
     print("[serve] sample:", out[0, -min(16, out.shape[1]):].tolist())
     return out

@@ -10,6 +10,9 @@ single-device (tests) and on the production mesh (dry-run / launcher).
 from __future__ import annotations
 
 import math
+import os
+import threading
+from contextlib import contextmanager
 from functools import partial
 
 import jax
@@ -20,6 +23,113 @@ from .config import ModelConfig
 
 def _dtype(name: str):
     return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight matmul dispatch (the W4A8 serving datapath)
+# ---------------------------------------------------------------------------
+# Backends:
+#   dequant   — unpack int4 -> bf16 in-graph, then a dense matmul. The
+#               CPU / interpretability fallback (and the pre-kernel
+#               behavior); XLA fuses the unpack into the consumer, but the
+#               weights still transit the matmul at full width.
+#   kernel    — the fused repro.kernels.w4a8_mm Pallas datapath: dynamic
+#               int8 activation quantization + packed-int4 integer GEMM
+#               with dequant fused in the epilogue. TPU only.
+#   interpret — the kernel path with pallas interpret=True: exact same
+#               graph/dataflow, runs anywhere (tests, CPU validation).
+#   auto      — kernel on TPU, dequant elsewhere (the default).
+_PACKED_BACKENDS = ("auto", "dequant", "kernel", "interpret")
+_packed_state = threading.local()
+
+
+def packed_backend() -> str:
+    """Resolve the active packed-matmul backend to a concrete one."""
+    mode = getattr(_packed_state, "override", None) or os.environ.get(
+        "REPRO_PACKED_BACKEND", "auto"
+    )
+    if mode not in _PACKED_BACKENDS:
+        raise ValueError(f"packed backend {mode!r} not in {_PACKED_BACKENDS}")
+    if mode == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "dequant"
+    return mode
+
+
+@contextmanager
+def use_packed_backend(mode: str):
+    """Force a packed-matmul backend for the enclosed trace (tests/benches)."""
+    prev = getattr(_packed_state, "override", None)
+    _packed_state.override = mode
+    try:
+        yield
+    finally:
+        _packed_state.override = prev
+
+
+def is_packed(v) -> bool:
+    return isinstance(v, dict) and "packed" in v
+
+
+def dequant_weight(leaf):
+    """In-graph dequantization of a packed leaf (the fallback datapath)."""
+    from repro.kernels.w4a8_mm import unpack_int4
+
+    return unpack_int4(leaf["packed"]).astype(leaf["scale"].dtype) * leaf["scale"]
+
+
+def packed_linear(x, leaf, *, p_inner: int = 16, assert_inner: bool = False):
+    """x: (..., K) @ packed leaf (K//2, N) -> (..., N), dispatched to the
+    fused W4A8 kernel (kernel/interpret backends) or the in-graph dequant
+    fallback. The kernel path never materializes the full bf16 weight: the
+    zero-point ``col_sums`` term comes precomputed from the packed artifact
+    and the int4 codes are unpacked block-by-block inside the epilogue.
+
+    ``p_inner``/``assert_inner`` thread through to the kernel, but the P_I
+    bound is only a *guarantee* for AXE-constrained codes (launch.quantize
+    artifacts) — RTN-packed leaves carry no l1 budget and can trip it.
+    NOTE: the backend is read at trace time; any jit wrapping this must put
+    the resolved ``packed_backend()`` in its cache key (GenerationEngine
+    does) or retrace when switching backends.
+    """
+    backend = packed_backend()
+    if backend == "dequant":
+        return x @ dequant_weight(leaf)
+
+    from repro.kernels.w4a8_mm import unpack_int4, w4a8_decode_matmul
+
+    *lead, k = x.shape
+    x2 = x.reshape(-1, k)
+    from repro.kernels.ops import quantize_activations
+
+    codes, act_scale, act_zp = quantize_activations(x2)
+    col_sums = leaf.get("col_sums")
+    if col_sums is None:  # legacy artifact without the pack-time term
+        col_sums = jnp.sum(unpack_int4(leaf["packed"]).astype(jnp.int32), axis=-2)
+    y = w4a8_decode_matmul(
+        codes,
+        leaf["packed"],
+        leaf["scale"].reshape(-1).astype(jnp.float32),
+        col_sums.reshape(-1),
+        act_scale,
+        act_zp,
+        p_inner=p_inner,
+        assert_inner=assert_inner,
+        interpret=(backend == "interpret"),
+        out_dtype=x.dtype,
+    )
+    return y.reshape(*lead, y.shape[-1])
+
+
+def pmm(params, name, x):
+    """Packed-aware matmul: ``x @ params[name]`` with transparent dispatch
+    when the leaf is a packed-int4 serving artifact. The single seam every
+    quantizable-site matmul in the model forwards goes through — which is
+    what routes dense, MoE, Mamba and xLSTM packed decode onto the integer
+    datapath at once."""
+    v = params[name]
+    if is_packed(v):
+        return packed_linear(x, v)
+    return x @ v
 
 
 def constraint(x, names):
@@ -90,23 +200,23 @@ def init_attention(key, cfg: ModelConfig):
 
 def resolve_weight(params, name):
     """Weight accessor that transparently dequantizes packed-int4 leaves
-    (the W4A8 serving artifact — see repro.quant.serve_packed). On TPU the
-    unpack+scale fuses into the consuming matmul's VMEM pipeline (the
-    repro.kernels.w4a8_mm datapath), so HBM weight traffic is 0.5 B/elem."""
+    (the W4A8 serving artifact — see repro.quant.serve_packed). Call sites
+    that are plain matmuls should prefer :func:`pmm`, which can route the
+    packed leaf through the fused w4a8_mm kernel instead of materializing
+    the full-width weight; resolve_weight remains for consumers that need
+    the dense array (einsums, analysis, the dequant fallback)."""
     v = params[name]
-    if isinstance(v, dict) and "packed" in v:
-        from repro.kernels.w4a8_mm import unpack_int4
-
-        return unpack_int4(v["packed"]).astype(v["scale"].dtype) * v["scale"]
+    if is_packed(v):
+        return dequant_weight(v)
     return v
 
 
 def _qkv(params, x, cfg: ModelConfig, positions):
     B, S, _ = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    q = (x @ resolve_weight(params, "wq")).reshape(B, S, nh, hd)
-    k = (x @ resolve_weight(params, "wk")).reshape(B, S, nkv, hd)
-    v = (x @ resolve_weight(params, "wv")).reshape(B, S, nkv, hd)
+    q = pmm(params, "wq", x).reshape(B, S, nh, hd)
+    k = pmm(params, "wk", x).reshape(B, S, nkv, hd)
+    v = pmm(params, "wv", x).reshape(B, S, nkv, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     q = constraint(q, ("batch", None, "heads", None))
@@ -192,7 +302,7 @@ def attention(params, x, cfg: ModelConfig, positions):
         out = _chunked_causal_attention(q, k, v, cfg)
     else:
         out = _full_causal_attention(q, k, v, cfg)
-    y = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ resolve_weight(params, "wo")
+    y = pmm(params, "wo", out.reshape(B, S, cfg.n_heads * cfg.head_dim))
     return constraint(y, ("batch", None, "residual")), (k, v)
 
 
@@ -216,7 +326,7 @@ def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v, index):
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v)
-    y = out.reshape(B, 1, nh * hd) @ resolve_weight(params, "wo")
+    y = pmm(params, "wo", out.reshape(B, 1, nh * hd))
     return y, cache_k, cache_v
 
 
@@ -244,13 +354,11 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
 
 def mlp(params, x, cfg: ModelConfig):
     if cfg.act == "swiglu":
-        h = jax.nn.silu(x @ resolve_weight(params, "wg")) * (
-            x @ resolve_weight(params, "wu")
-        )
+        h = jax.nn.silu(pmm(params, "wg", x)) * pmm(params, "wu", x)
     else:
-        h = jax.nn.gelu(x @ resolve_weight(params, "wi"))
+        h = jax.nn.gelu(pmm(params, "wi", x))
     h = constraint(h, ("batch", None, "ffn"))
-    return constraint(h @ resolve_weight(params, "wd"), ("batch", None, "residual"))
+    return constraint(pmm(params, "wd", h), ("batch", None, "residual"))
 
 
 # ---------------------------------------------------------------------------

@@ -95,6 +95,22 @@ def route(router_w, x, cfg: ModelConfig):
     return xf, dispatch, combine, gates, topi, c
 
 
+def _expert_matmul(params, name, xe):
+    """Per-expert stacked matmul ``einsum("egcd,edf->egcf")`` with packed
+    dispatch: when the (E, K//2, N) leaf is a packed artifact and the W4A8
+    kernel backend is active, vmap the fused kernel over the expert axis
+    (per-expert dynamic activation quantization included) instead of
+    dequantizing the whole expert stack in-graph."""
+    from .layers import is_packed, packed_backend, packed_linear, resolve_weight
+
+    leaf = params[name]
+    if not (is_packed(leaf) and packed_backend() != "dequant"):
+        return jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, name))
+    E, G, C, D = xe.shape
+    out = jax.vmap(packed_linear)(xe.reshape(E, G * C, D), leaf)
+    return out.reshape(E, G, C, -1)
+
+
 def moe(params, x, cfg: ModelConfig):
     """x: (B, S, d_model) -> (B, S, d_model), plus aux losses in out dict."""
     from .layers import constraint
@@ -120,17 +136,15 @@ def moe(params, x, cfg: ModelConfig):
         exp_names = (None, "batch", None, None)
         hid_names = (None, "batch", None, "ffn")
 
-    from .layers import resolve_weight
-
     xe = jnp.einsum("gsec,gsd->egcd", dispatch, xf)
     xe = constraint(xe, exp_names)
     if cfg.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wg")))
-        h = h * jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wu"))
+        h = jax.nn.silu(_expert_matmul(params, "wg", xe))
+        h = h * _expert_matmul(params, "wu", xe)
     else:
-        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, "wi")))
+        h = jax.nn.gelu(_expert_matmul(params, "wi", xe))
     h = constraint(h, hid_names)
-    ye = jnp.einsum("egcf,efd->egcd", h, resolve_weight(params, "wd"))
+    ye = _expert_matmul(params, "wd", h)
     ye = constraint(ye, exp_names)
     y = jnp.einsum("gsec,egcd->gsd", combine, ye)
 

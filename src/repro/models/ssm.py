@@ -64,14 +64,14 @@ def _causal_conv(x, w, b, state=None):
 
 def _ssm_params(params, x, cfg: ModelConfig):
     """Input-dependent (dt, B, C) and the fixed A. x: (B, S, d_in)."""
-    from .layers import resolve_weight
+    from .layers import pmm
 
     s = cfg.ssm
     dtr = cfg.dt_rank
-    proj = x @ resolve_weight(params, "x_proj")  # (B, S, dtr + 2N)
+    proj = pmm(params, "x_proj", x)  # (B, S, dtr + 2N)
     dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
     dt = jax.nn.softplus(
-        dt_r @ resolve_weight(params, "dt_proj") + params["dt_bias"]
+        pmm(params, "dt_proj", dt_r) + params["dt_bias"]
     )  # (B,S,d_in)
     a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_in, N)
     return dt, b_ssm, c_ssm, a
@@ -138,11 +138,11 @@ def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = Fa
 
     ``return_state``: also return the decode-ready end-of-sequence state
     {"conv", "ssm"} (chunkwise-parallel prefill — §Perf iteration 1)."""
-    from .layers import constraint, resolve_weight
+    from .layers import constraint, pmm
 
     B, S0, _ = x.shape
     s = cfg.ssm
-    xz = x @ resolve_weight(params, "in_proj")
+    xz = pmm(params, "in_proj", x)
     xin_raw, z = jnp.split(xz, 2, axis=-1)
     xin, _ = _causal_conv(xin_raw, params["conv_w"], params["conv_b"])
     xin = jax.nn.silu(xin)
@@ -154,9 +154,7 @@ def mamba(params, x, cfg: ModelConfig, chunk: int = 256, return_state: bool = Fa
         chunk=chunk, return_state=True,
     )
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
-    out = constraint(
-        y @ resolve_weight(params, "out_proj"), ("batch", None, "residual")
-    )
+    out = constraint(pmm(params, "out_proj", y), ("batch", None, "residual"))
     if not return_state:
         return out
     ksz = params["conv_w"].shape[0]
@@ -173,10 +171,10 @@ def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     conv_state: (B, d_conv-1, d_in); ssm_state: (B, d_in, N) fp32.
     Returns (y, conv_state, ssm_state).
     """
-    from .layers import resolve_weight
+    from .layers import pmm
 
     s = cfg.ssm
-    xz = x @ resolve_weight(params, "in_proj")
+    xz = pmm(params, "in_proj", x)
     xin, z = jnp.split(xz, 2, axis=-1)
     xin, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
     xin = jax.nn.silu(xin)
@@ -189,7 +187,7 @@ def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     y = jnp.einsum("bdn,bn->bd", ssm_state, c_ssm[:, 0].astype(jnp.float32))
     y = y + params["D"].astype(jnp.float32) * xin[:, 0].astype(jnp.float32)
     y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
-    return y @ resolve_weight(params, "out_proj"), conv_state, ssm_state
+    return pmm(params, "out_proj", y), conv_state, ssm_state
 
 
 def mamba_state_shapes(cfg: ModelConfig, batch: int):

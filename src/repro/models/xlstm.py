@@ -59,13 +59,13 @@ def _mlstm_qkvgates(params, xin, cfg: ModelConfig, conv_state=None):
     h = x.mlstm_heads
     B, S, d_in = xin.shape
     dh = d_in // h
-    from .layers import resolve_weight
+    from .layers import pmm
 
     xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
     xc = jax.nn.silu(xc)
-    q = (xc @ resolve_weight(params, "wq")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
-    k = (xc @ resolve_weight(params, "wk")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
-    v = (xin @ resolve_weight(params, "wv")).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    q = pmm(params, "wq", xc).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = pmm(params, "wk", xc).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = pmm(params, "wv", xin).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
     q = q * (dh**-0.5)
     ig = (xin @ params["wi"]).transpose(0, 2, 1).astype(jnp.float32)  # (B,H,S)
     fg = (xin @ params["wf"] + params["f_bias"]).transpose(0, 2, 1).astype(jnp.float32)
@@ -191,16 +191,16 @@ def _mlstm_merge(params, h_cell, xc, z, cfg: ModelConfig):
 
 
 def _mlstm_out(params, h_cell, xc, z, cfg: ModelConfig):
-    from .layers import resolve_weight
+    from .layers import pmm
 
-    return _mlstm_merge(params, h_cell, xc, z, cfg) @ resolve_weight(params, "down")
+    return pmm(params, "down", _mlstm_merge(params, h_cell, xc, z, cfg))
 
 
 def mlstm(params, x, cfg: ModelConfig, return_state: bool = False):
     """Training/prefill mLSTM block. x: (B, S, d_model)."""
-    from .layers import constraint, resolve_weight
+    from .layers import constraint, pmm
 
-    xz = x @ resolve_weight(params, "up")
+    xz = pmm(params, "up", x)
     xin, z = jnp.split(xz, 2, axis=-1)
     xin = constraint(xin, ("batch", None, "ffn"))
     z = constraint(z, ("batch", None, "ffn"))
@@ -225,9 +225,9 @@ def mlstm(params, x, cfg: ModelConfig, return_state: bool = False):
 def mlstm_decode(params, x, cfg: ModelConfig, conv_state, C, n, m):
     """Single-token step. States: conv (B,3,d_in), C (B,H,dh,dh) fp32,
     n (B,H,dh) fp32, m (B,H) fp32."""
-    from .layers import resolve_weight
+    from .layers import pmm
 
-    xz = x @ resolve_weight(params, "up")
+    xz = pmm(params, "up", x)
     xin, z = jnp.split(xz, 2, axis=-1)
     q, k, v, ig, fg, xc, conv_state = _mlstm_qkvgates(params, xin, cfg, conv_state)
     qt = q[:, :, 0].astype(jnp.float32)
@@ -338,14 +338,14 @@ def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
     """Training/prefill sLSTM block — sequential scan (no parallel form).
 
     x: (B, S, d_model)."""
-    from .layers import constraint, resolve_weight
+    from .layers import constraint, pmm
 
-    proj = x @ resolve_weight(params, "w_in") + params["b"]  # (B, S, 4d)
+    proj = pmm(params, "w_in", x) + params["b"]  # (B, S, 4d)
     hs, final = slstm_scan(params, proj, cfg)
     h = hs.astype(x.dtype)  # (B,S,d)
     # head-wise norm then the block's gated FFN (proj factor 4/3)
     hn = slstm_headnorm(params, h, cfg)
-    y = jax.nn.gelu(hn @ resolve_weight(params, "up")) @ resolve_weight(params, "down")
+    y = pmm(params, "down", jax.nn.gelu(pmm(params, "up", hn)))
     y = constraint(y, ("batch", None, "residual"))
     if not return_state:
         return y
@@ -355,17 +355,17 @@ def slstm(params, x, cfg: ModelConfig, return_state: bool = False):
 
 def slstm_decode(params, x, cfg: ModelConfig, h, c, n, m):
     """Single-token step. x: (B, 1, d_model); states (B, d) fp32."""
-    from .layers import resolve_weight
+    from .layers import pmm
 
     B = x.shape[0]
     d = cfg.d_model
-    proj = (x[:, 0] @ resolve_weight(params, "w_in") + params["b"]).astype(jnp.float32)
+    proj = (pmm(params, "w_in", x[:, 0]) + params["b"]).astype(jnp.float32)
     h, c, n, m = _slstm_step(params, proj, (h, c, n, m), cfg)
     hheads = h.reshape(B, 1, cfg.xlstm.slstm_heads, -1)
     var = jnp.mean(jnp.square(hheads), axis=-1, keepdims=True)
     hn = (hheads * jax.lax.rsqrt(var + 1e-6)).reshape(B, 1, d).astype(x.dtype)
     hn = hn * params["norm_w"]
-    y = jax.nn.gelu(hn @ resolve_weight(params, "up")) @ resolve_weight(params, "down")
+    y = pmm(params, "down", jax.nn.gelu(pmm(params, "up", hn)))
     return y, h, c, n, m
 
 

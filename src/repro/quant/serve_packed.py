@@ -51,11 +51,19 @@ def packable_sites(cfg: ModelConfig):
 
 def _pack_leaf(w: jax.Array) -> dict:
     """(..., K, N) -> packed int4 + per-channel scale (stack-aware: leading
-    repeat/expert axes pass straight through)."""
+    repeat/expert axes pass straight through). ``col_sums`` is the
+    per-channel sum of int4 codes over K, precomputed here once so the
+    decode kernel's zero-point correction never needs a full
+    ``unpack_int4`` of the weights at serving time (repro.kernels.w4a8_mm
+    epilogue: corr[n] = act_zp * col_sums[n])."""
     scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) / 7.0
     scale = jnp.maximum(scale, 1e-8)
     q = jnp.clip(jnp.rint(w.astype(jnp.float32) / scale), -7, 7)
-    return {"packed": pack_int4(q), "scale": scale.astype(jnp.bfloat16)}
+    return {
+        "packed": pack_int4(q),
+        "scale": scale.astype(jnp.bfloat16),
+        "col_sums": jnp.sum(q, axis=-2, keepdims=True).astype(jnp.int32),
+    }
 
 
 def pack_decode_params(params, cfg: ModelConfig):
@@ -80,6 +88,30 @@ def pack_decode_params(params, cfg: ModelConfig):
         "layers": tuple(new_layers),
         "final_norm": params["final_norm"],
     }
+
+
+def ensure_col_sums(params):
+    """Fill the pack-time ``col_sums`` term into packed leaves that predate
+    it (artifacts packed before the decode-kernel PR). One full unpack per
+    leaf, once, outside any trace — the alternative (the in-graph fallback
+    in ``packed_linear``) re-reads the whole weight on every decode step.
+    Float trees pass through untouched."""
+    from repro.kernels.w4a8_mm import unpack_int4
+
+    def fix(node):
+        if isinstance(node, dict):
+            if "packed" in node and "col_sums" not in node:
+                col = jnp.sum(
+                    unpack_int4(node["packed"]).astype(jnp.int32),
+                    axis=-2, keepdims=True,
+                )
+                return {**node, "col_sums": col}
+            return {k: fix(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(fix(v) for v in node)
+        return node
+
+    return fix(params)
 
 
 def packed_weight_bytes(cfg: ModelConfig) -> dict:

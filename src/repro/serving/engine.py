@@ -1,10 +1,21 @@
-"""Batched generation engine: prefill + decode with jitted step reuse.
+"""Batched generation engine: prefill + device-resident decode loop.
 
 A fixed-slot batch engine (continuous-batching-lite): all sequences in a
 batch decode together with per-sequence done masks and early exit when all
-finish. The decode step is compiled once per (batch, max_len) bucket —
-repeated calls reuse the jit cache, which is what a production server's
-bucketing achieves.
+finish. :meth:`GenerationEngine.generate` runs the whole prefill + multi-
+token decode as ONE jitted program — the per-token loop is a
+``lax.while_loop`` with on-device sampling, EOS masking and all-done early
+exit, so a generate call costs one compile per (batch, max_len) bucket
+(jit's shape cache) and exactly one device->host sync (the final
+``jax.device_get`` of the token matrix). With packed-int4 params and the
+kernel backend active (repro.models.layers.use_packed_backend), every
+quantizable matmul inside the loop rides the fused W4A8 integer datapath.
+
+:meth:`GenerationEngine.generate_host_loop` keeps the per-token host loop
+as the semantics reference (and perf baseline). It has been fixed to stop
+round-tripping tokens through numpy on every step: EOS masking happens on
+device, and the only per-step host sync is the scalar all-done check (none
+at all when ``eos_id`` is None).
 """
 
 from __future__ import annotations
@@ -17,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.models.layers import packed_backend, use_packed_backend
 from repro.models.transformer import decode_step, prefill
+from repro.quant.serve_packed import ensure_col_sums
 
 
 @dataclass(frozen=True)
@@ -36,55 +49,136 @@ def _sample(logits, temperature: float, key):
 
 class GenerationEngine:
     def __init__(self, params, cfg: ModelConfig, sampler: SamplerConfig = SamplerConfig()):
-        self.params = params
+        # pre-PR packed artifacts lack the pack-time col_sums term; fill it
+        # in ONCE here so the traced decode graph never re-derives it from
+        # a full unpack_int4 of the weights on every step
+        self.params = ensure_col_sums(params)
         self.cfg = cfg
         self.sampler = sampler
+        #: number of times the fused generate program was (re)traced —
+        #: bucketing means repeated same-shape calls keep this at 1
+        self.gen_traces = 0
 
-        @partial(jax.jit, static_argnames=("temperature",))
-        def _step(params, tokens, cache, index, key, temperature):
-            logits, cache = decode_step(params, tokens, cache, index, cfg)
-            nxt = _sample(logits[:, -1], temperature, key)
+        # the packed-matmul backend is resolved at *trace* time, so it is
+        # threaded through every jit below as a static arg — switching
+        # backends (use_packed_backend / REPRO_PACKED_BACKEND) between
+        # calls retraces instead of silently reusing the old graph
+        @partial(jax.jit, static_argnames=("temperature", "backend"))
+        def _step(params, tokens, cache, index, key, temperature, backend):
+            with use_packed_backend(backend):
+                logits, cache = decode_step(params, tokens, cache, index, cfg)
+                nxt = _sample(logits[:, -1], temperature, key)
             return nxt, cache
 
         self._step = _step
         self._prefill_cache = {}
 
-    def _get_prefill(self, max_len: int):
-        fn = self._prefill_cache.get(max_len)
+        @partial(jax.jit, static_argnames=("max_new", "backend"))
+        def _gen(params, prompts, max_new, backend):
+            with use_packed_backend(backend):
+                return self._gen_impl(params, prompts, max_new)
+
+        self._gen = _gen
+
+    def _get_prefill(self, max_len: int, backend: str):
+        fn = self._prefill_cache.get((max_len, backend))
         if fn is None:
-            fn = jax.jit(lambda p, b: prefill(p, b, self.cfg, max_len))
-            self._prefill_cache[max_len] = fn
+
+            def run(p, b, _ml=max_len, _be=backend):
+                with use_packed_backend(_be):
+                    return prefill(p, b, self.cfg, _ml)
+
+            fn = jax.jit(run)
+            self._prefill_cache[(max_len, backend)] = fn
         return fn
 
+    # ------------------------------------------------------------------
+    # Fused on-device loop (the serving path)
+    # ------------------------------------------------------------------
+    def _gen_impl(self, params, prompts, max_new: int):
+        """Traced once per (B, S0, max_new) bucket."""
+        self.gen_traces += 1  # python side effect: runs at trace time only
+        cfg, samp = self.cfg, self.sampler
+        temperature, eos = samp.temperature, samp.eos_id
+        B, S0 = prompts.shape
+        max_len = S0 + max_new
+
+        logits, cache = prefill(params, {"tokens": prompts}, cfg, max_len)
+        key = jax.random.key(samp.seed)
+        key, sub = jax.random.split(key)
+        nxt = _sample(logits[:, -1], temperature, sub)
+        if eos is not None:
+            done = nxt == eos
+            # unwritten tail positions (early exit) must read as post-EOS pad
+            toks = jnp.full((B, max_new), eos, jnp.int32)
+        else:
+            done = jnp.zeros((B,), bool)
+            toks = jnp.zeros((B, max_new), jnp.int32)
+        toks = jax.lax.dynamic_update_slice(toks, nxt[:, None], (0, 0))
+
+        def cond(st):
+            t, _, _, done, _, _ = st
+            return jnp.logical_and(t < max_new, jnp.logical_not(jnp.all(done)))
+
+        def body(st):
+            t, nxt, cache, done, key, toks = st
+            key, sub = jax.random.split(key)
+            logits, cache = decode_step(params, nxt[:, None], cache, S0 + t - 1, cfg)
+            new = _sample(logits[:, -1], temperature, sub)
+            if eos is not None:
+                new = jnp.where(done, eos, new)
+                done = done | (new == eos)
+            toks = jax.lax.dynamic_update_slice(toks, new[:, None], (0, t))
+            return (t + 1, new, cache, done, key, toks)
+
+        st = (jnp.int32(1), nxt, cache, done, key, toks)
+        st = jax.lax.while_loop(cond, body, st)
+        return jnp.concatenate([prompts, st[5]], axis=1)
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
-        """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens)."""
+        """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens).
+
+        One device round-trip total: prompts up, the finished token matrix
+        down (the single explicit ``jax.device_get``).
+        """
+        out = self._gen(self.params, jnp.asarray(prompts, jnp.int32),
+                        max_new_tokens, packed_backend())
+        return np.asarray(jax.device_get(out))
+
+    # ------------------------------------------------------------------
+    # Host-loop reference (kept as baseline + semantics oracle)
+    # ------------------------------------------------------------------
+    def generate_host_loop(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
+        """Per-token host loop, semantics-identical to :meth:`generate`."""
         B, S0 = prompts.shape
         max_len = S0 + max_new_tokens
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        logits, cache = self._get_prefill(max_len)(self.params, batch)
+        temperature, eos = self.sampler.temperature, self.sampler.eos_id
+        backend = packed_backend()
+        dev_prompts = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self._get_prefill(max_len, backend)(
+            self.params, {"tokens": dev_prompts}
+        )
         key = jax.random.key(self.sampler.seed)
         key, sub = jax.random.split(key)
-        nxt = _sample(logits[:, -1], self.sampler.temperature, sub)
-        out = [np.asarray(nxt)]
-        done = np.zeros((B,), bool)
-        if self.sampler.eos_id is not None:
-            done |= np.asarray(nxt) == self.sampler.eos_id
+        nxt = _sample(logits[:, -1], temperature, sub)
+        done = (nxt == eos) if eos is not None else None
+        out = [nxt]
         for t in range(1, max_new_tokens):
             key, sub = jax.random.split(key)
             nxt, cache = self._step(
                 self.params, nxt[:, None], cache, jnp.int32(S0 + t - 1), sub,
-                self.sampler.temperature,
+                temperature, backend,
             )
-            tok = np.asarray(nxt)
-            if self.sampler.eos_id is not None:
-                tok = np.where(done, self.sampler.eos_id, tok)
-                done |= tok == self.sampler.eos_id
-            out.append(tok)
-            nxt = jnp.asarray(tok)
-            if self.sampler.eos_id is not None and done.all():
-                # pad remaining positions with eos and stop early
-                pad = np.full((B,), self.sampler.eos_id, np.int32)
+            if eos is not None:
+                # mask + done tracking on device: no per-token np round-trip
+                nxt = jnp.where(done, eos, nxt)
+                done = done | (nxt == eos)
+            out.append(nxt)
+            if eos is not None and bool(jnp.all(done)):
+                # pad remaining positions with eos and stop early (the only
+                # per-step host sync, a scalar — and only when eos is set)
+                pad = jnp.full((B,), eos, jnp.int32)
                 out.extend([pad] * (max_new_tokens - 1 - t))
                 break
-        gen = np.stack(out, axis=1)
-        return np.concatenate([prompts, gen], axis=1)
+        gen = jnp.stack(out, axis=1)
+        return np.asarray(jax.device_get(jnp.concatenate([dev_prompts, gen], axis=1)))

@@ -1,0 +1,126 @@
+"""GenerationEngine: fused on-device loop vs host-loop reference — greedy
+bit-identity, EOS semantics (early exit, post-EOS padding, per-sequence
+done masks), single-host-sync and one-compile-per-bucket guarantees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.transformer import init_model
+from repro.serving import GenerationEngine, SamplerConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("smollm-360m").scaled(n_layers=2, vocab=128)
+    params = init_model(jax.random.key(0), cfg)
+    prompts = np.random.default_rng(0).integers(0, 128, size=(3, 8)).astype(np.int32)
+    return cfg, params, prompts
+
+
+def _eos_from_greedy(cfg, params, prompts, pos: int) -> int:
+    """A token the greedy rollout actually emits => EOS fires mid-sequence."""
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0))
+    out = eng.generate(prompts, 8)
+    return int(out[0, prompts.shape[1] + pos])
+
+
+def test_greedy_bit_identical_fused_vs_host(setup):
+    cfg, params, prompts = setup
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0))
+    fused = eng.generate(prompts, 8)
+    host = eng.generate_host_loop(prompts, 8)
+    np.testing.assert_array_equal(fused, host)
+
+
+def test_sampled_bit_identical_fused_vs_host(setup):
+    cfg, params, prompts = setup
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=1.0, seed=7))
+    fused = eng.generate(prompts, 8)
+    host = eng.generate_host_loop(prompts, 8)
+    np.testing.assert_array_equal(fused, host)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_eos_semantics_identical(setup, temperature):
+    """Early exit, post-EOS padding and per-sequence done masks agree
+    between the host-loop reference and the fused on-device loop."""
+    cfg, params, prompts = setup
+    eos = _eos_from_greedy(cfg, params, prompts, pos=2)
+    eng = GenerationEngine(
+        params, cfg, SamplerConfig(temperature=temperature, eos_id=eos, seed=3)
+    )
+    fused = eng.generate(prompts, 10)
+    host = eng.generate_host_loop(prompts, 10)
+    np.testing.assert_array_equal(fused, host)
+    # post-EOS positions are EOS-padded per sequence
+    S0 = prompts.shape[1]
+    gen = fused[:, S0:]
+    for row in gen:
+        hits = np.flatnonzero(row == eos)
+        if hits.size:
+            assert (row[hits[0]:] == eos).all()
+
+
+def test_eos_early_exit_all_done(setup):
+    """EOS at the very first sampled token: every generated position is EOS
+    and both loops exit early with identical padding."""
+    cfg, params, prompts = setup
+    eos = _eos_from_greedy(cfg, params, prompts, pos=0)
+    # eos chosen from row 0; other rows may run longer — also try a config
+    # where ALL rows hit at t=0 by generating once and reading each row
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0, eos_id=eos))
+    fused = eng.generate(prompts, 6)
+    host = eng.generate_host_loop(prompts, 6)
+    np.testing.assert_array_equal(fused, host)
+    assert (fused[0, prompts.shape[1]:] == eos).all()
+
+
+def test_single_host_sync_per_generate(setup, monkeypatch):
+    """The fused loop performs exactly one device->host transfer per call —
+    the final explicit jax.device_get; implicit transfers are banned for
+    the whole call via jax's transfer guard."""
+    cfg, params, prompts = setup
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0, eos_id=5))
+    eng.generate(prompts, 4)  # compile outside the guarded region
+
+    calls = []
+    real = jax.device_get
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = eng.generate(prompts, 4)
+    assert len(calls) == 1
+    assert out.shape == (3, 12)
+
+
+def test_host_loop_no_transfers_without_eos(setup):
+    """Satellite regression: with eos_id=None the host loop does zero
+    per-token device->host round-trips (the old engine np.asarray'd every
+    token) — the whole call runs under a disallow-implicit-transfer guard;
+    the only fetch is the final explicit device_get."""
+    cfg, params, prompts = setup
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0))
+    eng.generate_host_loop(prompts, 3)  # compile
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = eng.generate_host_loop(prompts, 3)
+    assert out.shape == (3, 11)
+
+
+def test_one_compile_per_bucket(setup):
+    cfg, params, prompts = setup
+    eng = GenerationEngine(params, cfg, SamplerConfig(temperature=0.0))
+    eng.generate(prompts, 4)
+    eng.generate(prompts, 4)
+    eng.generate(prompts, 4)
+    assert eng.gen_traces == 1  # same (B, S0, max_new) bucket: one trace
+    eng.generate(prompts, 6)
+    assert eng.gen_traces == 2  # new max_len bucket
+    eng.generate(prompts[:2], 4)
+    assert eng.gen_traces == 3  # new batch bucket

@@ -12,6 +12,7 @@ from repro.kernels import (
     norm_and_quantize,
     pack_int4,
     unpack_int4,
+    w4a8_decode_matmul,
     w4a8_matmul,
 )
 from repro.kernels.ref import (
@@ -47,6 +48,56 @@ def test_w4a8_matmul_shape_sweep(m, k, n, bm, bn, bk, rng):
     y = w4a8_matmul(x, wp, scale, 0.02, 131, interpret=True,
                     block_m=bm, block_n=bn, block_k=bk)
     y_ref = w4a8_matmul_ref(x, wp, scale, 0.02, 131)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 7, 8, 16, 100, 130, 250])
+def test_w4a8_matmul_ragged_m(m, rng):
+    """M is padded internally: ragged last batches (and decode-shaped M < 8)
+    no longer crash on the old ``m % block_m == 0`` assert."""
+    k, n = 128, 64
+    q = rng.integers(-7, 8, size=(k, n))
+    wp = pack_int4(jnp.asarray(q))
+    x = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, size=(n,)), jnp.float32)
+    y = w4a8_matmul(x, wp, scale, 0.02, 131, interpret=True)
+    assert y.shape == (m, n)
+    y_ref = w4a8_matmul_ref(x, wp, scale, 0.02, 131)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8, 16, 3, 5, 13])
+@pytest.mark.parametrize("k,n", [(128, 128), (64, 48), (256, 36)])
+def test_w4a8_decode_matmul_sweep(m, k, n, rng):
+    """Decode-shaped path: GEMV-style M blocks, ragged N/K tiling, and the
+    pack-time ``col_sums`` zero-point term — exact vs the ref oracle."""
+    q = rng.integers(-7, 8, size=(k, n))
+    wp = pack_int4(jnp.asarray(q))
+    col_sums = jnp.sum(jnp.asarray(q, jnp.int32), axis=0)
+    x = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, size=(n,)), jnp.float32)
+    y = w4a8_decode_matmul(x, wp, scale, col_sums, 0.02, 131, interpret=True)
+    assert y.shape == (m, n)
+    y_ref = w4a8_matmul_ref(x, wp, scale, 0.02, 131)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-4)
+
+
+def test_w4a8_decode_matmul_assert_inner(rng):
+    """The decode path carries the same P_I certificate semantics: with
+    weights whose per-tile l1 mass respects the bound, the in-kernel
+    debug check passes; the bound itself matches the tile-partials oracle."""
+    k, n, bk, p = 128, 32, 64, 16
+    q = rng.choice([-1, 0, 1], size=(k, n))  # |partial| <= 64*255 < 2^15
+    wp = pack_int4(jnp.asarray(q))
+    col_sums = jnp.sum(jnp.asarray(q, jnp.int32), axis=0)
+    x = jnp.asarray(rng.integers(0, 256, size=(2, k)), jnp.uint8)
+    scale = jnp.ones((n,), jnp.float32)
+    y = w4a8_decode_matmul(x, wp, scale, col_sums, 0.01, 131,
+                           block_k=bk, p_inner=p, assert_inner=True,
+                           interpret=True)
+    parts = w4a8_tile_partials_ref(x, wp, bk)
+    assert int(jnp.max(jnp.abs(parts))) <= 2 ** (p - 1) - 1
+    y_ref = w4a8_matmul_ref(x, wp, scale, 0.01, 131)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-4)
 
 
