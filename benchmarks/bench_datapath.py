@@ -1,0 +1,125 @@
+"""Datapath sweep: the same packed site served under different certified
+accumulation datapaths (T, P_I) — the DatapathSpec drives the kernel's
+K-tile size and inner accumulator width with no call-site kwargs.
+
+Sweeps (T, P_I) ∈ {(64, 12), (128, 16), (256, 20)} over one decode-shaped
+site and reports:
+
+  * us/call for the fused kernel path (interpret mode on CPU — a
+    *validity* probe, not a speed claim; compiled timing only means
+    anything on TPU hardware) and the dequant fallback baseline;
+  * max |err| of the spec-driven kernel vs the dequant reference;
+  * the Eq. 22 outer-accumulator width the spec certifies at this depth;
+  * static-vs-dynamic activation quantization us/call at the same site
+    (the serving-time win of shipping calibrated act quantizers in the
+    artifact).
+
+Writes ``BENCH_datapath.json`` (cwd) so the datapath trajectory is tracked
+per PR, and prints the usual csv rows.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alphabet import outer_accumulator_bits
+from repro.models.layers import packed_linear, use_packed_backend
+from repro.quant.serve_packed import _pack_leaf
+from repro.quant.spec import DatapathSpec
+
+from .common import FAST, csv_row
+
+SWEEP = ((64, 12), (128, 16), (256, 20))
+K, N = (512, 128) if FAST else (512, 512)
+BATCH = 2 if FAST else 4
+REPS = 2 if FAST else 5
+
+
+def _time(fn, reps: int = REPS) -> float:
+    fn()  # warm (jit compile)
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+def run():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(BATCH, K)), jnp.float32)
+    results = {"backend": jax.default_backend(), "K": K, "N": N,
+               "batch": BATCH, "sweep": {}}
+
+    for tile, p_inner in SWEEP:
+        spec = DatapathSpec(tile=tile, p_inner=p_inner,
+                            p_outer=outer_accumulator_bits(p_inner, K, tile))
+        leaf = _pack_leaf(w, spec)
+
+        @jax.jit
+        def kernel_mm(x, leaf=leaf):
+            with use_packed_backend("interpret"):
+                return packed_linear(x, leaf)
+
+        @jax.jit
+        def dequant_mm(x, leaf=leaf):
+            with use_packed_backend("dequant"):
+                return packed_linear(x, leaf)
+
+        us_kernel = _time(lambda: jax.block_until_ready(kernel_mm(x))) * 1e6
+        us_dequant = _time(lambda: jax.block_until_ready(dequant_mm(x))) * 1e6
+        err = float(jnp.max(jnp.abs(kernel_mm(x) - dequant_mm(x))))
+        key = f"T{tile}_PI{p_inner}"
+        results["sweep"][key] = {
+            "tile": tile,
+            "p_inner": p_inner,
+            "p_outer": spec.p_outer,
+            "us_kernel": us_kernel,
+            "us_dequant": us_dequant,
+            "max_abs_err": err,
+        }
+        csv_row(
+            f"datapath/{key}",
+            us_kernel,
+            f"p_outer={spec.p_outer};dequant_us={us_dequant:.1f};"
+            f"max_abs_err={err:.4f}",
+        )
+
+    # static vs dynamic activation quantization on the recipe datapath.
+    # The static node AND the spec_arr array twin are both rebuilt so the
+    # leaf stays internally consistent (the twin is authoritative across
+    # array-only round trips — see serve_packed.ensure_datapath_spec).
+    from repro.quant.serve_packed import _spec_arr_leaf
+
+    dyn_leaf = _pack_leaf(w, DatapathSpec())
+    stat_spec = DatapathSpec().with_act(float(jnp.max(jnp.abs(x)) / 127.5), 128)
+    stat_leaf = dict(dyn_leaf)
+    stat_leaf["spec"] = stat_spec.leaf_spec()
+    stat_leaf["spec_arr"] = _spec_arr_leaf(stat_spec, ())
+    stat_leaf["act_scale"] = jnp.asarray(stat_spec.act_scale, jnp.float32)
+    stat_leaf["act_zp"] = jnp.asarray(float(stat_spec.act_zp), jnp.float32)
+
+    def act_probe(leaf):
+        @jax.jit
+        def mm(x):
+            with use_packed_backend("interpret"):
+                return packed_linear(x, leaf)
+
+        return _time(lambda: jax.block_until_ready(mm(x))) * 1e6
+
+    us_dyn, us_stat = act_probe(dyn_leaf), act_probe(stat_leaf)
+    results["act_quant"] = {"us_dynamic": us_dyn, "us_static": us_stat}
+    csv_row("datapath/act_quant", us_stat,
+            f"dynamic_us={us_dyn:.1f};static_us={us_stat:.1f}")
+
+    with open("BENCH_datapath.json", "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run()

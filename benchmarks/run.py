@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline",
-           "families", "decode")
+           "families", "decode", "datapath")
 
 
 def main(argv=None) -> None:
@@ -57,6 +57,10 @@ def main(argv=None) -> None:
                 from . import bench_decode
 
                 bench_decode.run()
+            elif name == "datapath":
+                from . import bench_datapath
+
+                bench_datapath.run()
             elif name == "roofline":
                 from . import bench_roofline
 

@@ -49,6 +49,21 @@ def main():
                               block_m=64, block_n=64, block_k=64)
     print("pallas w4a8 output:", y.shape, "finite:", bool(jnp.all(jnp.isfinite(y))))
 
+    # the certified serving datapath travels with the artifact: build the
+    # packed serving tree (static act quantizers, per-site DatapathSpec)
+    # and run the real generation engine on it — no kwargs re-specified
+    from repro.models.layers import use_packed_backend
+    from repro.quant.serve_packed import serving_params_from_quantized
+    from repro.serving import GenerationEngine, SamplerConfig
+
+    print("wq datapath:", b0.wq.spec.describe())
+    sp = serving_params_from_quantized(qm)
+    eng = GenerationEngine(sp, cfg, SamplerConfig(temperature=0.0))
+    with use_packed_backend("interpret"):  # fused W4A8 kernel, CPU-validated
+        out = eng.generate(prompts[:, :8], 8)
+    print("engine sample (certified datapath", eng.datapath_fingerprint + "):",
+          out[0, 8:].tolist())
+
 
 if __name__ == "__main__":
     main()

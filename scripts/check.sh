@@ -24,8 +24,44 @@ print(f"{arch}: certified ok, min_headroom={headroom:.4f}, quant_ppl={ppl:.2f}")
 ' "${arch}"
 done
 
-echo "== decode bench smoke (REPRO_BENCH_FAST grid) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.run --only decode
+echo "== artifact schema smoke: pack -> validate spec -> load in engine =="
+art_dir=$(mktemp -d)
+trap 'rm -rf "${art_dir}"' EXIT
+python -m repro.launch.quantize --arch tiny-lm-xs --algorithm rtn \
+  --calib-batches 1 --calib-batch-size 2 --seq 32 --eval-batches 1 \
+  --out "${art_dir}" > /dev/null
+python - "${art_dir}/quantized" <<'EOF'
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.layers import use_packed_backend
+from repro.models.transformer import init_model
+from repro.quant.serve_packed import load_flat_artifact, packed_params_from_artifact
+from repro.quant.spec import ARTIFACT_VERSION, DatapathSpec, tree_datapath_fingerprint
+from repro.serving import GenerationEngine, SamplerConfig
+
+flat, meta = load_flat_artifact(sys.argv[1])
+assert meta["artifact_version"] == ARTIFACT_VERSION, meta
+specs = {k: DatapathSpec.from_array(v) for k, v in flat.items() if k.endswith("/spec")}
+assert specs and all(s.static_act for s in specs.values()), "sites missing static act quantizers"
+cfg = get_config("tiny-lm-xs")
+params = init_model(jax.random.key(0), cfg)
+pp = packed_params_from_artifact(flat, params, cfg, meta=meta)
+eng = GenerationEngine(pp, cfg, SamplerConfig(temperature=0.0))
+prompts = np.zeros((2, 4), np.int32)
+with use_packed_backend("interpret"):
+    out = eng.generate(prompts, 2)
+assert out.shape == (2, 6)
+print(f"artifact schema ok: v{meta['artifact_version']}, {len(specs)} site specs, "
+      f"datapath={tree_datapath_fingerprint(pp)}")
+EOF
+
+echo "== decode + datapath bench smoke (REPRO_BENCH_FAST grid) =="
+REPRO_BENCH_FAST=1 python -m benchmarks.run --only decode,datapath
 test -f BENCH_decode.json && echo "BENCH_decode.json written"
+test -f BENCH_datapath.json && echo "BENCH_datapath.json written"
 
 echo "== all checks passed =="

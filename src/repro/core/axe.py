@@ -102,6 +102,32 @@ class PTQConfig:
             return self.p_bits
         return outer_accumulator_bits(self.p_bits, k, self.tile)
 
+    def to_datapath_spec(self, k: int, act: "ActQuantParams | None" = None):
+        """The per-site :class:`~repro.quant.spec.DatapathSpec` this recipe
+        certifies for a K-deep site: P_O from Eq. 22 at this depth, and the
+        calibrated static activation quantizer when ``act`` is given.
+
+        This is the single source of truth for the serving datapath — the
+        packed artifact embeds it and ``packed_linear`` consumes it; no
+        call site re-declares (tile, P_I) as kwargs.
+        """
+        # lazy: repro.quant.spec is dependency-free, but importing it at
+        # module top would trigger repro.quant.__init__ -> pipeline ->
+        # repro.core while repro.core is still initializing
+        from repro.quant.spec import DatapathSpec
+
+        spec = DatapathSpec(
+            w_bits=self.w_bits,
+            act_bits=self.act_bits,
+            act_signed=self.act_signed,
+            tile=self.tile if self.constrain else None,
+            p_inner=self.p_bits if self.constrain else 32,
+            p_outer=self.outer_bits(k),
+        )
+        if act is not None:
+            spec = spec.with_act(act.scale, act.zero_point)
+        return spec
+
 
 @dataclass
 class QuantizedLinear:
@@ -113,6 +139,9 @@ class QuantizedLinear:
     bias: jax.Array | None  # (C,) corrected bias; (E, 1, C) stacked
     cert: CertReport | StackedCertReport | None
     cfg: PTQConfig
+    #: the serving datapath this artifact was certified for, including the
+    #: calibrated static activation quantizer (repro.quant.spec)
+    spec: object | None = None
     aux: dict = field(default_factory=dict)
 
     @property
@@ -209,6 +238,7 @@ def quantize_linear(
     if stats.k != k:
         raise ValueError(f"stats built for K={stats.k}, weights have K={k}")
     act_params = stats.observer.act_quant(cfg.act_alphabet)
+    dp_spec = cfg.to_datapath_spec(k, act_params)
     solve = _make_solver(stats, cfg, k)
     want_cert = cfg.constrain or cfg.algorithm == EPINIT
 
@@ -225,6 +255,7 @@ def quantize_linear(
             bias=delta[:, None, :],
             cert=cert,
             cfg=cfg,
+            spec=dp_spec,
         )
 
     res = solve(w)
@@ -237,6 +268,7 @@ def quantize_linear(
         bias=new_bias,
         cert=cert,
         cfg=cfg,
+        spec=dp_spec,
         aux=res.aux,
     )
 

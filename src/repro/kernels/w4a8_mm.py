@@ -104,6 +104,16 @@ def _kernel(x_ref, wp_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
         out_ref[...] = ((acc - corr_ref[...]) * sw_ref[...]).astype(out_dtype)
 
 
+def datapath_kernel_args(spec) -> dict:
+    """Map a :class:`~repro.quant.spec.DatapathSpec` onto the kernel's
+    accumulator knobs. This is the only place the translation lives: the
+    K-tile size is the certified T (monolithic specs keep the 128-lane MXU
+    tile — any K-subset partial of an l1-budgeted row is bounded by the
+    full-K bound, so P_I stays a valid per-tile certificate) and the inner
+    accumulator width is the certified P_I."""
+    return {"block_k": spec.block_k(), "p_inner": spec.p_inner}
+
+
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 

@@ -11,18 +11,18 @@ from __future__ import annotations
 import argparse
 import json
 import os
+from dataclasses import replace
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager, save_pytree
 from repro.configs import get_config, get_smoke
 from repro.core import PTQConfig
 from repro.data import DataConfig, TokenBatcher
-from repro.kernels import pack_int4
 from repro.models.transformer import init_model
 from repro.quant import calibrate_and_quantize
 from repro.quant.pipeline import float_ppl, quantized_ppl
+from repro.quant.serve_packed import export_quantized_artifact
 
 
 def main(argv=None):
@@ -85,26 +85,26 @@ def main(argv=None):
         "quant_ppl": ppl_q,
         "naive_p_star_K_dmodel": ptq.naive_p_star(cfg.d_model),
         "outer_bits_K_dmodel": ptq.outer_bits(cfg.d_model),
+        # exported artifacts always carry the calibrated static act
+        # quantizers, so describe the datapath as served, not as configured
+        "datapath": replace(
+            ptq.to_datapath_spec(cfg.d_model), static_act=True
+        ).describe(),
     }
     print(json.dumps(report, indent=2, default=float))
 
     if args.out:
         os.makedirs(args.out, exist_ok=True)
-        artifact = {}
         # registry-driven: every site of every family (incl. expert-stacked
-        # MoE weights) lands in the artifact under its qualified name
-        for name, ql in qm.quantized_linears():
-            q = np.asarray(ql.q_int, np.int8)
-            k = q.shape[-2]
-            packed = pack_int4(q) if args.w_bits <= 4 and k % 2 == 0 else q
-            artifact[f"{name}/q"] = packed
-            artifact[f"{name}/scale"] = np.asarray(ql.scale)
-            artifact[f"{name}/bias"] = np.asarray(ql.bias)
-            artifact[f"{name}/act"] = np.asarray(
-                [ql.act.scale, ql.act.zero_point], np.float64
-            )
-        save_pytree(artifact, os.path.join(args.out, "quantized"), report)
-        print(f"[quantize] artifact -> {args.out}/quantized")
+        # MoE weights) lands in the artifact under its qualified name,
+        # together with its DatapathSpec (static act quantizer included),
+        # corrected bias, and the equalization-folded norms/routers — the
+        # versioned schema repro.launch.serve --artifact reloads
+        artifact, meta = export_quantized_artifact(qm)
+        save_pytree(artifact, os.path.join(args.out, "quantized"),
+                    {**meta, **report})
+        print(f"[quantize] artifact v{meta['artifact_version']} "
+              f"({len(artifact)} leaves) -> {args.out}/quantized")
     return report
 
 

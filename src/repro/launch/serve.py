@@ -3,7 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm-s \
         --ckpt-dir /tmp/run1 --batch 8 --prompt-len 32 --max-new 64
 
-``--packed`` packs the weights to the int4 serving artifact first;
+``--packed`` packs the weights to the int4 serving artifact first (RTN,
+dynamic activation quantization); ``--artifact DIR`` instead loads a
+calibrated AXE artifact written by ``repro.launch.quantize --out`` — the
+versioned schema carrying per-site DatapathSpecs and *static* activation
+quantizers, so the served datapath is exactly what calibration certified.
 ``--packed-backend`` selects the packed-matmul datapath (auto = fused W4A8
 kernel on TPU, in-graph dequant elsewhere; interpret = kernel path in
 pallas interpret mode, for validation). ``--host-loop`` uses the per-token
@@ -24,7 +28,12 @@ from repro.configs import get_config, get_smoke
 from repro.data import DataConfig, TokenBatcher
 from repro.models.layers import use_packed_backend
 from repro.models.transformer import init_model
-from repro.quant.serve_packed import pack_decode_params
+from repro.quant.serve_packed import (
+    load_flat_artifact,
+    pack_decode_params,
+    packed_params_from_artifact,
+)
+from repro.quant.spec import tree_datapath_fingerprint
 from repro.serving import GenerationEngine, SamplerConfig
 
 
@@ -40,6 +49,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--packed", action="store_true",
                     help="serve from the packed-int4 W4A8 artifact")
+    ap.add_argument("--artifact", type=str, default=None,
+                    help="directory of a calibrated AXE artifact "
+                         "(repro.launch.quantize --out); loads packed codes "
+                         "+ per-site DatapathSpecs + static act quantizers")
     ap.add_argument("--packed-backend", type=str, default="auto",
                     choices=("auto", "dequant", "kernel", "interpret"))
     ap.add_argument("--host-loop", action="store_true",
@@ -54,9 +67,15 @@ def main(argv=None):
             _, tree, _ = restored
             params = tree["params"]
             print(f"[serve] restored step {restored[0]}")
-    if args.packed:
+    if args.artifact:
+        flat, meta = load_flat_artifact(args.artifact)
+        params = packed_params_from_artifact(flat, params, cfg, meta=meta)
+        print(f"[serve] loaded artifact v{meta.get('artifact_version')} "
+              f"datapath={tree_datapath_fingerprint(params)} "
+              f"({meta.get('datapath', '?')})")
+    elif args.packed:
         params = pack_decode_params(params, cfg)
-        print("[serve] packed int4 serving params")
+        print("[serve] packed int4 serving params (RTN fallback, dynamic act)")
 
     data = TokenBatcher(
         DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,

@@ -70,6 +70,14 @@ def is_packed(v) -> bool:
     return isinstance(v, dict) and "packed" in v
 
 
+def is_dequant_site(v) -> bool:
+    """A high-precision site leaf from a calibrated artifact whose codes
+    have no int4 container (w_bits > 4 / odd K): {"w": dequantized weight,
+    "bias": corrected bias}. Serves in float, but keeps the bias-corrected
+    function the certificate was issued for."""
+    return isinstance(v, dict) and "w" in v and "packed" not in v
+
+
 def dequant_weight(leaf):
     """In-graph dequantization of a packed leaf (the fallback datapath)."""
     from repro.kernels.w4a8_mm import unpack_int4
@@ -77,31 +85,90 @@ def dequant_weight(leaf):
     return unpack_int4(leaf["packed"]).astype(leaf["scale"].dtype) * leaf["scale"]
 
 
-def packed_linear(x, leaf, *, p_inner: int = 16, assert_inner: bool = False):
+def leaf_spec(leaf):
+    """The :class:`~repro.quant.spec.DatapathSpec` governing a packed leaf.
+
+    Trace-safe: only the static ``spec`` node is consulted (the ``spec_arr``
+    array twin is for persistence — decode it outside traces via
+    ``repro.quant.spec.leaf_datapath`` / ``serve_packed.ensure_datapath_spec``).
+    Legacy leaves without a spec get the default recipe datapath, which is
+    exactly the behavior they were packed under.
+    """
+    from repro.quant.spec import DatapathSpec
+
+    spec = leaf.get("spec")
+    return spec if spec is not None else DatapathSpec()
+
+
+def _static_act_codes(x2, leaf, spec):
+    """Activation codes from the artifact's calibrated static quantizer —
+    pure elementwise ops, no data-dependent max/min reduction in the graph
+    (the serving-time half of the end-to-end certificate). The code range
+    comes from the same alphabet the certificate math used
+    (repro.core.alphabet), so serving cannot diverge from certification."""
+    from repro.core.alphabet import act_alphabet
+
+    scale = leaf["act_scale"].astype(jnp.float32).reshape(())
+    zp = leaf["act_zp"].astype(jnp.float32).reshape(())
+    alpha = act_alphabet(spec.act_bits, signed=spec.act_signed)
+    codes = jnp.clip(jnp.rint(x2.astype(jnp.float32) / scale) + zp,
+                     alpha.qmin, alpha.qmax)
+    return codes.astype(jnp.int8 if spec.act_signed else jnp.uint8), scale, zp
+
+
+def packed_linear(x, leaf, *, spec=None, assert_inner: bool = False):
     """x: (..., K) @ packed leaf (K//2, N) -> (..., N), dispatched to the
     fused W4A8 kernel (kernel/interpret backends) or the in-graph dequant
     fallback. The kernel path never materializes the full bf16 weight: the
     zero-point ``col_sums`` term comes precomputed from the packed artifact
     and the int4 codes are unpacked block-by-block inside the epilogue.
 
-    ``p_inner``/``assert_inner`` thread through to the kernel, but the P_I
-    bound is only a *guarantee* for AXE-constrained codes (launch.quantize
-    artifacts) — RTN-packed leaves carry no l1 budget and can trip it.
-    NOTE: the backend is read at trace time; any jit wrapping this must put
-    the resolved ``packed_backend()`` in its cache key (GenerationEngine
-    does) or retrace when switching backends.
+    The accumulation datapath — K-tile size T, inner width P_I — and the
+    activation quantizer come from the leaf's embedded
+    :class:`~repro.quant.spec.DatapathSpec`, NOT from kwargs: the artifact
+    is the single source of truth for what was certified. Passing ``spec``
+    here is a *request*, and a request that disagrees with the artifact
+    raises :class:`~repro.quant.spec.DatapathMismatchError` instead of
+    silently preferring either side. When the artifact carries calibrated
+    ``act_scale``/``act_zp`` leaves, activations are quantized statically
+    (no dynamic per-tensor max reduction in the serving graph); otherwise
+    the dynamic ``quantize_activations`` fallback runs.
+
+    The P_I bound is only a *guarantee* for AXE-constrained codes
+    (launch.quantize artifacts) — RTN-packed leaves carry no l1 budget and
+    can trip ``assert_inner``. NOTE: the backend and the spec are read at
+    trace time; any jit wrapping this must put the resolved
+    ``packed_backend()`` and the tree's datapath fingerprint in its cache
+    key (GenerationEngine does) or retrace when either changes.
     """
+    embedded = leaf.get("spec")
+    if spec is not None and embedded is not None:
+        embedded.require_matches(spec, context="packed_linear")
+    resolved = embedded if embedded is not None else spec
+    if resolved is None:
+        resolved = leaf_spec(leaf)
+
     backend = packed_backend()
     if backend == "dequant":
-        return x @ dequant_weight(leaf)
+        y = x @ dequant_weight(leaf)
+        if "bias" in leaf:
+            y = y + leaf["bias"].reshape(-1).astype(y.dtype)
+        return y
 
-    from repro.kernels.w4a8_mm import unpack_int4, w4a8_decode_matmul
+    from repro.kernels.w4a8_mm import (
+        datapath_kernel_args,
+        unpack_int4,
+        w4a8_decode_matmul,
+    )
 
     *lead, k = x.shape
     x2 = x.reshape(-1, k)
-    from repro.kernels.ops import quantize_activations
+    if resolved.static_act and "act_scale" in leaf:
+        codes, act_scale, act_zp = _static_act_codes(x2, leaf, resolved)
+    else:
+        from repro.kernels.ops import quantize_activations
 
-    codes, act_scale, act_zp = quantize_activations(x2)
+        codes, act_scale, act_zp = quantize_activations(x2)
     col_sums = leaf.get("col_sums")
     if col_sums is None:  # legacy artifact without the pack-time term
         col_sums = jnp.sum(unpack_int4(leaf["packed"]).astype(jnp.int32), axis=-2)
@@ -112,12 +179,15 @@ def packed_linear(x, leaf, *, p_inner: int = 16, assert_inner: bool = False):
         col_sums.reshape(-1),
         act_scale,
         act_zp,
-        p_inner=p_inner,
+        **datapath_kernel_args(resolved),
         assert_inner=assert_inner,
         interpret=(backend == "interpret"),
         out_dtype=x.dtype,
     )
-    return y.reshape(*lead, y.shape[-1])
+    y = y.reshape(*lead, y.shape[-1])
+    if "bias" in leaf:
+        y = y + leaf["bias"].reshape(-1).astype(y.dtype)
+    return y
 
 
 def pmm(params, name, x):
@@ -129,6 +199,11 @@ def pmm(params, name, x):
     v = params[name]
     if is_packed(v):
         return packed_linear(x, v)
+    if is_dequant_site(v):
+        y = x @ v["w"]
+        if "bias" in v:
+            y = y + v["bias"].reshape(-1).astype(y.dtype)
+        return y
     return x @ v
 
 
@@ -208,6 +283,10 @@ def resolve_weight(params, name):
     v = params[name]
     if is_packed(v):
         return dequant_weight(v)
+    if is_dequant_site(v):
+        # NOTE: the dense weight only — callers needing the corrected bias
+        # (pmm, moe._expert_matmul) apply it at the matmul
+        return v["w"]
     return v
 
 

@@ -99,13 +99,25 @@ def _expert_matmul(params, name, xe):
     """Per-expert stacked matmul ``einsum("egcd,edf->egcf")`` with packed
     dispatch: when the (E, K//2, N) leaf is a packed artifact and the W4A8
     kernel backend is active, vmap the fused kernel over the expert axis
-    (per-expert dynamic activation quantization included) instead of
-    dequantizing the whole expert stack in-graph."""
-    from .layers import is_packed, packed_backend, packed_linear, resolve_weight
+    (activation quantization per expert — static when the leaf carries the
+    calibrated stacked ``act_scale``/``act_zp``, dynamic otherwise)
+    instead of dequantizing the whole expert stack in-graph."""
+    from .layers import (
+        is_dequant_site,
+        is_packed,
+        packed_backend,
+        packed_linear,
+        resolve_weight,
+    )
 
     leaf = params[name]
     if not (is_packed(leaf) and packed_backend() != "dequant"):
-        return jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, name))
+        out = jnp.einsum("egcd,edf->egcf", xe, resolve_weight(params, name))
+        if (is_packed(leaf) or is_dequant_site(leaf)) and "bias" in leaf:
+            # calibrated artifacts carry the bias-corrected bias (E, 1, C);
+            # apply it here too so both backends compute the same function
+            out = out + leaf["bias"][:, None].astype(out.dtype)
+        return out
     E, G, C, D = xe.shape
     out = jax.vmap(packed_linear)(xe.reshape(E, G * C, D), leaf)
     return out.reshape(E, G, C, -1)

@@ -1,3 +1,10 @@
+from .spec import (
+    ARTIFACT_VERSION,
+    DatapathMismatchError,
+    DatapathSpec,
+    tree_datapath_fingerprint,
+    validate_datapath,
+)
 from .pipeline import (
     QuantizedBlock,
     QuantizedComponent,
@@ -9,6 +16,9 @@ from .pipeline import (
 )
 
 __all__ = [
+    "ARTIFACT_VERSION",
+    "DatapathMismatchError",
+    "DatapathSpec",
     "QuantizedBlock",
     "QuantizedComponent",
     "QuantizedModel",
@@ -16,4 +26,6 @@ __all__ = [
     "float_ppl",
     "quantized_forward",
     "quantized_ppl",
+    "tree_datapath_fingerprint",
+    "validate_datapath",
 ]

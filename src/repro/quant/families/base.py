@@ -60,6 +60,14 @@ class SiteSpec:
     the bias-corrected bias is applied when the quantized site is evaluated
     (the pipeline convention: only the output-side projection of each
     component carries the correction at runtime).
+
+    ``datapath`` is an optional per-site
+    :class:`~repro.quant.spec.DatapathSpec` override; sites that leave it
+    None get the recipe-wide spec specialized to their depth via
+    :meth:`datapath_for` (P_O depends on K, so it is *always* per-site).
+    Expert-stacked sites share one datapath across the stack — their
+    activation-quantizer *scales* stack per expert in the packed artifact,
+    the accumulator shape does not.
     """
 
     name: str
@@ -68,6 +76,17 @@ class SiteSpec:
     c: int
     stacked: int | None = None
     use_bias: bool = False
+    datapath: "object | None" = None
+
+    def datapath_for(self, ptq) -> "object":
+        """Resolve this site's serving datapath: the explicit override if
+        one was attached, else ``ptq.to_datapath_spec`` at this site's
+        reduction depth (``ptq`` may be a PTQConfig or a DatapathSpec)."""
+        if self.datapath is not None:
+            return self.datapath
+        if hasattr(ptq, "to_datapath_spec"):
+            return ptq.to_datapath_spec(self.k)
+        return ptq
 
 
 @dataclass

@@ -137,6 +137,12 @@ class QuantizedModel:
             for name, ql in b.quantized_linears():
                 yield f"layer{i}/{name}", ql
 
+    def datapath_specs(self) -> dict:
+        """{"layer3/ffn.wd": DatapathSpec} — the per-site serving datapaths
+        this model was certified for (static act quantizers included).
+        This is what the packed artifact embeds; see repro.quant.spec."""
+        return {name: ql.spec for name, ql in self.quantized_linears()}
+
     @property
     def certified(self) -> bool:
         for _, ql in self.quantized_linears():

@@ -1,12 +1,20 @@
 """Packed-int4 serving parameters (the §Perf-3 / beyond-paper decode path).
 
-``pack_decode_params`` transforms a model's layer weights into
-{"packed": (..., K/2, N) int8, "scale": (..., 1, N)} leaves; the model
-layers dequantize transparently via ``resolve_weight``. Decode at large
-batch is weight-traffic-bound, so int4 packing cuts the dominant HBM term
-~4x vs bf16 (the paper's W4A8 + AXE certificate is what makes the
-low-precision *accumulation* of this datapath safe — see
+``pack_decode_params`` transforms a model's layer weights into packed
+artifact leaves; the model layers dequantize transparently via
+``resolve_weight`` or ride the fused W4A8 kernel via ``packed_linear``.
+Decode at large batch is weight-traffic-bound, so int4 packing cuts the
+dominant HBM term ~4x vs bf16 (the paper's W4A8 + AXE certificate is what
+makes the low-precision *accumulation* of this datapath safe — see
 repro.kernels.w4a8_mm for the true-integer TPU kernel).
+
+Every packed leaf embeds the :class:`~repro.quant.spec.DatapathSpec` it was
+packed for — tile T, inner/outer accumulator widths, activation-quantizer
+kind — as a static ``spec`` node plus a persistable ``spec_arr`` array
+twin, and (for calibrated artifacts) the static activation quantizer as
+``act_scale``/``act_zp`` leaves. The kernel dispatch reads all of its
+accumulator knobs from the spec; nothing is re-declared as kwargs
+downstream. See docs/datapath.md for the schema and version history.
 
 Which leaves get packed is *not* hardcoded: the quantizable-site registry
 (:mod:`repro.quant.families`) enumerates every family's sites from the
@@ -18,19 +26,43 @@ high precision rather than padded.
 Works under ``jax.eval_shape`` (all ops traceable), so the 405B dry-run can
 lower the quantized decode graph without materializing weights. For real
 deployments the packed codes come from the AXE pipeline
-(repro.launch.quantize); the RTN packing here is the shape-compatible
-fallback used when no calibrated artifact is supplied.
+(:func:`serving_params_from_quantized` in memory, or
+``repro.launch.quantize`` -> :func:`packed_params_from_artifact` via disk);
+the RTN packing in ``pack_decode_params`` is the shape-compatible fallback
+used when no calibrated artifact is supplied.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.w4a8_mm import pack_int4
+from repro.kernels.w4a8_mm import pack_int4, unpack_int4
 from repro.models.config import ModelConfig
 
-from .families import check_supported, get_adapter
+from .families import SiteSpec, check_supported, get_adapter
+from .spec import (
+    ARTIFACT_VERSION,
+    DatapathMismatchError,
+    DatapathSpec,
+    is_packed_leaf,
+    leaf_datapath,
+)
+
+__all__ = [
+    "ensure_col_sums",
+    "ensure_datapath_spec",
+    "export_quantized_artifact",
+    "load_flat_artifact",
+    "pack_decode_params",
+    "packable_sites",
+    "packed_params_from_artifact",
+    "packed_weight_bytes",
+    "serving_params_from_quantized",
+    "upgrade_packed_params",
+]
 
 
 def packable_sites(cfg: ModelConfig):
@@ -49,27 +81,73 @@ def packable_sites(cfg: ModelConfig):
     return slots
 
 
-def _pack_leaf(w: jax.Array) -> dict:
+def _spec_arr_leaf(spec: DatapathSpec, lead: tuple[int, ...]) -> jax.Array:
+    """The persistable array twin of the static spec node, broadcast over
+    the leaf's leading stack axes (repeats / experts). Stored f32 — every
+    field is a small integer or an activation scale, and f32 keeps the
+    leaf dtype independent of the jax x64 flag."""
+    arr = jnp.asarray(spec.to_array(), jnp.float32)
+    return jnp.broadcast_to(arr, (*lead, arr.shape[0]))
+
+
+def _rtn_codes(w: jax.Array, w_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Round-to-nearest integer codes + per-channel scales for a
+    (..., K, N) weight, via the same symmetric alphabet/quantizer the
+    calibration path uses (repro.core.quantizers) — stack-aware (the
+    channel reduction runs over axis -2) and with the serving-side 1e-8
+    scale floor."""
+    from repro.core.alphabet import weight_alphabet
+    from repro.core.quantizers import quantize_int, weight_scales
+
+    alpha = weight_alphabet(w_bits)
+    scale = weight_scales(w.astype(jnp.float32), alpha, axis=-2, eps=1e-8)
+    return quantize_int(w.astype(jnp.float32) / scale, alpha), scale
+
+
+def _pack_leaf(w: jax.Array, spec: DatapathSpec | None = None) -> dict:
     """(..., K, N) -> packed int4 + per-channel scale (stack-aware: leading
     repeat/expert axes pass straight through). ``col_sums`` is the
     per-channel sum of int4 codes over K, precomputed here once so the
     decode kernel's zero-point correction never needs a full
     ``unpack_int4`` of the weights at serving time (repro.kernels.w4a8_mm
-    epilogue: corr[n] = act_zp * col_sums[n])."""
-    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) / 7.0
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.rint(w.astype(jnp.float32) / scale), -7, 7)
+    epilogue: corr[n] = act_zp * col_sums[n]). The leaf embeds ``spec``
+    (static node + ``spec_arr`` array twin); RTN packing never ships
+    static activation quantizers — those come from calibration
+    (:func:`serving_params_from_quantized`) — so ``static_act`` is cleared
+    here: the embedded record must describe the datapath this leaf
+    actually serves, not the one the caller wished for."""
+    from dataclasses import replace
+
+    spec = replace((spec or DatapathSpec()).leaf_spec(), static_act=False)
+    if spec.w_bits > 4:
+        # pack_int4 would mask codes to 4 bits and silently corrupt the
+        # weights — callers must keep such sites in high precision
+        # (pack_decode_params / _site_rec_leaf fall back to a dequantized
+        # float leaf)
+        raise ValueError(
+            f"int4 packing supports w_bits <= 4, got {spec.w_bits}; "
+            f"serve this site as a high-precision leaf instead"
+        )
+    q, scale = _rtn_codes(w, spec.w_bits)
+    lead = w.shape[:-2]
     return {
         "packed": pack_int4(q),
         "scale": scale.astype(jnp.bfloat16),
         "col_sums": jnp.sum(q, axis=-2, keepdims=True).astype(jnp.int32),
+        "spec": spec,
+        "spec_arr": _spec_arr_leaf(spec, lead),
     }
 
 
-def pack_decode_params(params, cfg: ModelConfig):
+def pack_decode_params(params, cfg: ModelConfig, ptq=None):
     """Replace every registered quantizable-site weight with its packed
-    artifact. Raises NotImplementedError (listing the registry) when the
-    pattern contains a component with no family adapter."""
+    artifact (RTN codes — the shape-compatible fallback when no calibrated
+    artifact is supplied). ``ptq`` (a :class:`~repro.core.PTQConfig` or a
+    base :class:`~repro.quant.spec.DatapathSpec`) selects the datapath each
+    leaf is stamped with, specialized per site depth via
+    ``SiteSpec.datapath_for``; default is the recipe datapath. Raises
+    NotImplementedError (listing the registry) when the pattern contains a
+    component with no family adapter."""
     check_supported(cfg)
     new_layers = []
     for slot_params, slot_sites in zip(params["layers"], packable_sites(cfg)):
@@ -77,10 +155,23 @@ def pack_decode_params(params, cfg: ModelConfig):
         for kind in ("mixer", "ffn"):
             if kind not in new_slot:
                 continue
-            packable = {s.path[-1] for s in slot_sites[kind]}
+            by_name = {s.path[-1]: s for s in slot_sites[kind]}
+
+            def leaf_for(k, v):
+                if k not in by_name:
+                    return v
+                site = by_name[k]
+                spec = (site.datapath_for(ptq) if ptq is not None
+                        else site.datapath) or DatapathSpec()
+                if spec.w_bits > 4:
+                    # no int4 container for these codes: serve the site as
+                    # an RTN-dequantized high-precision leaf instead
+                    q, s = _rtn_codes(v, spec.w_bits)
+                    return (q * s).astype(v.dtype)
+                return _pack_leaf(v, spec)
+
             new_slot[kind] = {
-                k: (_pack_leaf(v) if k in packable else v)
-                for k, v in slot_params[kind].items()
+                k: leaf_for(k, v) for k, v in slot_params[kind].items()
             }
         new_layers.append(new_slot)
     return {
@@ -90,13 +181,280 @@ def pack_decode_params(params, cfg: ModelConfig):
     }
 
 
+# ---------------------------------------------------------------------------
+# Calibrated artifacts: QuantizedModel -> serving tree, and the disk format
+# ---------------------------------------------------------------------------
+def _site_rec_leaf(recs: list[dict], site: SiteSpec, name: str):
+    """Stack per-repeat site records into one serving leaf.
+
+    Each record: {"q": (…, K, C) int8-valued codes, "scale": (…, 1, C),
+    "spec": DatapathSpec (with act numerics), "bias": optional}. Returns a
+    packed leaf dict, or a plain dequantized float array when the site
+    cannot ride the int4 datapath (w_bits > 4 / odd K).
+    """
+    spec0 = recs[0]["spec"]
+    for r, rec in enumerate(recs):
+        if not spec0.matches(rec["spec"]):
+            raise DatapathMismatchError(
+                f"site {name}: repeat 0 certified {spec0.describe()} but "
+                f"repeat {r} certified {rec['spec'].describe()} — one leaf "
+                f"cannot serve two datapaths"
+            )
+    if spec0.w_bits > 4 or site.k % 2 != 0:
+        # no int4 container (wide codes / odd K): serve the dequantized
+        # weight in high precision. The corrected bias is part of the
+        # certified function, so it rides along in a {"w", "bias"} leaf
+        # (repro.models.layers.pmm dispatches it) instead of being dropped.
+        w_q = jnp.stack(
+            [jnp.asarray(r["q"], jnp.float32) * jnp.asarray(r["scale"], jnp.float32)
+             for r in recs]
+        )
+        if site.use_bias and recs[0].get("bias") is not None:
+            return {
+                "w": w_q,
+                "bias": jnp.stack(
+                    [jnp.asarray(r["bias"], jnp.float32) for r in recs]
+                ),
+            }
+        return w_q
+    lead = (len(recs),) + ((site.stacked,) if site.stacked else ())
+    q = jnp.stack([jnp.asarray(r["q"], jnp.float32) for r in recs])
+    leaf = {
+        "packed": pack_int4(q),
+        "scale": jnp.stack([jnp.asarray(r["scale"], jnp.float32) for r in recs]),
+        "col_sums": jnp.sum(q, axis=-2, keepdims=True).astype(jnp.int32),
+        "spec": spec0.leaf_spec(),
+        "spec_arr": jnp.stack(
+            [
+                jnp.broadcast_to(
+                    arr := jnp.asarray(r["spec"].to_array(), jnp.float32),
+                    (*lead[1:], arr.shape[0]),
+                )
+                for r in recs
+            ]
+        ),
+    }
+    if spec0.static_act:
+        # stacked scales: one scalar per repeat, broadcast per expert for
+        # MoE stacks so the vmapped kernel maps a per-expert quantizer
+        leaf["act_scale"] = jnp.stack(
+            [jnp.full(lead[1:], r["spec"].act_scale, jnp.float32) for r in recs]
+        )
+        leaf["act_zp"] = jnp.stack(
+            [jnp.full(lead[1:], float(r["spec"].act_zp), jnp.float32) for r in recs]
+        )
+    if site.use_bias and recs[0].get("bias") is not None:
+        leaf["bias"] = jnp.stack(
+            [jnp.asarray(r["bias"], jnp.float32) for r in recs]
+        )
+    return leaf
+
+
+def _set_path(tree: dict, path: tuple[str, ...], value) -> None:
+    d = tree
+    for key in path[:-1]:
+        d[key] = dict(d[key])
+        d = d[key]
+    d[path[-1]] = value
+
+
+def serving_params_from_quantized(qm) -> dict:
+    """Build the packed serving tree straight from a calibrated
+    :class:`~repro.quant.QuantizedModel` — codes, per-channel scales,
+    *static* activation quantizers, corrected biases and the per-site
+    :class:`~repro.quant.spec.DatapathSpec`, with no kwarg re-specification
+    anywhere downstream. Float leaves (norms — equalization-folded —
+    routers, conv/SSM parameters) come from the quantized model too, so
+    the tree is faithful to what calibration certified."""
+    cfg = qm.cfg
+    new_layers = []
+    for s in range(cfg.period):
+        blocks = [qm.blocks[r * cfg.period + s] for r in range(cfg.repeats)]
+        slot: dict = {}
+        for norm_name in ("norm1", "norm2"):
+            norms = [getattr(b, norm_name) for b in blocks]
+            if norms[0] is not None:
+                slot[norm_name] = {
+                    k: jnp.stack([jnp.asarray(n[k]) for n in norms])
+                    for k in norms[0]
+                }
+        for kind in ("mixer", "ffn"):
+            comps = [getattr(b, kind) for b in blocks]
+            if comps[0] is None:
+                continue
+            out = {
+                k: jnp.stack([jnp.asarray(c.params[k]) for c in comps])
+                for k, v in comps[0].params.items()
+                if v is not None
+            }
+            for site in comps[0].specs.values():
+                recs = [
+                    {
+                        "q": c.linears[site.name].q_int,
+                        "scale": c.linears[site.name].scale,
+                        "spec": c.linears[site.name].spec,
+                        "bias": c.linears[site.name].bias,
+                    }
+                    for c in comps
+                ]
+                _set_path(out, site.path,
+                          _site_rec_leaf(recs, site, f"slot{s}/{kind}.{site.name}"))
+            slot[kind] = out
+        new_layers.append(slot)
+    return {
+        "embedding": qm.embedding,
+        "layers": tuple(new_layers),
+        "final_norm": qm.final_norm,
+    }
+
+
+def export_quantized_artifact(qm) -> tuple[dict, dict]:
+    """Flatten a calibrated QuantizedModel into the versioned on-disk
+    artifact: {"layer{i}/{kind}.{site}/{q,scale,bias,spec}"} numpy leaves
+    plus the equalization-touched float leaves (norms, MoE routers), and a
+    meta dict carrying the schema version. Codes are stored raw int8
+    (packing happens at load, where the serving layout is known)."""
+    artifact: dict[str, np.ndarray] = {}
+    for name, ql in qm.quantized_linears():
+        artifact[f"{name}/q"] = np.asarray(ql.q_int, np.int8)
+        artifact[f"{name}/scale"] = np.asarray(ql.scale, np.float32)
+        if ql.bias is not None:
+            artifact[f"{name}/bias"] = np.asarray(ql.bias, np.float32)
+        spec = ql.spec if ql.spec is not None else ql.cfg.to_datapath_spec(
+            ql.q_int.shape[-2], ql.act
+        )
+        artifact[f"{name}/spec"] = spec.to_array()
+    for i, b in enumerate(qm.blocks):
+        for norm_name in ("norm1", "norm2"):
+            nrm = getattr(b, norm_name)
+            if nrm is not None:
+                for k, v in nrm.items():
+                    artifact[f"layer{i}/{norm_name}/{k}"] = np.asarray(v)
+        # the MoE router consumes the equalized input: its folded weights
+        # must travel with the artifact or routing diverges at serving
+        if b.ffn is not None and b.ffn.params.get("router") is not None:
+            artifact[f"layer{i}/ffn.float/router"] = np.asarray(
+                b.ffn.params["router"]
+            )
+    meta = {
+        "artifact_version": ARTIFACT_VERSION,
+        "arch": qm.cfg.name,
+        "n_layers": qm.cfg.n_layers,
+    }
+    return artifact, meta
+
+
+def load_flat_artifact(directory: str) -> tuple[dict, dict]:
+    """Template-free load of a flat artifact directory written by
+    ``repro.checkpoint.save_pytree`` on a flat dict: parse the manifest
+    directly instead of requiring a matching target pytree."""
+    import json
+    import os
+
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for entry in manifest["leaves"]:
+        name = entry["name"]
+        # keystr of a flat string key: "['layer0/mixer.wq/q']"
+        if name.startswith("['") and name.endswith("']"):
+            name = name[2:-2]
+        flat[name] = np.load(os.path.join(directory, entry["file"]))
+    return flat, manifest.get("meta", {})
+
+
+def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
+                                meta: dict | None = None):
+    """Rebuild the packed serving tree from a saved AXE artifact.
+
+    ``params`` supplies the high-precision leaves the artifact does not
+    carry (embedding, non-equalized component floats); quantized sites,
+    norms and routers are overridden from the artifact. Validates the
+    artifact schema version loudly — a mismatched or unversioned artifact
+    raises :class:`~repro.quant.spec.DatapathMismatchError` instead of
+    being served with guessed semantics.
+    """
+    if meta is not None:
+        v = meta.get("artifact_version")
+        if v != ARTIFACT_VERSION:
+            raise DatapathMismatchError(
+                f"artifact schema version {v!r} != supported "
+                f"{ARTIFACT_VERSION}; re-export with repro.launch.quantize "
+                f"(see docs/datapath.md for the version history)"
+            )
+        for field, want in (("arch", cfg.name), ("n_layers", cfg.n_layers)):
+            got = meta.get(field)
+            if got is not None and got != want:
+                raise DatapathMismatchError(
+                    f"artifact was exported for {field}={got!r} but the "
+                    f"serving config is {field}={want!r} — an arch-"
+                    f"mismatched artifact would silently serve float "
+                    f"weights instead of the certified codes"
+                )
+    check_supported(cfg)
+    n_sites_loaded = 0
+    new_layers = []
+    for s, pattern_spec in enumerate(cfg.pattern):
+        slot = dict(params["layers"][s])
+        layer_ids = [r * cfg.period + s for r in range(cfg.repeats)]
+        for norm_name in ("norm1", "norm2"):
+            key0 = f"layer{layer_ids[0]}/{norm_name}/w"
+            if key0 in flat and norm_name in slot:
+                slot[norm_name] = {
+                    k: jnp.stack([
+                        jnp.asarray(flat[f"layer{i}/{norm_name}/{k}"])
+                        for i in layer_ids
+                    ])
+                    for k in slot[norm_name]
+                }
+        for kind, fam in (("mixer", pattern_spec.mixer), ("ffn", pattern_spec.ffn)):
+            if fam == "none" or kind not in slot:
+                continue
+            out = dict(slot[kind])
+            if f"layer{layer_ids[0]}/ffn.float/router" in flat and kind == "ffn":
+                out["router"] = jnp.stack([
+                    jnp.asarray(flat[f"layer{i}/ffn.float/router"])
+                    for i in layer_ids
+                ])
+            for site in get_adapter(kind, fam).enumerate_sites(cfg):
+                names = [f"layer{i}/{kind}.{site.name}" for i in layer_ids]
+                if f"{names[0]}/q" not in flat:
+                    continue  # site absent from this artifact: keep float
+                recs = [
+                    {
+                        "q": flat[f"{n}/q"],
+                        "scale": flat[f"{n}/scale"],
+                        "spec": DatapathSpec.from_array(flat[f"{n}/spec"]),
+                        "bias": flat.get(f"{n}/bias"),
+                    }
+                    for n in names
+                ]
+                _set_path(out, site.path, _site_rec_leaf(recs, site, names[0]))
+                n_sites_loaded += 1
+            slot[kind] = out
+        new_layers.append(slot)
+    if n_sites_loaded == 0:
+        raise DatapathMismatchError(
+            "no quantized site in the artifact matched this model config — "
+            "refusing to silently serve the float weights (wrong --arch, "
+            "or an empty/foreign artifact directory?)"
+        )
+    return {
+        "embedding": params["embedding"],
+        "layers": tuple(new_layers),
+        "final_norm": params["final_norm"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Legacy-artifact upgrade shims (one-time, outside any trace)
+# ---------------------------------------------------------------------------
 def ensure_col_sums(params):
     """Fill the pack-time ``col_sums`` term into packed leaves that predate
     it (artifacts packed before the decode-kernel PR). One full unpack per
     leaf, once, outside any trace — the alternative (the in-graph fallback
     in ``packed_linear``) re-reads the whole weight on every decode step.
     Float trees pass through untouched."""
-    from repro.kernels.w4a8_mm import unpack_int4
 
     def fix(node):
         if isinstance(node, dict):
@@ -114,19 +472,89 @@ def ensure_col_sums(params):
     return fix(params)
 
 
-def packed_weight_bytes(cfg: ModelConfig) -> dict:
-    """Analytic per-step weight traffic for the roofline correction:
-    bf16 baseline vs fused-dequant packed int4 (what the w4a8_mm kernel
-    realizes on TPU — the in-graph dequant here would otherwise be charged
-    at unfused bf16 rates by the HLO byte parser). Site-enumeration-driven,
-    so MoE/SSM/xLSTM stacks are counted too."""
-    per_pattern = 0
+def ensure_datapath_spec(params, default: DatapathSpec | None = None):
+    """Attach a :class:`DatapathSpec` to packed leaves that predate the
+    spec schema: decoded from the leaf's ``spec_arr`` array twin when one
+    survived an array-only round trip, else ``default`` (the recipe
+    datapath, stamped with the legacy schema version so the upgrade is
+    visible). Runs once, outside any trace; complete leaves pass through
+    with their spec object untouched."""
+
+    def fix(node):
+        if isinstance(node, dict):
+            if is_packed_leaf(node) and "spec" not in node:
+                spec = leaf_datapath(node)  # decodes spec_arr when present
+                if spec is not None:
+                    # the array twin is authoritative (it may carry
+                    # per-repeat act numerics); only the static node is
+                    # rebuilt, in its numerics-free leaf form so the
+                    # treedef matches a natively packed leaf
+                    return {**node, "spec": spec.leaf_spec()}
+                from dataclasses import replace
+
+                spec = replace(
+                    (default or DatapathSpec()).leaf_spec(),
+                    version=1 if "col_sums" in node else 0,
+                )
+                lead = node["packed"].shape[:-2]
+                return {**node, "spec": spec,
+                        "spec_arr": _spec_arr_leaf(spec, lead)}
+            return {k: fix(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(fix(v) for v in node)
+        return node
+
+    return fix(params)
+
+
+def upgrade_packed_params(params, default: DatapathSpec | None = None):
+    """The full legacy-artifact upgrade: ``ensure_datapath_spec`` +
+    ``ensure_col_sums``. The spec shim runs first so the stamped legacy
+    version reflects the schema the leaf actually arrived with (a
+    pre-col_sums leaf is v0, not "v1 because the other shim already ran").
+    Idempotent on complete artifacts (leaf arrays and spec nodes pass
+    through by identity)."""
+    return ensure_col_sums(ensure_datapath_spec(params, default))
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+def packed_weight_bytes(cfg: ModelConfig, *, scale_bytes_per: int = 2,
+                        static_act: bool = False,
+                        with_bias: bool = False) -> dict:
+    """Analytic per-step artifact traffic for the roofline correction:
+    bf16 baseline vs the full packed artifact (codes + per-channel scale +
+    ``col_sums`` zero-point term + spec twin + optional static-act and
+    bias leaves). Site-enumeration-driven, so MoE/SSM/xLSTM stacks are
+    counted too. Defaults describe the RTN ``pack_decode_params`` tree
+    (bf16 scales, dynamic act, no bias); calibrated trees
+    (:func:`serving_params_from_quantized`) use f32 scales, static act and
+    biases on the output projections."""
+    elems = code = scale = col = spec_b = act = bias = 0
     for slot in packable_sites(cfg):
         for kind in ("mixer", "ffn"):
-            per_pattern += sum(s.k * s.c * (s.stacked or 1) for s in slot[kind])
-    elems = per_pattern * cfg.repeats
+            for s in slot[kind]:
+                st = s.stacked or 1
+                elems += s.k * s.c * st
+                code += s.k * s.c * st // 2  # int8 byte holds 2 codes
+                scale += s.c * st * scale_bytes_per
+                col += s.c * st * 4  # int32
+                spec_b += st * 10 * 4  # f32 spec_arr twin
+                if static_act:
+                    act += st * (4 + 4)  # f32 act_scale + act_zp
+                if with_bias and s.use_bias:
+                    bias += s.c * st * 4
+    r = cfg.repeats
+    total = (code + scale + col + spec_b + act + bias) * r
     return {
-        "weight_elems": elems,
-        "bf16_bytes": 2 * elems,
-        "packed_bytes": elems // 2,
+        "weight_elems": elems * r,
+        "bf16_bytes": 2 * elems * r,
+        "packed_code_bytes": code * r,
+        "scale_bytes": scale * r,
+        "col_sums_bytes": col * r,
+        "spec_bytes": spec_b * r,
+        "act_bytes": act * r,
+        "bias_bytes": bias * r,
+        "packed_bytes": total,
     }

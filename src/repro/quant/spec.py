@@ -1,0 +1,283 @@
+"""First-class serving-datapath description: :class:`DatapathSpec`.
+
+The paper's guarantee is about a *datapath*, not a weight tensor: AXE
+certifies that a site's integer codes never overflow a multi-stage
+accumulator of tile size T feeding P_I-bit inner registers that drain into
+a P_O-bit outer register (Eq. 22), against a *specific* activation
+quantizer. A2Q/A2Q+ (arXiv 2308.13504, 2401.10432) make the same point for
+QAT: the certificate only transfers to serving when the serving datapath
+matches what calibration certified.
+
+Before this module, that description was smeared across the codebase —
+``PTQConfig`` held (w_bits, act_bits, tile, p_bits) at calibration time,
+``packed_linear`` re-declared ``p_inner=16`` as a loose kwarg, and the
+packed artifact carried no record at all. ``DatapathSpec`` is the single
+serializable record that travels from ``calibrate_and_quantize`` through
+the packed artifact into the kernel dispatch:
+
+  * produced per site by :meth:`repro.core.PTQConfig.to_datapath_spec`
+    (P_O derived from the site's reduction depth K);
+  * embedded in every packed leaf twice: as a **static** pytree node
+    (``leaf["spec"]`` — zero array leaves, registered via
+    ``jax.tree_util.register_static``, so a spec change changes the
+    treedef and any jit retraces) and as a tiny array leaf
+    (``leaf["spec_arr"]`` — survives array-only round trips such as
+    checkpoint save/restore; :func:`repro.quant.serve_packed.
+    ensure_datapath_spec` rebuilds the static node from it);
+  * consumed by ``repro.models.layers.packed_linear`` /
+    ``repro.kernels.w4a8_mm``: the K-tile size (``block_k``), the inner
+    accumulator width and the activation quantizer all come from the spec
+    instead of call-site kwargs.
+
+Artifact schema versions (see docs/datapath.md):
+
+  * v0 — ``{packed, scale}`` (pre decode-kernel);
+  * v1 — ``+ col_sums`` (pack-time zero-point term, PR 2);
+  * v2 — ``+ spec / spec_arr`` and, for calibrated artifacts,
+    ``+ act_scale / act_zp`` static activation quantizers (this PR).
+
+This module is intentionally dependency-free inside the repo (stdlib +
+numpy + jax.tree_util only) so ``repro.core`` and ``repro.models`` can use
+it without import cycles.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, replace
+
+import numpy as np
+import jax
+
+#: Current packed-artifact schema version (see module docstring).
+ARTIFACT_VERSION = 2
+
+#: Number of float64 slots in the array encoding (``to_array``).
+_SPEC_ARR_LEN = 10
+
+
+class DatapathMismatchError(ValueError):
+    """A packed artifact and a requested serving datapath disagree.
+
+    Raised *loudly* instead of silently preferring either side: running a
+    certificate for one (T, P_I) datapath on another voids the overflow
+    guarantee (the exact failure mode A2Q warns about)."""
+
+
+@jax.tree_util.register_static
+@dataclass(frozen=True)
+class DatapathSpec:
+    """One site's certified serving datapath.
+
+    The defaults are the paper's LLM recipe (§4.2): W4A8,
+    asymmetric-unsigned activations, T=128 tiles into a 16-bit inner
+    accumulator. ``p_outer`` defaults to the 32-bit register every real
+    datapath provides; calibrated specs carry the tighter Eq. 22 value.
+
+    ``act_scale``/``act_zp`` are the *per-site record* of the calibrated
+    static activation quantizer (None => dynamic per-tensor quantization at
+    serving time). Inside a packed leaf the numeric values live in the
+    ``act_scale``/``act_zp`` *array* leaves (stacked over repeats/experts);
+    the leaf's static spec node keeps only ``static_act`` so that jit
+    retrace keys do not depend on calibration numerics — see
+    :meth:`leaf_spec`.
+    """
+
+    w_bits: int = 4
+    act_bits: int = 8
+    act_signed: bool = False
+    tile: int | None = 128  # the paper's T; None = monolithic accumulation
+    p_inner: int = 16  # P_I (monolithic P when tile is None)
+    p_outer: int = 32  # P_O of Eq. 22
+    static_act: bool = False  # artifact ships calibrated act quantizer leaves
+    act_scale: float | None = None  # per-site record; None once inside a leaf
+    act_zp: int = 0
+    version: int = ARTIFACT_VERSION
+
+    # -- identity -----------------------------------------------------------
+    def key(self) -> tuple:
+        """The datapath identity: everything the kernel dispatch depends on.
+
+        Calibration numerics are excluded (see class docstring) and so is
+        ``p_outer``: it is *derived* per site from (P_I, K, T) via Eq. 22,
+        so one requested datapath must match artifacts whose sites have
+        different depths — comparing it would make every cross-site
+        validation spuriously fail."""
+        return (self.w_bits, self.act_bits, self.act_signed, self.tile,
+                self.p_inner, self.static_act)
+
+    def spec_hash(self) -> str:
+        """Short stable hash of the datapath identity + schema version."""
+        payload = repr((self.key(), self.version)).encode()
+        return hashlib.sha1(payload).hexdigest()[:12]
+
+    def matches(self, other: "DatapathSpec") -> bool:
+        return self.key() == other.key()
+
+    def require_matches(self, other: "DatapathSpec", context: str = "") -> None:
+        if not self.matches(other):
+            where = f" ({context})" if context else ""
+            raise DatapathMismatchError(
+                f"datapath mismatch{where}: artifact certified for "
+                f"{self.describe()} but {other.describe()} was requested. "
+                f"Re-quantize for the requested datapath or drop the "
+                f"override — serving a certificate on a different datapath "
+                f"voids the overflow guarantee."
+            )
+
+    def describe(self) -> str:
+        act = "static" if self.static_act else "dynamic"
+        sign = "s" if self.act_signed else "u"
+        t = self.tile if self.tile is not None else "mono"
+        return (f"W{self.w_bits}A{self.act_bits}{sign} T={t} "
+                f"P_I={self.p_inner} P_O={self.p_outer} act={act} "
+                f"v{self.version}")
+
+    # -- derived forms ------------------------------------------------------
+    def leaf_spec(self) -> "DatapathSpec":
+        """The form embedded as a packed leaf's static node: calibration
+        numerics dropped (they live in the leaf's array leaves, stacked
+        over repeats/experts, where a single float could not represent
+        them — and a static float would needlessly retrace on repack)."""
+        return replace(self, act_scale=None, act_zp=0)
+
+    def with_act(self, scale: float, zero_point: int) -> "DatapathSpec":
+        return replace(self, static_act=True, act_scale=float(scale),
+                       act_zp=int(zero_point))
+
+    def block_k(self, default: int = 128) -> int:
+        """The kernel K-tile. ``tile=None`` (monolithic) keeps the default
+        hardware tile — any K-subset partial of an l1-budgeted row is
+        bounded by the full-K bound, so P_I remains a valid per-tile
+        certificate."""
+        return self.tile if self.tile else default
+
+    # -- serialization ------------------------------------------------------
+    def to_array(self) -> np.ndarray:
+        """Encode as a float64 vector (an ordinary checkpoint leaf).
+
+        NaN encodes None for ``tile``/``act_scale``.
+        """
+        return np.asarray(
+            [
+                float(self.version),
+                float(self.w_bits),
+                float(self.act_bits),
+                1.0 if self.act_signed else 0.0,
+                float(self.tile) if self.tile is not None else np.nan,
+                float(self.p_inner),
+                float(self.p_outer),
+                1.0 if self.static_act else 0.0,
+                float(self.act_scale) if self.act_scale is not None else np.nan,
+                float(self.act_zp),
+            ],
+            np.float64,
+        )
+
+    @classmethod
+    def from_array(cls, arr) -> "DatapathSpec":
+        a = np.asarray(arr, np.float64).reshape(-1)
+        if a.shape[0] < _SPEC_ARR_LEN:
+            raise ValueError(
+                f"spec array has {a.shape[0]} slots, expected {_SPEC_ARR_LEN}"
+            )
+        return cls(
+            version=int(a[0]),
+            w_bits=int(a[1]),
+            act_bits=int(a[2]),
+            act_signed=bool(a[3]),
+            tile=None if np.isnan(a[4]) else int(a[4]),
+            p_inner=int(a[5]),
+            p_outer=int(a[6]),
+            static_act=bool(a[7]),
+            act_scale=None if np.isnan(a[8]) else float(a[8]),
+            act_zp=int(a[9]),
+        )
+
+
+def is_packed_leaf(node) -> bool:
+    """Structural test for a packed-artifact leaf dict."""
+    return isinstance(node, dict) and "packed" in node
+
+
+def leaf_datapath(leaf: dict) -> DatapathSpec | None:
+    """The spec carried by a packed leaf: the static node when present,
+    else decoded from the ``spec_arr`` array leaf, else None (legacy)."""
+    spec = leaf.get("spec")
+    if spec is not None:
+        return spec
+    arr = leaf.get("spec_arr")
+    if arr is not None:
+        flat = np.asarray(jax.device_get(arr), np.float64)
+        # stacked (R, ...) / (R, E, ...) leaves broadcast the same spec
+        return DatapathSpec.from_array(flat.reshape(-1, _SPEC_ARR_LEN)[0])
+    return None
+
+
+def tree_datapath_fingerprint(tree) -> str:
+    """One stable hash over every packed leaf's datapath in a params tree.
+
+    The serving engine threads this through its jits as a *static* argument
+    so that swapping artifacts with a different certified datapath retraces
+    instead of silently reusing the previously compiled program (same
+    contract as the packed-backend static arg).
+    """
+    hashes: list[str] = []
+
+    def walk(node):
+        if is_packed_leaf(node):
+            spec = leaf_datapath(node)
+            hashes.append(spec.spec_hash() if spec else "legacy")
+            hashes.append("+static" if "act_scale" in node else "-static")
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k])
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return hashlib.sha1("|".join(hashes).encode()).hexdigest()[:16]
+
+
+def validate_datapath(tree, expected: DatapathSpec) -> int:
+    """Check every packed leaf in ``tree`` against ``expected`` (datapath
+    identity only). Returns the number of packed leaves checked; raises
+    :class:`DatapathMismatchError` on the first disagreement. Legacy leaves
+    (no spec) are a mismatch too — absence of a record is not a match."""
+    checked = 0
+
+    def walk(node, path):
+        nonlocal checked
+        if is_packed_leaf(node):
+            spec = leaf_datapath(node)
+            if spec is None:
+                raise DatapathMismatchError(
+                    f"packed leaf at {path} carries no DatapathSpec (legacy "
+                    f"artifact) but {expected.describe()} was requested; run "
+                    f"repro.quant.serve_packed.ensure_datapath_spec first"
+                )
+            spec.require_matches(expected, context=path)
+            checked += 1
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], f"{path}/{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}[{i}]")
+
+    walk(tree, "params")
+    return checked
+
+
+__all__ = [
+    "ARTIFACT_VERSION",
+    "DatapathMismatchError",
+    "DatapathSpec",
+    "is_packed_leaf",
+    "leaf_datapath",
+    "tree_datapath_fingerprint",
+    "validate_datapath",
+]

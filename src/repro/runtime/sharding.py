@@ -229,21 +229,31 @@ _W4 = {
 }
 
 
+_PACKED_LEAF_SUFFIXES = (
+    "packed", "scale", "col_sums", "bias", "act_scale", "act_zp", "spec_arr",
+)
+#: packed-leaf members that are tiny per-site metadata (static activation
+#: quantizer scalars, the serialized DatapathSpec twin): always replicated
+_REPLICATED_SUFFIXES = ("act_scale", "act_zp", "spec_arr")
+
+
 def _leaf_logical_names(path, leaf) -> tuple:
     keys = [e.key for e in path if hasattr(e, "key")]
     name = keys[-1] if keys else None
-    # packed-int4 serving artifacts: {"packed", "scale", "col_sums"} under
-    # the weight name
+    # packed-int4 serving artifacts: {"packed", "scale", "col_sums",
+    # "bias", "act_scale", "act_zp", "spec_arr"} under the weight name
     suffix = None
-    if name in ("packed", "scale", "col_sums") and len(keys) >= 2:
+    if name in _PACKED_LEAF_SUFFIXES and len(keys) >= 2:
         suffix, name = name, keys[-2]
+    if suffix in _REPLICATED_SUFFIXES:
+        return (None,) * leaf.ndim
     ndim = leaf.ndim
     stacked = _is_stacked(path)
     base = ndim - (1 if stacked else 0)
     table = {1: _W1, 2: _W2, 3: _W3, 4: _W4}.get(base, {})
     names = table.get(name, (None,) * base)
-    if suffix in ("scale", "col_sums"):
-        # (1, N) per-channel vectors: shard only the channel dim
+    if suffix in ("scale", "col_sums", "bias"):
+        # (1, N) / (N,) per-channel vectors: shard only the channel dim
         names = (None,) * (base - 1) + (names[-1] if names else None,)
     if stacked:
         names = (None, *names)  # leading repeats axis: never sharded

@@ -30,7 +30,8 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.layers import packed_backend, use_packed_backend
 from repro.models.transformer import decode_step, prefill
-from repro.quant.serve_packed import ensure_col_sums
+from repro.quant.serve_packed import upgrade_packed_params
+from repro.quant.spec import tree_datapath_fingerprint, validate_datapath
 
 
 @dataclass(frozen=True)
@@ -48,11 +49,21 @@ def _sample(logits, temperature: float, key):
 
 
 class GenerationEngine:
-    def __init__(self, params, cfg: ModelConfig, sampler: SamplerConfig = SamplerConfig()):
-        # pre-PR packed artifacts lack the pack-time col_sums term; fill it
-        # in ONCE here so the traced decode graph never re-derives it from
-        # a full unpack_int4 of the weights on every step
-        self.params = ensure_col_sums(params)
+    def __init__(self, params, cfg: ModelConfig, sampler: SamplerConfig = SamplerConfig(),
+                 datapath=None):
+        # legacy packed artifacts are upgraded ONCE here (pack-time
+        # col_sums term + embedded DatapathSpec) so the traced decode graph
+        # never re-derives either from a full unpack_int4 per step
+        self.params = upgrade_packed_params(params)
+        if datapath is not None:
+            # loud end-to-end check: serving a certificate on a different
+            # datapath than requested voids the overflow guarantee
+            validate_datapath(self.params, datapath)
+        #: aggregate hash of every packed leaf's DatapathSpec — a *static*
+        #: argument of every jit below, so swapping in an artifact with a
+        #: different certified datapath (tile, P_I, static-vs-dynamic act)
+        #: retraces instead of silently reusing the old program
+        self.datapath_fingerprint = tree_datapath_fingerprint(self.params)
         self.cfg = cfg
         self.sampler = sampler
         #: number of times the fused generate program was (re)traced —
@@ -63,8 +74,9 @@ class GenerationEngine:
         # threaded through every jit below as a static arg — switching
         # backends (use_packed_backend / REPRO_PACKED_BACKEND) between
         # calls retraces instead of silently reusing the old graph
-        @partial(jax.jit, static_argnames=("temperature", "backend"))
-        def _step(params, tokens, cache, index, key, temperature, backend):
+        @partial(jax.jit, static_argnames=("temperature", "backend", "datapath"))
+        def _step(params, tokens, cache, index, key, temperature, backend,
+                  datapath):
             with use_packed_backend(backend):
                 logits, cache = decode_step(params, tokens, cache, index, cfg)
                 nxt = _sample(logits[:, -1], temperature, key)
@@ -73,15 +85,15 @@ class GenerationEngine:
         self._step = _step
         self._prefill_cache = {}
 
-        @partial(jax.jit, static_argnames=("max_new", "backend"))
-        def _gen(params, prompts, max_new, backend):
+        @partial(jax.jit, static_argnames=("max_new", "backend", "datapath"))
+        def _gen(params, prompts, max_new, backend, datapath):
             with use_packed_backend(backend):
                 return self._gen_impl(params, prompts, max_new)
 
         self._gen = _gen
 
     def _get_prefill(self, max_len: int, backend: str):
-        fn = self._prefill_cache.get((max_len, backend))
+        fn = self._prefill_cache.get((max_len, backend, self.datapath_fingerprint))
         if fn is None:
 
             def run(p, b, _ml=max_len, _be=backend):
@@ -89,7 +101,7 @@ class GenerationEngine:
                     return prefill(p, b, self.cfg, _ml)
 
             fn = jax.jit(run)
-            self._prefill_cache[(max_len, backend)] = fn
+            self._prefill_cache[(max_len, backend, self.datapath_fingerprint)] = fn
         return fn
 
     # ------------------------------------------------------------------
@@ -142,7 +154,8 @@ class GenerationEngine:
         down (the single explicit ``jax.device_get``).
         """
         out = self._gen(self.params, jnp.asarray(prompts, jnp.int32),
-                        max_new_tokens, packed_backend())
+                        max_new_tokens, packed_backend(),
+                        self.datapath_fingerprint)
         return np.asarray(jax.device_get(out))
 
     # ------------------------------------------------------------------
@@ -167,7 +180,7 @@ class GenerationEngine:
             key, sub = jax.random.split(key)
             nxt, cache = self._step(
                 self.params, nxt[:, None], cache, jnp.int32(S0 + t - 1), sub,
-                temperature, backend,
+                temperature, backend, self.datapath_fingerprint,
             )
             if eos is not None:
                 # mask + done tracking on device: no per-token np round-trip

@@ -56,10 +56,79 @@ def test_packed_param_shardings_resolve(setup):
 
 
 def test_packed_weight_bytes_accounting(setup):
-    cfg, _ = setup
+    """The analytic accounting matches the *actual* packed tree byte for
+    byte, per leaf kind — codes, per-channel scales, the col_sums
+    zero-point term and the spec twin all counted (the old accounting
+    undercounted by omitting everything but the codes)."""
+    cfg, params = setup
     wb = packed_weight_bytes(cfg)
-    assert wb["packed_bytes"] * 4 == wb["bf16_bytes"]
+    assert wb["packed_code_bytes"] * 4 == wb["bf16_bytes"]
     assert wb["weight_elems"] > 0
+    assert wb["packed_bytes"] == sum(
+        wb[k] for k in ("packed_code_bytes", "scale_bytes", "col_sums_bytes",
+                        "spec_bytes", "act_bytes", "bias_bytes")
+    )
+
+    pparams = pack_decode_params(params, cfg)
+    actual = {"packed_code_bytes": 0, "scale_bytes": 0, "col_sums_bytes": 0,
+              "spec_bytes": 0, "act_bytes": 0, "bias_bytes": 0}
+    key_map = {"packed": "packed_code_bytes", "scale": "scale_bytes",
+               "col_sums": "col_sums_bytes", "spec_arr": "spec_bytes",
+               "act_scale": "act_bytes", "act_zp": "act_bytes",
+               "bias": "bias_bytes"}
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "packed" in node:
+                for k, v in node.items():
+                    if k != "spec":
+                        actual[key_map[k]] += v.size * v.dtype.itemsize
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(pparams["layers"])
+    for k, v in actual.items():
+        assert wb[k] == v, (k, wb[k], v)
+    assert sum(actual.values()) == wb["packed_bytes"]
+
+
+def test_packed_weight_bytes_static_act_and_bias(setup):
+    """Calibrated artifacts (f32 scales, static act quantizers, corrected
+    biases on the output projections) are counted exactly too."""
+    import jax.numpy as jnp
+
+    from repro.core import PTQConfig
+    from repro.quant import calibrate_and_quantize
+    from repro.quant.serve_packed import serving_params_from_quantized
+
+    cfg, params = setup
+    batches = [{"tokens": jax.random.randint(jax.random.key(3), (2, 16), 0, 128)}]
+    qm = calibrate_and_quantize(params, cfg, batches, PTQConfig(algorithm="rtn"))
+    sp = serving_params_from_quantized(qm)
+    wb = packed_weight_bytes(cfg, scale_bytes_per=4, static_act=True,
+                             with_bias=True)
+
+    total = 0
+
+    def walk(node):
+        nonlocal total
+        if isinstance(node, dict):
+            if "packed" in node:
+                total += sum(v.size * v.dtype.itemsize
+                             for k, v in node.items() if k != "spec")
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(sp["layers"])
+    assert total == wb["packed_bytes"], (total, wb["packed_bytes"])
 
 
 def test_hybrid_family_packs_under_eval_shape():
