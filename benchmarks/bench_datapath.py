@@ -20,9 +20,6 @@ per PR, and prints the usual csv rows.
 
 from __future__ import annotations
 
-import json
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,20 +29,16 @@ from repro.models.layers import packed_linear, use_packed_backend
 from repro.quant.serve_packed import _pack_leaf
 from repro.quant.spec import DatapathSpec
 
-from .common import FAST, csv_row
+from .common import FAST, csv_row, time_min, write_bench_json
 
 SWEEP = ((64, 12), (128, 16), (256, 20))
 K, N = (512, 128) if FAST else (512, 512)
 BATCH = 2 if FAST else 4
-REPS = 2 if FAST else 5
+REPS = 5 if FAST else 7
 
 
 def _time(fn, reps: int = REPS) -> float:
-    fn()  # warm (jit compile)
-    t0 = time.time()
-    for _ in range(reps):
-        fn()
-    return (time.time() - t0) / reps
+    return time_min(fn, reps)
 
 
 def run():
@@ -116,8 +109,7 @@ def run():
     csv_row("datapath/act_quant", us_stat,
             f"dynamic_us={us_dyn:.1f};static_us={us_stat:.1f}")
 
-    with open("BENCH_datapath.json", "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench_json("BENCH_datapath.json", results)
     return results
 
 

@@ -19,9 +19,6 @@ from this PR onward, and prints the usual csv rows.
 
 from __future__ import annotations
 
-import json
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +31,7 @@ from repro.models.transformer import init_model
 from repro.quant.serve_packed import _pack_leaf, pack_decode_params
 from repro.serving import GenerationEngine, SamplerConfig
 
-from .common import FAST, csv_row
+from .common import FAST, csv_row, time_min, write_bench_json
 
 ARCHS = ["tiny-lm-xs"] if FAST else ["tiny-lm-xs", "tiny-lm-s"]
 BATCH = 2 if FAST else 4
@@ -43,16 +40,12 @@ NEW = 8 if FAST else 32
 SITE_K, SITE_N = (128, 128) if FAST else (512, 512)
 
 
-def _time(fn, reps: int = 3) -> float:
-    fn()  # warm (jit compile)
-    t0 = time.time()
-    for _ in range(reps):
-        fn()
-    return (time.time() - t0) / reps
+def _time(fn, reps: int = 5) -> float:
+    return time_min(fn, reps)
 
 
 def _engine_toks(gen, prompts, max_new) -> float:
-    dt = _time(lambda: gen(prompts, max_new), reps=2)
+    dt = _time(lambda: gen(prompts, max_new), reps=5)
     return prompts.shape[0] * max_new / dt
 
 
@@ -118,8 +111,7 @@ def run():
         f"dequant_us={site['us_dequant']:.1f};kernel_us={site['us_kernel']:.1f};"
         f"max_abs_err={site['max_abs_err']:.4f}",
     )
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench_json("BENCH_decode.json", results)
     return results
 
 

@@ -11,7 +11,7 @@ The frontier reports the best perplexity per accumulator width.
 
 from __future__ import annotations
 
-from repro.core import PTQConfig, sweep_config
+from repro.core import PTQConfig
 
 from .common import (
     FAST,

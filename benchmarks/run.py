@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline",
-           "families", "decode", "datapath")
+           "families", "decode", "datapath", "serving")
 
 
 def main(argv=None) -> None:
@@ -61,6 +61,10 @@ def main(argv=None) -> None:
                 from . import bench_datapath
 
                 bench_datapath.run()
+            elif name == "serving":
+                from . import bench_serving
+
+                bench_serving.run()
             elif name == "roofline":
                 from . import bench_roofline
 

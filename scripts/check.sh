@@ -1,67 +1,35 @@
 #!/usr/bin/env bash
-# Tier-1 verification + one tiny end-to-end quantize-and-certify smoke per
-# model family (dense, MoE, SSM, xLSTM, hybrid) through the real launcher.
+# Full local verification: tier-1 tests (slow ones included), the shared
+# smoke suite (scripts/smoke.sh — the same script CI runs), the FAST bench
+# grid, and the bench regression gate against the committed baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-echo "== tier-1: pytest =="
+echo "== tier-1: pytest (full, slow included) =="
 python -m pytest -x -q
 
-for arch in tiny-lm-xs tiny-moe tiny-ssm tiny-xlstm tiny-hybrid; do
-  echo "== PTQ smoke: ${arch} =="
-  report=$(python -m repro.launch.quantize --arch "${arch}" \
-    --calib-batches 1 --calib-batch-size 2 --seq 32 --eval-batches 1)
-  echo "${report}" | python -c '
-import json, sys
-arch = sys.argv[1]
-report = json.load(sys.stdin)
-cert = report["cert"]
-assert cert["ok"], f"{arch}: certification failed: {cert}"
-headroom = cert["min_headroom_bits"]
-ppl = report["quant_ppl"]
-print(f"{arch}: certified ok, min_headroom={headroom:.4f}, quant_ppl={ppl:.2f}")
-' "${arch}"
-done
+echo "== smoke suite (scripts/smoke.sh) =="
+scripts/smoke.sh
 
-echo "== artifact schema smoke: pack -> validate spec -> load in engine =="
-art_dir=$(mktemp -d)
-trap 'rm -rf "${art_dir}"' EXIT
-python -m repro.launch.quantize --arch tiny-lm-xs --algorithm rtn \
-  --calib-batches 1 --calib-batch-size 2 --seq 32 --eval-batches 1 \
-  --out "${art_dir}" > /dev/null
-python - "${art_dir}/quantized" <<'EOF'
-import sys
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.models.layers import use_packed_backend
-from repro.models.transformer import init_model
-from repro.quant.serve_packed import load_flat_artifact, packed_params_from_artifact
-from repro.quant.spec import ARTIFACT_VERSION, DatapathSpec, tree_datapath_fingerprint
-from repro.serving import GenerationEngine, SamplerConfig
-
-flat, meta = load_flat_artifact(sys.argv[1])
-assert meta["artifact_version"] == ARTIFACT_VERSION, meta
-specs = {k: DatapathSpec.from_array(v) for k, v in flat.items() if k.endswith("/spec")}
-assert specs and all(s.static_act for s in specs.values()), "sites missing static act quantizers"
-cfg = get_config("tiny-lm-xs")
-params = init_model(jax.random.key(0), cfg)
-pp = packed_params_from_artifact(flat, params, cfg, meta=meta)
-eng = GenerationEngine(pp, cfg, SamplerConfig(temperature=0.0))
-prompts = np.zeros((2, 4), np.int32)
-with use_packed_backend("interpret"):
-    out = eng.generate(prompts, 2)
-assert out.shape == (2, 6)
-print(f"artifact schema ok: v{meta['artifact_version']}, {len(specs)} site specs, "
-      f"datapath={tree_datapath_fingerprint(pp)}")
-EOF
-
-echo "== decode + datapath bench smoke (REPRO_BENCH_FAST grid) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.run --only decode,datapath
+echo "== decode + datapath + serving bench smoke (REPRO_BENCH_FAST grid) =="
+bench_base=$(mktemp -d)
+trap 'rm -rf "${bench_base}"' EXIT
+cp BENCH_*.json "${bench_base}/"
+REPRO_BENCH_FAST=1 python -m benchmarks.run --only decode,datapath,serving
 test -f BENCH_decode.json && echo "BENCH_decode.json written"
 test -f BENCH_datapath.json && echo "BENCH_datapath.json written"
+test -f BENCH_serving.json && echo "BENCH_serving.json written"
+
+echo "== bench regression gate (scripts/bench_compare.py) =="
+# wall-clock on this class of CPU box swings 2-4x run-to-run (frequency
+# scaling / noisy neighbors) even with min-of-reps batched timing — the
+# local gate is a step-change detector on engine-scale metrics (catches
+# the 10x fell-off-the-fused-path class of regression); sub-500us
+# single-site timings are floor-skipped. Tighten both on dedicated
+# hardware.
+REPRO_BENCH_TOLERANCE="${REPRO_BENCH_TOLERANCE:-1.5}" \
+REPRO_BENCH_MIN_US="${REPRO_BENCH_MIN_US:-500}" \
+  python scripts/bench_compare.py --baseline "${bench_base}" --current .
 
 echo "== all checks passed =="

@@ -243,7 +243,6 @@ def _run(
     inv_order = jnp.argsort(order)
 
     if state is None:
-        n_tiles = 1
         C = w.shape[1]
         lam = jnp.zeros((1, C), w_int.dtype)
         A = jnp.asarray(0.0)

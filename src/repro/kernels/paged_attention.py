@@ -1,0 +1,165 @@
+"""Block-table-aware decode attention over a paged KV cache — Pallas TPU.
+
+The serving engine stores KV state in fixed-size *pages* of ``block_size``
+tokens drawn from one global pool per layer (see
+``docs/serving_scheduler.md``); a per-sequence block table maps logical
+position ``p`` to physical page ``table[b, p // block_size]``. Decode
+attention therefore cannot stream the cache contiguously — it must chase
+the block table. Two implementations share one contract:
+
+* :func:`paged_attention_reference` — gather the sequence's pages into a
+  dense ``(B, P*bs, nkv, hd)`` view and run exactly the math of
+  ``repro.models.layers.attention_decode`` (same op order, same f32
+  score path). This is the CPU/serving fallback AND the oracle: for a
+  table whose capacity equals the dense engine's ``S_max`` it is
+  bit-identical to the dense-slab path, which is what the engine golden
+  tests pin.
+* :func:`paged_decode_attention` — the Pallas kernel. Grid ``(B, P)``
+  with the page axis sequential; the block table and sequence lengths
+  ride in as *scalar prefetch* operands so each page's BlockSpec
+  index_map can dereference ``table[b, j]`` before the body runs — HBM
+  traffic per row is O(block-table width), not O(pool size). (Sentinel
+  entries past a row's length clamp to page ``nb-1`` and are fetched
+  then fully masked; skipping their DMA needs a per-row page-count grid
+  — part of the TPU-hardware validation follow-up in the ROADMAP.)
+  Scores accumulate via online
+  softmax (running max / normalizer / weighted accumulator in VMEM
+  scratch, exactly the ``_chunked_causal_attention`` recurrence), so
+  kernel-vs-reference agreement is to float tolerance, not bitwise.
+
+Validated against the reference in interpret mode over shape/raggedness
+sweeps (``tests/test_paged_attention.py``) — the same testing pattern as
+``w4a8_mm``. Compiled-mode perf is a TPU-hardware question (ROADMAP).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def paged_attention_reference(q, k_pages, v_pages, block_table, seq_lens, *,
+                              softcap=None):
+    """Gather-based paged decode attention (the oracle + CPU path).
+
+    q: (B, nh, hd) — the current token's query rows.
+    k_pages / v_pages: (num_blocks, block_size, nkv, hd) — the layer's pool.
+    block_table: (B, P) int32 — physical page per logical page; entries
+        ``>= num_blocks`` are free-slot sentinels (clamped; masked anyway).
+    seq_lens: (B,) int32 — valid positions per row (the just-written token
+        included), i.e. attend over positions ``< seq_lens[b]``.
+    """
+    B, nh, hd = q.shape
+    nb, bs, nkv, _ = k_pages.shape
+    g = nh // nkv
+    tab = jnp.minimum(block_table, nb - 1)
+    k = k_pages[tab].reshape(B, -1, nkv, hd)  # (B, P*bs, nkv, hd)
+    v = v_pages[tab].reshape(B, -1, nkv, hd)
+    qg = q.reshape(B, nkv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    s = _softcap(s / math.sqrt(hd), softcap)
+    valid = jnp.arange(k.shape[1])[None, :] < seq_lens[:, None]  # (B, P*bs)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(B, nh, hd)
+
+
+def _kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs: int, nkv: int, g: int, hd: int, n_pages: int,
+            softcap, out_dtype):
+    b, j = pl.program_id(0), pl.program_id(1)
+    nh = nkv * g
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (nh, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bs, nkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    qg = q.reshape(nkv, g, hd)
+    s = jnp.einsum("kgd,skd->kgs", qg, k).astype(jnp.float32)
+    s = _softcap(s / math.sqrt(hd), softcap)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)  # (1, bs)
+    valid = pos < lens_ref[b]
+    s = jnp.where(valid[None], s, -jnp.inf).reshape(nh, bs)
+
+    # online-softmax recurrence (the _chunked_causal_attention carry)
+    m_prev = m_ref[...]  # (nh, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)  # fully-masked rows: exp(-inf) = 0
+    corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("kgs,skd->kgd", p.reshape(nkv, g, bs), v)
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(nh, hd)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _epilogue():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           softcap: float | None = None,
+                           interpret: bool = False):
+    """Paged decode attention as a Pallas kernel; same contract as
+    :func:`paged_attention_reference`. The block table and lengths are
+    scalar-prefetched so the K/V BlockSpec index_maps can walk
+    ``table[b, j]`` — only the sequence's own pages transit HBM->VMEM."""
+    B, nh, hd = q.shape
+    nb, bs, nkv, _ = k_pages.shape
+    _, n_pages = block_table.shape
+    g = nh // nkv
+    assert nh == nkv * g, (nh, nkv)
+
+    def page_idx(b, j, tab, lens):
+        return (jnp.minimum(tab[b, j], nb - 1), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, nh, hd), lambda b, j, tab, lens: (b, 0, 0)),
+            pl.BlockSpec((1, bs, nkv, hd), page_idx),
+            pl.BlockSpec((1, bs, nkv, hd), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, nh, hd), lambda b, j, tab, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nh, 1), jnp.float32),  # running max m
+            pltpu.VMEM((nh, 1), jnp.float32),  # running normalizer l
+            pltpu.VMEM((nh, hd), jnp.float32),  # weighted accumulator
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, bs=bs, nkv=nkv, g=g, hd=hd, n_pages=n_pages,
+        softcap=softcap, out_dtype=q.dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nh, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_pages, v_pages)

@@ -12,6 +12,13 @@ quantizers, so the served datapath is exactly what calibration certified.
 kernel on TPU, in-graph dequant elsewhere; interpret = kernel path in
 pallas interpret mode, for validation). ``--host-loop`` uses the per-token
 host reference loop instead of the fused on-device generation loop.
+
+``--paged`` serves through the paged-KV continuous-batching engine
+(``repro.serving.PagedEngine``) instead of the fixed-slot engine:
+``--block-size`` sets the KV page granularity, ``--max-concurrency`` the
+engine slot count, ``--num-blocks`` the shared page-pool size (defaults to
+enough pages for a full-length batch at ``--max-concurrency``). See
+docs/serving_scheduler.md.
 """
 
 from __future__ import annotations
@@ -34,7 +41,7 @@ from repro.quant.serve_packed import (
     packed_params_from_artifact,
 )
 from repro.quant.spec import tree_datapath_fingerprint
-from repro.serving import GenerationEngine, SamplerConfig
+from repro.serving import GenerationEngine, PagedConfig, PagedEngine, SamplerConfig
 
 
 def main(argv=None):
@@ -57,6 +64,15 @@ def main(argv=None):
                     choices=("auto", "dequant", "kernel", "interpret"))
     ap.add_argument("--host-loop", action="store_true",
                     help="per-token host loop instead of the fused device loop")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV continuous-batching engine")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="KV page size in tokens (--paged)")
+    ap.add_argument("--max-concurrency", type=int, default=8,
+                    help="engine slots for continuous batching (--paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV page-pool size (--paged); default fits "
+                         "--max-concurrency full-length sequences")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -82,10 +98,24 @@ def main(argv=None):
                    global_batch=args.batch, seed=args.seed)
     )
     prompts = np.asarray(data.batch(0)["tokens"])
-    engine = GenerationEngine(
-        params, cfg, SamplerConfig(temperature=args.temperature, seed=args.seed)
-    )
-    gen = engine.generate_host_loop if args.host_loop else engine.generate
+    sampler = SamplerConfig(temperature=args.temperature, seed=args.seed)
+    if args.paged:
+        if args.host_loop:
+            raise SystemExit("--host-loop applies to the fixed-slot engine only")
+        pages_per_seq = -(-(args.prompt_len + args.max_new - 1) // args.block_size)
+        num_blocks = args.num_blocks or args.max_concurrency * pages_per_seq
+        engine = PagedEngine(
+            params, cfg,
+            PagedConfig(block_size=args.block_size, num_blocks=num_blocks,
+                        max_concurrency=args.max_concurrency),
+            sampler,
+        )
+        print(f"[serve] paged engine: block_size={args.block_size} "
+              f"num_blocks={num_blocks} slots={args.max_concurrency}")
+        gen = engine.generate
+    else:
+        engine = GenerationEngine(params, cfg, sampler)
+        gen = engine.generate_host_loop if args.host_loop else engine.generate
     backend_ctx = (
         use_packed_backend(args.packed_backend)
         if args.packed_backend != "auto"
@@ -97,7 +127,7 @@ def main(argv=None):
         out = gen(prompts, args.max_new)
         dt = time.time() - t0
     n_new = out.shape[1] - prompts.shape[1]
-    loop = "host-loop" if args.host_loop else "fused"
+    loop = "paged" if args.paged else ("host-loop" if args.host_loop else "fused")
     print(f"[serve] batch={args.batch} new_tokens={n_new} {loop} "
           f"{dt:.2f}s  {args.batch * n_new / dt:.1f} tok/s")
     print("[serve] sample:", out[0, -min(16, out.shape[1]):].tolist())

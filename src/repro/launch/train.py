@@ -20,7 +20,6 @@ from __future__ import annotations
 import argparse
 import signal
 import statistics
-import sys
 import time
 
 import jax

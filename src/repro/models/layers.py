@@ -13,7 +13,6 @@ import math
 import os
 import threading
 from contextlib import contextmanager
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -383,6 +382,66 @@ def attention(params, x, cfg: ModelConfig, positions):
         out = _full_causal_attention(q, k, v, cfg)
     y = pmm(params, "wo", out.reshape(B, S, cfg.n_heads * cfg.head_dim))
     return constraint(y, ("batch", None, "residual")), (k, v)
+
+
+_PAGED_ATTN_IMPLS = ("auto", "ref", "kernel", "interpret")
+
+
+def resolve_paged_attn_impl(impl: str = "auto") -> str:
+    """Resolve the paged decode-attention implementation: the Pallas
+    block-table kernel on TPU, the gather reference elsewhere. "interpret"
+    runs the kernel path under pallas interpret mode (tests/validation)."""
+    if impl not in _PAGED_ATTN_IMPLS:
+        raise ValueError(f"paged attn impl {impl!r} not in {_PAGED_ATTN_IMPLS}")
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def paged_attention_decode(params, x, cfg: ModelConfig, k_pages, v_pages,
+                           block_table, seq_lens, active, *, impl: str = "ref"):
+    """Single-token decode against a *paged* KV cache.
+
+    x: (B, 1, d) — B is the engine's slot count. ``k_pages``/``v_pages``
+    are the layer's page pools ``(num_blocks, block_size, nkv, hd)``;
+    ``block_table`` (B, P) int32 maps logical pages to pool pages (entries
+    ``>= num_blocks`` are free-slot sentinels); ``seq_lens`` (B,) int32 is
+    each slot's current length — the new token's KV lands at logical
+    position ``seq_lens[b]`` and attention covers positions
+    ``<= seq_lens[b]``. ``active`` (B,) bool masks the page write for idle
+    slots (their table rows may point at pages since re-allocated to other
+    sequences — the write is routed out of bounds and dropped, so an idle
+    slot can never corrupt a live one). Idle rows still produce (garbage)
+    outputs; the engine discards them.
+
+    Returns (y, new_k_pages, new_v_pages).
+    """
+    from repro.kernels.paged_attention import (
+        paged_attention_reference,
+        paged_decode_attention,
+    )
+
+    B = x.shape[0]
+    positions = seq_lens[:, None]  # (B, 1) — per-slot RoPE positions
+    q, k, v = _qkv(params, x, cfg, positions)
+    nb, bs = k_pages.shape[0], k_pages.shape[1]
+    page = jnp.where(active, block_table[jnp.arange(B), seq_lens // bs], nb)
+    off = seq_lens % bs
+    k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype), mode="drop")
+    lens_now = seq_lens + 1  # attend over positions < lens_now (self incl.)
+    if impl == "ref":
+        out = paged_attention_reference(
+            q[:, 0], k_pages, v_pages, block_table, lens_now,
+            softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        out = paged_decode_attention(
+            q[:, 0], k_pages, v_pages, block_table, lens_now,
+            softcap=cfg.attn_logit_softcap, interpret=(impl == "interpret"),
+        )
+    y = pmm(params, "wo", out.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    return y, k_pages, v_pages
 
 
 def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v, index):

@@ -173,7 +173,6 @@ def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     """
     from .layers import pmm
 
-    s = cfg.ssm
     xz = pmm(params, "in_proj", x)
     xin, z = jnp.split(xz, 2, axis=-1)
     xin, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)

@@ -10,8 +10,6 @@ caches / SSM states) through the same scan as stacked xs/ys.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -209,6 +207,114 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = Fals
         {k: make(v) for k, v in _slot_cache_shapes(spec, cfg, batch, max_len).items()}
         for spec in cfg.pattern
     )
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
+                     block_size: int, max_pages: int, abstract: bool = False):
+    """Paged decode cache: one KV *page pool* per attention slot plus the
+    shared continuous-batching state (see docs/serving_scheduler.md).
+
+    Attention KV lives in ``(R, num_blocks, block_size, nkv, hd)`` pools
+    indexed through a per-slot ``block_table`` — HBM scales with the pool,
+    not with ``num_slots * max_seq_len``. Recurrent mixers (Mamba/xLSTM)
+    keep their O(1)-per-sequence dense state, batched over ``num_slots``
+    (continuous batching swaps a slot's state wholesale at admission).
+    Page allocation state (``free_list`` stack + ``free_top``) is part of
+    the pytree so pop/push happen inside the jitted admit/release programs.
+    """
+
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+        return jnp.zeros(shape, dtype)
+
+    pools = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            kv = (cfg.repeats, num_blocks, block_size, cfg.n_kv_heads,
+                  cfg.head_dim)
+            pools.append({"k_pages": make(kv, cfg.act_dtype),
+                          "v_pages": make(kv, cfg.act_dtype)})
+        else:
+            shapes = _slot_cache_shapes(spec, cfg, num_slots, block_size)
+            pools.append({
+                k: make((cfg.repeats, *v.shape), v.dtype)
+                for k, v in shapes.items()
+            })
+    if abstract:
+        free_list = jax.ShapeDtypeStruct((num_blocks,), jnp.int32)
+        table = jax.ShapeDtypeStruct((num_slots, max_pages), jnp.int32)
+    else:
+        free_list = jnp.arange(num_blocks, dtype=jnp.int32)
+        # entries == num_blocks are "no page" sentinels (clamped on gather,
+        # dropped on scatter)
+        table = jnp.full((num_slots, max_pages), num_blocks, jnp.int32)
+    return {
+        "pools": tuple(pools),
+        "block_table": table,
+        "seq_lens": make((num_slots,), jnp.int32),
+        "active": make((num_slots,), bool),
+        "uids": make((num_slots,), jnp.int32),
+        "steps": make((num_slots,), jnp.int32),
+        "last_tok": make((num_slots,), jnp.int32),
+        "free_list": free_list,
+        "free_top": make((), jnp.int32),
+    }
+
+
+def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
+                      attn_impl: str = "ref"):
+    """One decode step over the paged cache. tokens: (num_slots, 1) int32.
+
+    Unlike :func:`decode_step`'s single scalar ``index``, every slot
+    advances at its own ``cache["seq_lens"]`` position (heterogeneous
+    lengths are the point of paging); idle slots (``active`` False) compute
+    but write nothing and do not advance. Returns (logits, new_cache).
+    """
+    from repro.models.layers import paged_attention_decode
+
+    x = embed(params["embedding"], tokens, cfg)
+    table = cache["block_table"]
+    lens = cache["seq_lens"]
+    active = cache["active"]
+
+    def body(x, xs):
+        layer_params, slot_caches = xs
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            p = layer_params[i]
+            c_in = slot_caches[i]
+            if spec.mixer == "attn":
+                h = norm(p["norm1"], x, cfg.norm)
+                y, kp, vp = paged_attention_decode(
+                    p["mixer"], h, cfg, c_in["k_pages"], c_in["v_pages"],
+                    table, lens, active, impl=attn_impl,
+                )
+                x = x + y
+                c_out = {"k_pages": kp, "v_pages": vp}
+            elif spec.mixer != "none":
+                h = norm(p["norm1"], x, cfg.norm)
+                y, c_out = _mixer_decode(p, spec, cfg, h, c_in, 0)
+                x = x + y
+            else:
+                c_out = c_in
+            if spec.ffn != "none":
+                h = norm(p["norm2"], x, cfg.norm)
+                if spec.ffn == "moe":
+                    y, _ = moe(p["ffn"], h, cfg)
+                else:
+                    y = mlp(p["ffn"], h, cfg)
+                x = x + y
+            new_caches.append(c_out)
+        return x, tuple(new_caches)
+
+    x, pools = jax.lax.scan(body, x, (params["layers"], cache["pools"]))
+    x = norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params["embedding"], x, cfg)
+    new_cache = dict(cache)
+    new_cache["pools"] = pools
+    new_cache["seq_lens"] = lens + active.astype(lens.dtype)
+    return logits, new_cache
 
 
 def _mixer_decode(p, spec: LayerSpec, cfg: ModelConfig, h, cache, index):

@@ -41,7 +41,9 @@ def lr_at_step(cfg: OptimizerConfig, step) -> jax.Array:
 
 def init_opt_state(params, cfg: OptimizerConfig):
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

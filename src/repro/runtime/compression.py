@@ -70,8 +70,6 @@ def compressed_grad_fn(grad_fn, mesh, batch_spec_fn):
     if "pod" not in mesh.shape:
         return grad_fn
 
-    auto = frozenset(a for a in mesh.axis_names if a != "pod")
-
     def inner(params, batch):
         aux, grads = grad_fn(params, batch)
         grads = int8_psum(grads, "pod")

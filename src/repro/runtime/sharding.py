@@ -291,6 +291,18 @@ def batch_shardings(batch, mesh: Mesh, rules: dict | None = None):
     return jax.tree_util.tree_map(one, batch)
 
 
+#: paged-cache bookkeeping leaves (block tables, free-list stack, per-slot
+#: scalars): tiny int32/bool state that every device must see in full —
+#: always replicated. The page *pools* shard like dense KV (kv_heads dim);
+#: the page axis itself never shards: pages are dynamically indexed across
+#: sequences, so splitting it would turn every block-table chase into a
+#: cross-device gather.
+_PAGED_ADMIN_LEAVES = (
+    "block_table", "seq_lens", "active", "uids", "steps", "last_tok",
+    "free_list", "free_top",
+)
+
+
 def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
     """Decode caches: (R, B, ...) — batch on dim 1, trailing dims by kind.
 
@@ -310,6 +322,13 @@ def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
             if hasattr(entry, "key"):
                 name = entry.key
                 break
+        if name in _PAGED_ADMIN_LEAVES:
+            return NamedSharding(mesh, P())
+        if name in ("k_pages", "v_pages") and leaf.ndim == 5:
+            # (R, num_blocks, block_size, nkv, hd): shard kv heads only
+            # (divisibility fallback in resolve_spec -> replicated)
+            names = (None, None, None, "kv_heads", None)
+            return NamedSharding(mesh, resolve_spec(leaf.shape, names, mesh, rules))
         if name in ("k", "v") and leaf.ndim == 5:
             nkv = leaf.shape[3]
             if nkv % model_size == 0:

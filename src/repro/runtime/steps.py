@@ -10,7 +10,6 @@ the 2x16x16 multi-pod mesh (dry-run / production).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +18,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.config import ModelConfig
 from repro.models.transformer import (
     decode_step as _decode_step,
-    forward,
-    init_cache,
     init_model,
     loss_fn,
     prefill as _prefill,

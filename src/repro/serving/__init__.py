@@ -1,3 +1,12 @@
 from .engine import GenerationEngine, SamplerConfig
+from .paged_engine import PagedConfig, PagedEngine
+from .scheduler import Request, Scheduler
 
-__all__ = ["GenerationEngine", "SamplerConfig"]
+__all__ = [
+    "GenerationEngine",
+    "PagedConfig",
+    "PagedEngine",
+    "Request",
+    "SamplerConfig",
+    "Scheduler",
+]

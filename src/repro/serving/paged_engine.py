@@ -1,0 +1,339 @@
+"""Continuous-batching generation engine over a paged KV cache.
+
+Where :class:`~repro.serving.engine.GenerationEngine` is fixed-slot (all
+sequences enter and leave together, against a dense ``(B, S_max, ...)``
+cache slab), this engine runs an open system: requests queue in a
+host-side :class:`~repro.serving.scheduler.Scheduler`, are admitted into
+whichever engine slot is free, decode together regardless of phase, and
+free their KV pages the moment they finish — so a skewed-length trace
+keeps every slot busy instead of idling behind the batch's longest
+member, and HBM holds ``num_blocks`` pages instead of
+``max_concurrency * S_max`` dense rows.
+
+Three jitted device programs, all operating on one cache pytree
+(:func:`repro.models.transformer.init_paged_cache`):
+
+* **admit** — pop ``n_pages`` from the device free-list stack, prefill
+  the prompt (B=1), scatter its KV into the popped pages, splice
+  recurrent-mixer state into the slot via ``dynamic_update_slice``, and
+  sample the first token. One trace per (prompt_len, n_pages) bucket.
+* **decode chunk** — up to ``chunk_max`` fused decode steps
+  (``lax.while_loop`` with a *dynamic* trip count ``k``, so one trace
+  serves every chunk length); every live slot advances at its own
+  length. The host syncs once per chunk, not once per token.
+* **release** — push the slot's pages back onto the free-list stack and
+  clear its active bit.
+
+Sampling is per-request deterministic: slot ``b``'s step ``t`` key is
+``fold_in(fold_in(key(seed), uid_b), t)``, so a request's sampled tokens
+do not depend on what else happens to be in flight. Greedy decode is
+bit-identical to the fixed-slot engine (golden-pinned in
+``tests/test_paged_engine.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    packed_backend,
+    resolve_paged_attn_impl,
+    use_packed_backend,
+)
+from repro.models.transformer import (
+    decode_step_paged,
+    init_paged_cache,
+    prefill,
+)
+from repro.quant.serve_packed import upgrade_packed_params
+from repro.quant.spec import tree_datapath_fingerprint, validate_datapath
+from repro.serving.engine import SamplerConfig, _sample
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclass(frozen=True)
+class PagedConfig:
+    """Paged-cache + continuous-batching knobs.
+
+    ``num_blocks`` sizes the shared KV pool (HBM bytes scale with it —
+    see docs/serving_scheduler.md for the accounting); ``block_size`` is
+    the page granularity; ``max_pages_per_seq`` caps one sequence's block
+    table row (defaults to ``ceil(max_seq_len / block_size)``);
+    ``chunk_max`` bounds how many decode steps run per host sync.
+    """
+
+    block_size: int = 64
+    num_blocks: int = 256
+    max_concurrency: int = 8
+    max_pages_per_seq: int | None = None
+    chunk_max: int = 32
+    attn_impl: str = "auto"  # auto | ref | kernel | interpret
+
+
+def _fold_keys(seed: int, uids, steps):
+    base = jax.random.key(seed)
+    return jax.vmap(
+        lambda u, t: jax.random.fold_in(jax.random.fold_in(base, u), t)
+    )(uids, steps)
+
+
+def _sample_rows(logits, temperature: float, keys):
+    """Per-row sampling with per-slot keys (request-deterministic) —
+    vmaps the fixed-slot engine's ``_sample`` so both engines share one
+    sampler (the greedy bit-identity guarantee rests on this)."""
+    if temperature <= 0.0:
+        return _sample(logits, temperature, None)
+    return jax.vmap(lambda k, row: _sample(row, temperature, k))(keys, logits)
+
+
+class PagedEngine:
+    def __init__(self, params, cfg: ModelConfig, paged: PagedConfig = PagedConfig(),
+                 sampler: SamplerConfig = SamplerConfig(), datapath=None):
+        self.params = upgrade_packed_params(params)
+        if datapath is not None:
+            validate_datapath(self.params, datapath)
+        self.datapath_fingerprint = tree_datapath_fingerprint(self.params)
+        self.cfg = cfg
+        self.sampler = sampler
+        max_pages = paged.max_pages_per_seq or -(-cfg.max_seq_len // paged.block_size)
+        self.paged = paged = PagedConfig(
+            block_size=paged.block_size, num_blocks=paged.num_blocks,
+            max_concurrency=paged.max_concurrency, max_pages_per_seq=max_pages,
+            chunk_max=paged.chunk_max, attn_impl=paged.attn_impl,
+        )
+        self.cache = init_paged_cache(
+            cfg, paged.max_concurrency, paged.num_blocks, paged.block_size,
+            max_pages,
+        )
+        #: trace counters (python side effects — bump at trace time only)
+        self.admit_traces = 0
+        self.chunk_traces = 0
+        self._uid_gen = 0
+
+        # the cache pytree is DONATED to every program: it crosses the jit
+        # boundary once per chunk/admit (unlike the dense engine, whose
+        # cache lives inside one fused generate call), and without
+        # donation each call would materialize a second full copy of the
+        # KV page pools — 2x the HBM the pool was sized for
+        @partial(jax.jit, static_argnames=("n_pages", "backend", "attn_impl",
+                                           "datapath"),
+                 donate_argnames=("cache",))
+        def _admit(params, cache, prompt, slot, uid, n_pages, backend,
+                   attn_impl, datapath):
+            with use_packed_backend(backend):
+                return self._admit_impl(params, cache, prompt, slot, uid,
+                                        n_pages)
+
+        @partial(jax.jit, static_argnames=("backend", "attn_impl", "datapath"),
+                 donate_argnames=("cache",))
+        def _chunk(params, cache, k, backend, attn_impl, datapath):
+            with use_packed_backend(backend):
+                return self._chunk_impl(params, cache, k, attn_impl)
+
+        @partial(jax.jit, static_argnames=("n_pages",),
+                 donate_argnames=("cache",))
+        def _release(cache, slot, n_pages):
+            return self._release_impl(cache, slot, n_pages)
+
+        self._admit = _admit
+        self._chunk = _chunk
+        self._release = _release
+
+    # ------------------------------------------------------------------
+    # Device programs (traced bodies)
+    # ------------------------------------------------------------------
+    def _admit_impl(self, params, cache, prompt, slot, uid, n_pages: int):
+        """Admit one request into ``slot``: allocate pages, prefill, splice
+        state, sample the generation's first token."""
+        self.admit_traces += 1
+        cfg, paged = self.cfg, self.paged
+        bs = paged.block_size
+        _, s0 = prompt.shape  # (1, S0)
+        n_prompt_pages = -(-s0 // bs)
+        prefill_len = n_prompt_pages * bs
+
+        # pop n_pages off the free-list stack (host guarantees capacity)
+        top = cache["free_top"]
+        pages = jax.lax.dynamic_slice(cache["free_list"], (top,), (n_pages,))
+        row = jnp.full((paged.max_pages_per_seq,), paged.num_blocks, jnp.int32)
+        row = row.at[:n_pages].set(pages)
+        table = jax.lax.dynamic_update_slice(
+            cache["block_table"], row[None], (slot, jnp.int32(0))
+        )
+
+        logits, dense = prefill(params, {"tokens": prompt}, cfg, prefill_len)
+        prompt_pages = pages[:n_prompt_pages]
+        pools = []
+        for i, spec in enumerate(cfg.pattern):
+            c = cache["pools"][i]
+            d = dense[i]
+            if spec.mixer == "attn":
+                # (R, 1, prefill_len, nkv, hd) -> per-page scatter into pool
+                def to_pages(a):
+                    r, _, _, nkv, hd = a.shape
+                    return a.reshape(r, n_prompt_pages, bs, nkv, hd)
+
+                kp = c["k_pages"].at[:, prompt_pages].set(
+                    to_pages(d["k"]).astype(c["k_pages"].dtype))
+                vp = c["v_pages"].at[:, prompt_pages].set(
+                    to_pages(d["v"]).astype(c["v_pages"].dtype))
+                pools.append({"k_pages": kp, "v_pages": vp})
+            elif spec.mixer != "none":
+                # recurrent state: splice the (R, 1, ...) prefill state into
+                # the slot's lane of the (R, num_slots, ...) batch
+                merged = {}
+                for k, leaf in c.items():
+                    idx = (jnp.int32(0), slot) + (jnp.int32(0),) * (leaf.ndim - 2)
+                    merged[k] = jax.lax.dynamic_update_slice(
+                        leaf, d[k].astype(leaf.dtype), idx)
+                pools.append(merged)
+            else:
+                pools.append(c)
+
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.sampler.seed), uid),
+            jnp.int32(0))
+        nxt = _sample(logits[:, -1], self.sampler.temperature, key)  # (1,)
+
+        new = dict(cache)
+        new["pools"] = tuple(pools)
+        new["block_table"] = table
+        new["free_top"] = top + n_pages
+        new["seq_lens"] = cache["seq_lens"].at[slot].set(s0)
+        new["active"] = cache["active"].at[slot].set(True)
+        new["uids"] = cache["uids"].at[slot].set(uid)
+        new["steps"] = cache["steps"].at[slot].set(1)
+        new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
+        return new, nxt[0]
+
+    def _chunk_impl(self, params, cache, k, attn_impl: str):
+        """Up to ``chunk_max`` decode steps; ``k`` is a *dynamic* trip
+        count so every chunk length reuses one trace."""
+        self.chunk_traces += 1
+        cfg, samp = self.cfg, self.sampler
+        n_slots, chunk_max = self.paged.max_concurrency, self.paged.chunk_max
+        buf = jnp.zeros((n_slots, chunk_max), jnp.int32)
+
+        def cond(st):
+            t, _, _ = st
+            return t < k
+
+        def body(st):
+            t, cache, buf = st
+            logits, cache = decode_step_paged(
+                params, cache["last_tok"][:, None], cache, cfg,
+                attn_impl=attn_impl)
+            keys = _fold_keys(samp.seed, cache["uids"], cache["steps"])
+            nxt = _sample_rows(logits[:, -1], samp.temperature, keys)
+            active = cache["active"]
+            cache = dict(cache)
+            cache["last_tok"] = jnp.where(active, nxt, cache["last_tok"])
+            cache["steps"] = cache["steps"] + active.astype(jnp.int32)
+            buf = jax.lax.dynamic_update_slice(buf, nxt[:, None], (0, t))
+            return t + 1, cache, buf
+
+        _, cache, buf = jax.lax.while_loop(cond, body, (jnp.int32(0), cache, buf))
+        return cache, buf
+
+    def _release_impl(self, cache, slot, n_pages: int):
+        """Push the slot's pages back onto the free-list stack."""
+        row = jax.lax.dynamic_slice(
+            cache["block_table"], (slot, jnp.int32(0)),
+            (1, self.paged.max_pages_per_seq))[0]
+        top = cache["free_top"] - n_pages
+        new = dict(cache)
+        new["free_list"] = jax.lax.dynamic_update_slice(
+            cache["free_list"], row[:n_pages], (top,))
+        new["free_top"] = top
+        new["active"] = cache["active"].at[slot].set(False)
+        return new
+
+    # ------------------------------------------------------------------
+    # Host loop
+    # ------------------------------------------------------------------
+    def submit_all(self, requests) -> Scheduler:
+        paged = self.paged
+        sched = Scheduler(paged.max_concurrency, paged.num_blocks,
+                          paged.block_size, paged.max_pages_per_seq)
+        for r in requests:
+            sched.submit(r)
+        return sched
+
+    def serve(self, requests) -> dict[int, np.ndarray]:
+        """Run a request list to completion under continuous batching.
+
+        Returns {uid: (S0_uid + n_generated,) int32} — generation is
+        trimmed at the first EOS (when the sampler sets one), matching the
+        fixed-slot engine's post-EOS padding semantics after re-padding.
+        """
+        sched = self.submit_all(requests)
+        backend = packed_backend()
+        attn_impl = resolve_paged_attn_impl(self.paged.attn_impl)
+        eos = self.sampler.eos_id
+        results: dict[int, np.ndarray] = {}
+
+        def finish(slot):
+            st = sched.finish(slot)
+            self.cache = self._release(self.cache, jnp.int32(slot), st.n_pages)
+            results[st.req.uid] = np.concatenate(
+                [st.req.prompt, np.asarray(st.tokens, np.int32)])
+
+        while sched.has_work:
+            adm = sched.try_admit()
+            while adm is not None:
+                slot, req, n_pages = adm
+                self.cache, tok0 = self._admit(
+                    self.params, self.cache,
+                    jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(slot),
+                    jnp.int32(req.uid), n_pages, backend, attn_impl,
+                    self.datapath_fingerprint)
+                tok0 = int(jax.device_get(tok0))
+                sched.record(slot, [tok0])
+                if sched.remaining(slot) == 0 or tok0 == eos:
+                    finish(slot)
+                adm = sched.try_admit()
+            if not sched.active:
+                if sched.queue:  # cannot happen: submit() validates fit
+                    raise RuntimeError("queued requests can never be admitted")
+                continue
+            k = min(self.paged.chunk_max, sched.min_remaining())
+            self.cache, buf = self._chunk(
+                self.params, self.cache, jnp.int32(k), backend, attn_impl,
+                self.datapath_fingerprint)
+            buf = np.asarray(jax.device_get(buf))
+            for slot in list(sched.active):
+                toks = buf[slot, :k].tolist()[: sched.remaining(slot)]
+                if eos is not None and eos in toks:
+                    toks = toks[: toks.index(eos) + 1]
+                sched.record(slot, toks)
+                if sched.remaining(slot) == 0 or (
+                        eos is not None and toks and toks[-1] == eos):
+                    finish(slot)
+        return results
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
+        """Fixed-slot-compatible entry: prompts (B, S0) -> (B, S0 + max_new).
+
+        Post-EOS positions are EOS-padded, matching
+        :meth:`GenerationEngine.generate` exactly (greedy decode of an
+        equal-length batch is bit-identical — golden-pinned)."""
+        prompts = np.asarray(prompts, np.int32)
+        reqs = []
+        for row in prompts:
+            reqs.append(Request(uid=self._uid_gen, prompt=row,
+                                max_new=max_new_tokens))
+            self._uid_gen += 1
+        results = self.serve(reqs)
+        eos = self.sampler.eos_id
+        s_out = prompts.shape[1] + max_new_tokens
+        out = np.full((len(reqs), s_out), 0 if eos is None else eos, np.int32)
+        for i, r in enumerate(reqs):
+            seq = results[r.uid]
+            out[i, :seq.size] = seq
+        return out

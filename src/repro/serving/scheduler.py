@@ -1,0 +1,132 @@
+"""Host-side continuous-batching scheduler for the paged decode engine.
+
+The scheduler is deliberately device-free (pure Python + numpy): it owns
+the *accounting* — which requests are queued, which engine slot and how
+many KV pages each active request holds — while the actual page indices
+live on device in the cache pytree's ``free_list`` stack (popped/pushed
+inside the engine's jitted admit/release programs). The two stay
+consistent because every admit/release goes through both in lockstep.
+
+Admission policy: FIFO, head-of-line. A request is admitted when (a) an
+engine slot is free and (b) the pool has enough free pages for its
+*worst case* — ``ceil((S0 + max_new - 1) / block_size)`` pages, the
+number of KV positions a fully-decoded sequence writes. Reserving the
+worst case up front means exhaustion can only ever surface as a stalled
+admission (the queue waits for a running sequence to finish), never as a
+mid-decode allocation failure that would need preemption.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request: ``uid`` must be unique per engine lifetime
+    (it seeds the request's sampling key stream, making sampled output
+    deterministic per request regardless of co-batched traffic)."""
+
+    uid: int
+    prompt: np.ndarray  # (S0,) int32
+    max_new: int
+
+    def __post_init__(self):
+        prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        object.__setattr__(self, "prompt", prompt)
+        if prompt.size < 1:
+            raise ValueError(f"request {self.uid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.uid}: max_new must be >= 1")
+
+
+@dataclass
+class _Active:
+    req: Request
+    n_pages: int
+    produced: int = 0  # tokens generated so far (admission token included)
+    tokens: list = field(default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, max_concurrency: int, num_blocks: int, block_size: int,
+                 max_pages_per_seq: int):
+        self.max_concurrency = max_concurrency
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.queue: deque[Request] = deque()
+        self.free_slots: list[int] = sorted(range(max_concurrency), reverse=True)
+        self.free_pages = num_blocks
+        self.active: dict[int, _Active] = {}
+
+    # ------------------------------------------------------------------
+    # Accounting
+    # ------------------------------------------------------------------
+    def pages_for(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page need: a sequence writes KV for positions
+        ``0 .. S0 + max_new - 2`` (the final sampled token is returned but
+        never fed back, so its KV is never written — same as the dense
+        engine's cache sizing)."""
+        return -(-(prompt_len + max_new - 1) // self.block_size)
+
+    def submit(self, req: Request) -> None:
+        need = self.pages_for(req.prompt.size, req.max_new)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.uid}: needs {need} pages > block table width "
+                f"{self.max_pages_per_seq} (prompt {req.prompt.size} + "
+                f"max_new {req.max_new}, block_size {self.block_size})"
+            )
+        if need > self.num_blocks:
+            raise ValueError(
+                f"request {req.uid}: needs {need} pages > pool size "
+                f"{self.num_blocks} — can never be admitted"
+            )
+        self.queue.append(req)
+
+    def try_admit(self) -> tuple[int, Request, int] | None:
+        """Pop the queue head into a free slot if slot + pages allow;
+        returns (slot, request, n_pages) or None (admission stalls — the
+        request stays queued, nothing is allocated)."""
+        if not self.queue or not self.free_slots:
+            return None
+        req = self.queue[0]
+        need = self.pages_for(req.prompt.size, req.max_new)
+        if need > self.free_pages:
+            return None  # stall: wait for a running sequence to free pages
+        self.queue.popleft()
+        slot = self.free_slots.pop()
+        self.free_pages -= need
+        self.active[slot] = _Active(req=req, n_pages=need)
+        return slot, req, need
+
+    def record(self, slot: int, tokens) -> None:
+        st = self.active[slot]
+        st.tokens.extend(int(t) for t in tokens)
+        st.produced += len(tokens)
+
+    def finish(self, slot: int) -> _Active:
+        """Release the slot and its page reservation; returns the record."""
+        st = self.active.pop(slot)
+        self.free_pages += st.n_pages
+        self.free_slots.append(slot)
+        self.free_slots.sort(reverse=True)
+        return st
+
+    # ------------------------------------------------------------------
+    # Loop predicates
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    def remaining(self, slot: int) -> int:
+        st = self.active[slot]
+        return st.req.max_new - st.produced
+
+    def min_remaining(self) -> int:
+        return min(self.remaining(s) for s in self.active)

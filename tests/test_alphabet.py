@@ -1,7 +1,5 @@
 """Unit + property tests for the accumulator bound algebra (Eqs. 3/4/17/21/22)."""
 
-import math
-
 import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given

@@ -11,7 +11,6 @@ import pytest
 from repro.configs import get_config, get_smoke
 from repro.models import transformer as T
 from repro.models.layers import (
-    dequant_weight,
     packed_linear,
     use_packed_backend,
 )
@@ -156,6 +155,7 @@ def test_kernel_path_jaxpr_has_no_full_weight_dequant(rng):
 # ---------------------------------------------------------------------------
 # Family coverage: packed decode rides the integer datapath everywhere
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMILY_ARCHS)
 def test_family_decode_step_kernel_vs_dequant(arch):
     """decode_step with packed params: fused-kernel (interpret) logits track

@@ -3,7 +3,6 @@ bit-identity, EOS semantics (early exit, post-EOS padding, per-sequence
 done masks), single-host-sync and one-compile-per-bucket guarantees."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -104,7 +104,9 @@ def test_soft_constraint_reduces_l1():
     r_full = gpfq_memory_efficient(
         w, h_half, g, wa, na, axe=AxeConfig(p_bits=13, soft=True)
     )
-    l1 = lambda q: float(jnp.sum(jnp.abs(q)))
+    def l1(q):
+        return float(jnp.sum(jnp.abs(q)))
+
     assert l1(r_full.q_int) <= l1(r_hco.q_int) * (1 + 1e-6)
 
 

@@ -5,6 +5,7 @@ scanned ones."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.launch.hlo_analysis import analyze, shape_bytes
 
@@ -67,6 +68,7 @@ def test_nested_scan_multiplies():
     assert r.max_trip_product == 15
 
 
+@pytest.mark.slow
 def test_model_scan_vs_unrolled_parity():
     """The full train step: parsed costs identical whether layers are
     scanned or python-unrolled (the correction is exact, not approximate)."""

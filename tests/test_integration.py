@@ -2,7 +2,6 @@
 serve, through the real launchers."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

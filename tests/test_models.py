@@ -22,6 +22,7 @@ def _batch(cfg, b=2, s=16, seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_arch_smoke_forward_and_train_step(arch):
     """One forward + one grad step on the reduced config of each assigned
@@ -50,6 +51,7 @@ def test_arch_param_count_positive(arch):
     assert 0 < pc["active"] <= pc["total"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "arch", ["smollm-360m", "xlstm-350m", "jamba-1.5-large-398b", "dbrx-132b"]
 )

@@ -10,16 +10,13 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (
-    AxeConfig,
     LayerStats,
     PTQConfig,
     act_alphabet,
     accumulator_range,
     certify,
-    gpfq_memory_efficient,
     quantize_linear,
     simulate_accumulation,
-    weight_alphabet,
     worst_case_inputs,
 )
 

@@ -31,6 +31,7 @@ def _setup(arch):
     return cfg, params, calib, evalb
 
 
+@pytest.mark.slow  # CI covers this ground via scripts/smoke.sh
 @pytest.mark.parametrize("arch", FAMILY_ARCHS)
 def test_family_end_to_end_certified(arch):
     """Every family quantizes + certifies under the default W4A8 / T=128 /

@@ -1,0 +1,103 @@
+"""Host-side continuous-batching scheduler: page accounting, FIFO
+admission, exhaustion stalls, and release bookkeeping — device-free."""
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _req(uid, s0=8, max_new=8):
+    return Request(uid=uid, prompt=np.zeros(s0, np.int32), max_new=max_new)
+
+
+def test_pages_for_counts_written_positions():
+    sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
+                      max_pages_per_seq=4)
+    # positions written: S0 + max_new - 1 (final token never fed back)
+    assert sched.pages_for(8, 8) == 2   # 15 positions -> 2 pages
+    assert sched.pages_for(8, 9) == 2   # 16 positions -> exactly 2 pages
+    assert sched.pages_for(8, 10) == 3  # 17 positions -> 3 pages
+    assert sched.pages_for(1, 1) == 1
+
+
+def test_admission_is_fifo_and_respects_slots():
+    sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
+                      max_pages_per_seq=4)
+    for uid in range(3):
+        sched.submit(_req(uid))
+    a = sched.try_admit()
+    b = sched.try_admit()
+    assert a[1].uid == 0 and b[1].uid == 1
+    assert sched.try_admit() is None  # no free slot
+    sched.finish(a[0])
+    c = sched.try_admit()
+    assert c[1].uid == 2 and c[0] == a[0]  # freed slot reused
+
+
+def test_admission_stalls_on_page_exhaustion():
+    """Not enough free pages: the head request stays queued and nothing
+    is allocated (stall, not corruption)."""
+    sched = Scheduler(max_concurrency=4, num_blocks=3, block_size=8,
+                      max_pages_per_seq=4)
+    sched.submit(_req(0, s0=8, max_new=9))   # 2 pages
+    sched.submit(_req(1, s0=8, max_new=9))   # 2 pages -> only 1 left
+    slot0, _, n0 = sched.try_admit()
+    assert n0 == 2 and sched.free_pages == 1
+    assert sched.try_admit() is None          # stalls despite free slots
+    assert len(sched.queue) == 1 and sched.free_pages == 1
+    sched.finish(slot0)
+    assert sched.free_pages == 3
+    assert sched.try_admit() is not None      # admitted after the free
+
+
+def test_submit_rejects_never_admissible_requests():
+    sched = Scheduler(max_concurrency=1, num_blocks=2, block_size=8,
+                      max_pages_per_seq=2)
+    with pytest.raises(ValueError, match="block table width"):
+        sched.submit(_req(0, s0=8, max_new=64))
+    sched2 = Scheduler(max_concurrency=1, num_blocks=1, block_size=8,
+                       max_pages_per_seq=8)
+    with pytest.raises(ValueError, match="can never be admitted"):
+        sched2.submit(_req(0, s0=8, max_new=9))
+    with pytest.raises(ValueError, match="max_new"):
+        Request(uid=0, prompt=np.zeros(4, np.int32), max_new=0)
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request(uid=0, prompt=np.zeros(0, np.int32), max_new=1)
+
+
+def test_record_remaining_and_min_remaining():
+    sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
+                      max_pages_per_seq=4)
+    sched.submit(_req(0, max_new=8))
+    sched.submit(_req(1, max_new=3))
+    s0, _, _ = sched.try_admit()
+    s1, _, _ = sched.try_admit()
+    sched.record(s0, [1])
+    sched.record(s1, [2])
+    assert sched.remaining(s0) == 7 and sched.remaining(s1) == 2
+    assert sched.min_remaining() == 2
+    sched.record(s1, [3, 4])
+    assert sched.remaining(s1) == 0
+    st = sched.finish(s1)
+    assert st.tokens == [2, 3, 4]
+    assert sched.min_remaining() == 7
+
+
+def test_page_accounting_balances_after_churn():
+    sched = Scheduler(max_concurrency=2, num_blocks=6, block_size=4,
+                      max_pages_per_seq=4)
+    for uid in range(5):
+        sched.submit(_req(uid, s0=4, max_new=5))  # 2 pages each
+    admitted = []
+    while True:
+        adm = sched.try_admit()
+        if adm is None:
+            break
+        admitted.append(adm[0])
+    assert len(admitted) == 2
+    for slot in admitted:
+        sched.finish(slot)
+    assert sched.free_pages == 6
+    assert sorted(sched.free_slots, reverse=True) == sched.free_slots
+    assert sched.has_work  # three still queued

@@ -71,6 +71,22 @@ def test_cache_shardings_kv_fallback(mesh):
     assert len(spec) == 5
 
 
+def test_paged_cache_shardings(mesh):
+    """Paged cache leaves resolve: pools shard kv_heads only (page axis
+    never sharded), bookkeeping leaves replicate."""
+    from repro.models.transformer import init_paged_cache
+
+    cfg = get_smoke("smollm-360m")
+    cache = init_paged_cache(cfg, num_slots=4, num_blocks=16, block_size=8,
+                             max_pages=4, abstract=True)
+    sh = cache_shardings(cache, cfg, mesh)
+    kp = sh["pools"][0]["k_pages"].spec
+    assert len(kp) == 5
+    assert kp[0] is None and kp[1] is None and kp[2] is None  # R/pages/block
+    for name in ("block_table", "seq_lens", "free_list", "free_top", "active"):
+        assert sh[name].spec == P()
+
+
 def test_logical_constraint_noop_without_rules():
     from repro.runtime.sharding import logical_constraint
 
