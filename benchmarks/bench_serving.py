@@ -78,7 +78,7 @@ def run_fixed_slot(eng: GenerationEngine, reqs) -> float:
     return time.time() - t0
 
 
-def make_paged_engine(params, cfg, reqs) -> PagedEngine:
+def make_paged_engine(params, cfg, reqs, kv_dtype: str = "act") -> PagedEngine:
     max_pages = max(
         -(-(r.prompt.size + r.max_new - 1) // BLOCK_SIZE) for r in reqs)
     return PagedEngine(
@@ -86,19 +86,23 @@ def make_paged_engine(params, cfg, reqs) -> PagedEngine:
         PagedConfig(block_size=BLOCK_SIZE,
                     num_blocks=CONCURRENCY * max_pages,
                     max_concurrency=CONCURRENCY,
-                    max_pages_per_seq=max_pages),
+                    max_pages_per_seq=max_pages,
+                    kv_dtype=kv_dtype),
         SamplerConfig(temperature=0.0),
     )
 
 
-def hbm_accounting(cfg, reqs, num_blocks: int) -> dict:
+def hbm_accounting(cfg, reqs, num_blocks: int, kv_dtype: str = "act") -> dict:
     """Bytes of attention KV state: dense slab vs page pool (the
-    docs/serving_scheduler.md formula)."""
+    docs/serving_scheduler.md formula; int8 pools count their codes at one
+    byte plus the per-(page, head) scale leaves)."""
+    from repro.serving.scheduler import kv_pool_bytes
+
     n_attn = sum(1 for s in cfg.pattern if s.mixer == "attn") * cfg.repeats
     per_pos = 2 * cfg.n_kv_heads * cfg.head_dim * np.dtype(cfg.act_dtype).itemsize
     s_max = max(r.prompt.size for r in reqs) + max(r.max_new for r in reqs)
     dense = n_attn * CONCURRENCY * s_max * per_pos
-    paged = n_attn * num_blocks * BLOCK_SIZE * per_pos
+    paged = kv_pool_bytes(cfg, num_blocks, BLOCK_SIZE, kv_dtype)
     return {"dense_slab_bytes": int(dense), "paged_pool_bytes": int(paged),
             "pool_over_slab": paged / dense}
 
@@ -126,8 +130,21 @@ def run():
 
     dt_paged = min(paged_pass() for _ in range(reps))
 
+    # int8-KV grid: same trace, quantized pages (pool HBM ~halves for
+    # bf16 serving dtypes; on the f32 tiny configs it quarters)
+    eng8 = make_paged_engine(params, cfg, reqs, kv_dtype="int8")
+    eng8.serve(reqs)
+
+    def paged8_pass():
+        t0 = time.time()
+        eng8.serve(make_trace(cfg.vocab))
+        return time.time() - t0
+
+    dt_paged8 = min(paged8_pass() for _ in range(reps))
+
     fixed_toks = useful / dt_fixed
     paged_toks = useful / dt_paged
+    paged8_toks = useful / dt_paged8
     speedup = paged_toks / fixed_toks
     results = {
         "backend": jax.default_backend(),
@@ -144,10 +161,20 @@ def run():
         "us_per_tok_fixed": 1e6 * dt_fixed / useful,
         "us_per_tok_paged": 1e6 * dt_paged / useful,
         "hbm": hbm_accounting(cfg, reqs, eng.paged.num_blocks),
+        "int8_kv": {
+            "attn_datapath": eng8.attn_spec.describe(),
+            "paged_toks": paged8_toks,
+            "us_per_tok_paged": 1e6 * dt_paged8 / useful,
+            "speedup_vs_float_kv": paged8_toks / paged_toks,
+            "hbm": hbm_accounting(cfg, reqs, eng8.paged.num_blocks,
+                                  kv_dtype="int8"),
+        },
     }
     csv_row(f"serving/trace/{'fast' if FAST else 'full'}", results["us_per_tok_paged"],
             f"paged={paged_toks:.1f}toks;fixed={fixed_toks:.1f}toks;"
-            f"speedup={speedup:.2f}x")
+            f"speedup={speedup:.2f}x;"
+            f"int8kv={paged8_toks:.1f}toks@"
+            f"{results['int8_kv']['hbm']['pool_over_slab']:.2f}pool")
     write_bench_json("BENCH_serving.json", results)
     return results
 

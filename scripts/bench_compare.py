@@ -38,7 +38,7 @@ def _is_perf_key(key: str) -> str | None:
     parts = key.lower().replace("/", "_").split("_")
     if "us" in parts:
         return "lower"
-    if "toks" in parts or key == "speedup":
+    if "toks" in parts or "speedup" in parts:
         return "higher"
     return None
 

@@ -63,8 +63,29 @@ paged = PagedEngine(pp, cfg,
 with use_packed_backend("interpret"):
     out_paged = paged.generate(prompts, 2)
 assert (out_paged == out).all(), (out_paged, out)
+# and with int8 quantized KV pages: the first full-datapath configuration
+# (packed W4A8 weight sites + AttnDatapathSpec-certified attention) must
+# serve end-to-end with a certified record and a genuinely quantized pool.
+# (Token-for-token greedy equality with float KV is asserted in tier-1 on
+# briefly-TRAINED tiny models — tests/test_paged_engine.py — because on a
+# random-init model near-tied argmaxes make exact equality seed luck, not
+# a structural property.)
+paged8 = PagedEngine(pp, cfg,
+                     PagedConfig(block_size=4, num_blocks=8, max_concurrency=2,
+                                 max_pages_per_seq=2, attn_impl="ref",
+                                 kv_dtype="int8"),
+                     SamplerConfig(temperature=0.0))
+assert paged8.attn_spec is not None and paged8.attn_spec.certify()
+with use_packed_backend("interpret"):
+    out_paged8 = paged8.generate(prompts, 2)
+assert out_paged8.shape == out.shape
+pool0 = paged8.cache["pools"][0]
+assert str(pool0["k_pages"].dtype) == "int8", pool0["k_pages"].dtype
+assert float(np.asarray(jax.device_get(pool0["k_scales"])).max()) > 0, \
+    "int8 KV pages served but no page scale was ever stamped"
 print(f"artifact schema ok: v{meta['artifact_version']}, {len(specs)} site specs, "
-      f"datapath={tree_datapath_fingerprint(pp)}, paged decode bit-identical")
+      f"datapath={tree_datapath_fingerprint(pp)}, paged decode bit-identical, "
+      f"int8-KV paged serves certified [{paged8.attn_spec.describe()}]")
 EOF
 
 echo "== smoke suite passed =="

@@ -27,6 +27,22 @@ the block table. Two implementations share one contract:
   scratch, exactly the ``_chunked_causal_attention`` recurrence), so
   kernel-vs-reference agreement is to float tolerance, not bitwise.
 
+Both implementations additionally serve **int8 quantized KV pages**
+(``kv_dtype=int8`` in ``transformer.init_paged_cache``): the pools hold
+int8 codes plus per-(page, kv-head) symmetric scales
+(:func:`quantize_kv_pages`), halving pool HBM. The reference dequantizes
+per page and runs exactly the float math (the correctness anchor —
+bit-identical to quantize→dequantize applied to the dense-slab math);
+the kernel runs the *integer* datapath the
+:class:`~repro.quant.spec.AttnDatapathSpec` record certifies: an
+``hd``-deep int8×int8 QK^T dot held in a ``P_qk``-bit register and a
+per-page ``block_size``-deep prob×value dot held in a ``P_pv``-bit
+register, each page draining into the float online-softmax outer
+accumulator (the attention analogue of Eq. 22's inner/outer split, with
+the page as the tile). ``assert_bounds=True`` verifies the register
+watermarks against the record in interpret mode, mirroring
+``w4a8_mm``'s ``assert_inner``.
+
 Validated against the reference in interpret mode over shape/raggedness
 sweeps (``tests/test_paged_attention.py``) — the same testing pattern as
 ``w4a8_mm``. Compiled-mode perf is a TPU-hardware question (ROADMAP).
@@ -52,8 +68,35 @@ def _softcap(scores, cap):
     return cap * jnp.tanh(scores / cap)
 
 
+# ---------------------------------------------------------------------------
+# int8 KV page quantization (per-page, per-kv-head symmetric scales)
+# ---------------------------------------------------------------------------
+def quantize_kv_pages(pages, kv_bits: int = 8):
+    """Symmetric per-(page, kv-head) quantization of float KV pages.
+
+    pages: (..., block_size, nkv, hd) float -> (codes int8 of the same
+    shape, scales (..., nkv) f32). The scale is shared by every position
+    and head-dim lane of a page (constant over the PV reduction — that is
+    what keeps the per-page PV accumulation a pure integer dot, see
+    :class:`~repro.quant.spec.AttnDatapathSpec`); never-written positions
+    are zeros and cannot raise the max.
+    """
+    qmax = 2 ** (kv_bits - 1) - 1
+    xf = pages.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))  # reduce (block_size, hd)
+    scales = jnp.maximum(amax / qmax, 1e-8)
+    codes = jnp.clip(jnp.rint(xf / scales[..., None, :, None]), -qmax, qmax)
+    return codes.astype(jnp.int8), scales
+
+
+def dequantize_kv_pages(codes, scales):
+    """Inverse of :func:`quantize_kv_pages` (always f32 — the score math's
+    dtype, so reference and dense-slab paths see identical values)."""
+    return codes.astype(jnp.float32) * scales[..., None, :, None]
+
+
 def paged_attention_reference(q, k_pages, v_pages, block_table, seq_lens, *,
-                              softcap=None):
+                              softcap=None, k_scales=None, v_scales=None):
     """Gather-based paged decode attention (the oracle + CPU path).
 
     q: (B, nh, hd) — the current token's query rows.
@@ -62,13 +105,22 @@ def paged_attention_reference(q, k_pages, v_pages, block_table, seq_lens, *,
         ``>= num_blocks`` are free-slot sentinels (clamped; masked anyway).
     seq_lens: (B,) int32 — valid positions per row (the just-written token
         included), i.e. attend over positions ``< seq_lens[b]``.
+    k_scales / v_scales: (num_blocks, nkv) f32 — present iff the pool holds
+        int8 codes; pages dequantize per page and the math below is
+        exactly the float path (the int8 correctness anchor).
     """
     B, nh, hd = q.shape
     nb, bs, nkv, _ = k_pages.shape
     g = nh // nkv
     tab = jnp.minimum(block_table, nb - 1)
-    k = k_pages[tab].reshape(B, -1, nkv, hd)  # (B, P*bs, nkv, hd)
-    v = v_pages[tab].reshape(B, -1, nkv, hd)
+    if k_scales is not None:
+        k = dequantize_kv_pages(k_pages[tab], k_scales[tab]).reshape(
+            B, -1, nkv, hd)
+        v = dequantize_kv_pages(v_pages[tab], v_scales[tab]).reshape(
+            B, -1, nkv, hd)
+    else:
+        k = k_pages[tab].reshape(B, -1, nkv, hd)  # (B, P*bs, nkv, hd)
+        v = v_pages[tab].reshape(B, -1, nkv, hd)
     qg = q.reshape(B, nkv, g, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
     s = _softcap(s / math.sqrt(hd), softcap)
@@ -79,17 +131,52 @@ def paged_attention_reference(q, k_pages, v_pages, block_table, seq_lens, *,
     return out.reshape(B, nh, hd)
 
 
-def _kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, bs: int, nkv: int, g: int, hd: int, n_pages: int,
-            softcap, out_dtype):
-    b, j = pl.program_id(0), pl.program_id(1)
-    nh = nkv * g
-
+def _init_softmax_state(j, m_ref, l_ref, acc_ref):
     @pl.when(j == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _mask_scores(s, j, b, lens_ref, bs, nh):
+    """Length-mask one page's (nkv, g, bs) scores -> (nh, bs)."""
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)  # (1, bs)
+    valid = pos < lens_ref[b]
+    return jnp.where(valid[None], s, -jnp.inf).reshape(nh, bs)
+
+
+def _softmax_accumulate(s, m_ref, l_ref, acc_ref, pv_of):
+    """One page's online-softmax update (the ``_chunked_causal_attention``
+    carry), shared by the float and int8 kernel bodies. ``pv_of(p)`` maps
+    the page's probabilities (nh, bs) to (effective weights for the
+    normalizer, PV numerator (nh, hd)) — the float body uses p itself,
+    the int8 body its quantized codes, keeping numerator and denominator
+    consistent by construction."""
+    m_prev = m_ref[...]  # (nh, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)  # fully-masked rows: exp(-inf) = 0
+    corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+    p_eff, pv = pv_of(p)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p_eff, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+
+def _finalize_output(j, n_pages, o_ref, m_ref, l_ref, acc_ref, out_dtype):
+    @pl.when(j == n_pages - 1)
+    def _epilogue():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype)
+
+
+def _kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs: int, nkv: int, g: int, hd: int, n_pages: int,
+            softcap, out_dtype):
+    b, j = pl.program_id(0), pl.program_id(1)
+    nh = nkv * g
+    _init_softmax_state(j, m_ref, l_ref, acc_ref)
 
     q = q_ref[0].astype(jnp.float32)  # (nh, hd)
     k = k_ref[0].astype(jnp.float32)  # (bs, nkv, hd)
@@ -97,62 +184,159 @@ def _kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     qg = q.reshape(nkv, g, hd)
     s = jnp.einsum("kgd,skd->kgs", qg, k).astype(jnp.float32)
     s = _softcap(s / math.sqrt(hd), softcap)
-    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)  # (1, bs)
-    valid = pos < lens_ref[b]
-    s = jnp.where(valid[None], s, -jnp.inf).reshape(nh, bs)
+    s = _mask_scores(s, j, b, lens_ref, bs, nh)
 
-    # online-softmax recurrence (the _chunked_causal_attention carry)
-    m_prev = m_ref[...]  # (nh, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    p = jnp.exp(s - m_safe)  # fully-masked rows: exp(-inf) = 0
-    corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jnp.einsum("kgs,skd->kgd", p.reshape(nkv, g, bs), v)
-    acc_ref[...] = acc_ref[...] * corr + pv.reshape(nh, hd)
-    m_ref[...] = m_new
+    def pv_of(p):
+        pv = jnp.einsum("kgs,skd->kgd", p.reshape(nkv, g, bs), v)
+        return p, pv.reshape(nh, hd)
 
-    @pl.when(j == n_pages - 1)
-    def _epilogue():
-        denom = jnp.maximum(l_ref[...], 1e-20)
-        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype)
+    _softmax_accumulate(s, m_ref, l_ref, acc_ref, pv_of)
+    _finalize_output(j, n_pages, o_ref, m_ref, l_ref, acc_ref, out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def _register_check(watermark, p_bits: int, what: str):
+    """Interpret-mode verification that an integer register watermark stays
+    inside its certified P-bit range (the w4a8_mm ``assert_inner`` idiom,
+    pl.debug_check with a host-assert fallback for older pallas)."""
+    limit = 2 ** (p_bits - 1) - 1
+    if hasattr(pl, "debug_check"):
+        pl.debug_check(watermark <= limit, f"{what} accumulator overflow")
+    else:  # pragma: no cover - older pallas releases
+        def _check(w, lim=limit, name=what):
+            assert int(w) <= lim, f"{name} accumulator overflow: {w} > {lim}"
+
+        jax.debug.callback(_check, watermark)
+
+
+def _quant_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, bs: int, nkv: int, g: int,
+                  hd: int, n_pages: int, softcap, out_dtype, spec,
+                  assert_bounds: bool):
+    """The int8-KV body: same online-softmax recurrence as :func:`_kernel`,
+    but both reductions run in the integer domain the ``spec``
+    (:class:`~repro.quant.spec.AttnDatapathSpec`) certifies — QK^T as an
+    hd-deep q-code × k-code dot in a P_qk-bit register, PV as a per-page
+    block_size-deep prob-code × v-code dot in a P_pv-bit register, with
+    scales applied once per page on the way into the float outer state."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    nh = nkv * g
+    _init_softmax_state(j, m_ref, l_ref, acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (nh, hd)
+    # per-head symmetric quantization of the query rows (the A-side codes)
+    q_amax = jnp.max(jnp.abs(q), axis=-1, keepdims=True)  # (nh, 1)
+    q_scale = jnp.maximum(q_amax / spec.q_qmax, 1e-8)
+    q_codes = jnp.clip(jnp.rint(q / q_scale), -spec.q_qmax,
+                       spec.q_qmax).astype(jnp.int32)
+    k_codes = k_ref[0].astype(jnp.int32)  # (bs, nkv, hd) int8 codes
+    k_scale = ks_ref[0]  # (nkv,) f32 — this page's per-head scale
+
+    # hd-deep integer QK^T dot, held in the P_qk register
+    s_int = jnp.einsum("kgd,skd->kgs", q_codes.reshape(nkv, g, hd), k_codes,
+                       preferred_element_type=jnp.int32)
+    if assert_bounds:
+        _register_check(jnp.max(jnp.abs(s_int)), spec.p_qk, "QK^T")
+    s = (s_int.astype(jnp.float32) * q_scale.reshape(nkv, g, 1)
+         * k_scale[:, None, None])
+    s = _softcap(s / math.sqrt(hd), softcap)
+    s = _mask_scores(s, j, b, lens_ref, bs, nh)
+
+    def pv_of(p):
+        # probability codes (unsigned prob_bits) — the PV A-side operand;
+        # the normalizer accumulates the *quantized* probabilities so the
+        # final weighted average stays consistent with the PV numerator
+        p_codes = jnp.rint(p * spec.prob_qmax).astype(jnp.int32)
+        v_codes = v_ref[0].astype(jnp.int32)  # (bs, nkv, hd)
+        v_scale = vs_ref[0]  # (nkv,)
+        # per-page block_size-deep integer PV dot, held in the P_pv
+        # register — the page is the tile; partials drain scaled into the
+        # f32 outer accumulator
+        pv_int = jnp.einsum("kgs,skd->kgd", p_codes.reshape(nkv, g, bs),
+                            v_codes, preferred_element_type=jnp.int32)
+        if assert_bounds:
+            _register_check(jnp.max(jnp.abs(pv_int)), spec.p_pv, "PV")
+        pv = pv_int.astype(jnp.float32) * (v_scale[:, None, None]
+                                           / spec.prob_qmax)
+        return (p_codes.astype(jnp.float32) / spec.prob_qmax,
+                pv.reshape(nh, hd))
+
+    _softmax_accumulate(s, m_ref, l_ref, acc_ref, pv_of)
+    _finalize_output(j, n_pages, o_ref, m_ref, l_ref, acc_ref, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret",
+                                             "attn_spec", "assert_bounds"))
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           k_scales=None, v_scales=None, attn_spec=None,
                            softcap: float | None = None,
-                           interpret: bool = False):
+                           interpret: bool = False,
+                           assert_bounds: bool = False):
     """Paged decode attention as a Pallas kernel; same contract as
     :func:`paged_attention_reference`. The block table and lengths are
     scalar-prefetched so the K/V BlockSpec index_maps can walk
-    ``table[b, j]`` — only the sequence's own pages transit HBM->VMEM."""
+    ``table[b, j]`` — only the sequence's own pages transit HBM->VMEM.
+
+    Passing ``k_scales``/``v_scales`` selects the int8 body, whose QK^T /
+    PV registers are certified by an
+    :class:`~repro.quant.spec.AttnDatapathSpec`; ``attn_spec`` is a
+    *request* validated against the record derived from the pool layout
+    (a disagreement raises ``DatapathMismatchError``, never a silent
+    fallback — the ``validate_datapath`` contract). ``assert_bounds``
+    checks the register watermarks in interpret mode."""
+    from repro.quant.spec import AttnDatapathSpec, validate_attn_datapath
+
     B, nh, hd = q.shape
     nb, bs, nkv, _ = k_pages.shape
     _, n_pages = block_table.shape
     g = nh // nkv
     assert nh == nkv * g, (nh, nkv)
+    quantized = k_scales is not None
+    if attn_spec is not None and not quantized:
+        # absence of a record (float pages) is a mismatch, not a match —
+        # the same contract as validate_datapath on unpacked leaves
+        validate_attn_datapath(None, attn_spec)
 
     def page_idx(b, j, tab, lens):
         return (jnp.minimum(tab[b, j], nb - 1), 0, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, nh, hd), lambda b, j, tab, lens: (b, 0, 0)),
+        pl.BlockSpec((1, bs, nkv, hd), page_idx),
+        pl.BlockSpec((1, bs, nkv, hd), page_idx),
+    ]
+    operands = [block_table, seq_lens, q, k_pages, v_pages]
+    if quantized:
+        def scale_idx(b, j, tab, lens):
+            return (jnp.minimum(tab[b, j], nb - 1), 0)
+
+        in_specs += [pl.BlockSpec((1, nkv), scale_idx)] * 2
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
+        derived = AttnDatapathSpec.for_cache(
+            hd, bs, kv_bits=8 * k_pages.dtype.itemsize)
+        if attn_spec is not None:
+            derived.require_matches(attn_spec, context="paged_decode_attention")
+        kernel = functools.partial(
+            _quant_kernel, bs=bs, nkv=nkv, g=g, hd=hd, n_pages=n_pages,
+            softcap=softcap, out_dtype=q.dtype, spec=derived,
+            assert_bounds=assert_bounds,
+        )
+    else:
+        kernel = functools.partial(
+            _kernel, bs=bs, nkv=nkv, g=g, hd=hd, n_pages=n_pages,
+            softcap=softcap, out_dtype=q.dtype,
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, nh, hd), lambda b, j, tab, lens: (b, 0, 0)),
-            pl.BlockSpec((1, bs, nkv, hd), page_idx),
-            pl.BlockSpec((1, bs, nkv, hd), page_idx),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, nh, hd), lambda b, j, tab, lens: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((nh, 1), jnp.float32),  # running max m
             pltpu.VMEM((nh, 1), jnp.float32),  # running normalizer l
             pltpu.VMEM((nh, hd), jnp.float32),  # weighted accumulator
         ],
-    )
-    kernel = functools.partial(
-        _kernel, bs=bs, nkv=nkv, g=g, hd=hd, n_pages=n_pages,
-        softcap=softcap, out_dtype=q.dtype,
     )
     return pl.pallas_call(
         kernel,
@@ -162,4 +346,4 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(block_table, seq_lens, q, k_pages, v_pages)
+    )(*operands)

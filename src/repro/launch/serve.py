@@ -73,6 +73,16 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV page-pool size (--paged); default fits "
                          "--max-concurrency full-length sequences")
+    ap.add_argument("--kv-dtype", type=str, default="act",
+                    choices=("act", "int8"),
+                    help="KV page element type (--paged): act keeps the "
+                         "model act_dtype; int8 stores quantized pages + "
+                         "per-page scales (pool HBM ~halves, attention "
+                         "serves the AttnDatapathSpec integer datapath)")
+    ap.add_argument("--kv-hbm-mb", type=float, default=None,
+                    help="size the page pool to an HBM budget (MB) instead "
+                         "of --num-blocks — at int8 the same budget holds "
+                         "~2x the pages, so admission capacity ~doubles")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -99,19 +109,42 @@ def main(argv=None):
     )
     prompts = np.asarray(data.batch(0)["tokens"])
     sampler = SamplerConfig(temperature=args.temperature, seed=args.seed)
+    if not args.paged and (args.kv_dtype != "act" or args.kv_hbm_mb is not None):
+        raise SystemExit("--kv-dtype/--kv-hbm-mb apply to the paged engine "
+                         "only (add --paged)")
     if args.paged:
         if args.host_loop:
             raise SystemExit("--host-loop applies to the fixed-slot engine only")
+        from repro.serving.scheduler import blocks_for_budget, kv_pool_bytes
+
         pages_per_seq = -(-(args.prompt_len + args.max_new - 1) // args.block_size)
-        num_blocks = args.num_blocks or args.max_concurrency * pages_per_seq
+        if args.kv_hbm_mb is not None and args.num_blocks is not None:
+            raise SystemExit("--num-blocks and --kv-hbm-mb both size the "
+                             "page pool — pass one, not both")
+        if args.kv_hbm_mb is not None:
+            num_blocks = blocks_for_budget(
+                int(args.kv_hbm_mb * 2**20), cfg, args.block_size,
+                args.kv_dtype)
+            if num_blocks < pages_per_seq:
+                raise SystemExit(
+                    f"--kv-hbm-mb {args.kv_hbm_mb} affords {num_blocks} "
+                    f"pages < the {pages_per_seq} one request needs")
+        else:
+            num_blocks = args.num_blocks or args.max_concurrency * pages_per_seq
         engine = PagedEngine(
             params, cfg,
             PagedConfig(block_size=args.block_size, num_blocks=num_blocks,
-                        max_concurrency=args.max_concurrency),
+                        max_concurrency=args.max_concurrency,
+                        kv_dtype=args.kv_dtype),
             sampler,
         )
+        pool_mb = kv_pool_bytes(cfg, num_blocks, args.block_size,
+                                args.kv_dtype) / 2**20
+        attn_dp = (f" attn_datapath=[{engine.attn_spec.describe()}]"
+                   if engine.attn_spec else "")
         print(f"[serve] paged engine: block_size={args.block_size} "
-              f"num_blocks={num_blocks} slots={args.max_concurrency}")
+              f"num_blocks={num_blocks} slots={args.max_concurrency} "
+              f"kv_dtype={args.kv_dtype} pool={pool_mb:.2f}MB{attn_dp}")
         gen = engine.generate
     else:
         engine = GenerationEngine(params, cfg, sampler)

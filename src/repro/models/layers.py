@@ -398,23 +398,58 @@ def resolve_paged_attn_impl(impl: str = "auto") -> str:
     return impl
 
 
-def paged_attention_decode(params, x, cfg: ModelConfig, k_pages, v_pages,
-                           block_table, seq_lens, active, *, impl: str = "ref"):
+def _append_kv_page_quant(pages, scales, page, off, x, kv_bits: int = 8):
+    """Quantize-on-append into an int8 page pool with per-(page, kv-head)
+    scales. ``x``: (B, nkv, hd) — the new token's K or V rows, landing at
+    ``(page[b], off[b])``. The page scale *grows monotonically*: when the
+    new token's magnitude exceeds the page's current scale, the existing
+    codes rescale in place (one bounded extra rounding of at most half a
+    step at the new scale); an ``off == 0`` write is the page's first
+    token (fresh or recycled), so the stale scale resets — whatever codes
+    the page held belong to a freed sequence and are past-length-masked
+    anyway. Inactive rows carry the ``page >= num_blocks`` sentinel: the
+    whole page/scale write drops, so idle slots never corrupt live pages.
+    """
+    qmax = 2 ** (kv_bits - 1) - 1
+    nb, bs = pages.shape[0], pages.shape[1]
+    p_idx = jnp.minimum(page, nb - 1)
+    old = jnp.where((off == 0)[:, None], 0.0, scales[p_idx])  # (B, nkv)
+    tok = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / qmax  # (B, nkv)
+    new = jnp.maximum(jnp.maximum(old, tok), 1e-8)
+    codes = pages[p_idx].astype(jnp.float32)  # (B, bs, nkv, hd)
+    codes = jnp.rint(codes * (old / new)[:, None, :, None])
+    tok_codes = jnp.rint(x.astype(jnp.float32) / new[..., None])  # (B, nkv, hd)
+    sel = (jnp.arange(bs)[None, :] == off[:, None])[..., None, None]
+    codes = jnp.clip(jnp.where(sel, tok_codes[:, None], codes), -qmax, qmax)
+    pages = pages.at[page].set(codes.astype(pages.dtype), mode="drop")
+    scales = scales.at[page].set(new, mode="drop")
+    return pages, scales
+
+
+def paged_attention_decode(params, x, cfg: ModelConfig, pool,
+                           block_table, seq_lens, active, *,
+                           impl: str = "ref", attn_spec=None):
     """Single-token decode against a *paged* KV cache.
 
-    x: (B, 1, d) — B is the engine's slot count. ``k_pages``/``v_pages``
-    are the layer's page pools ``(num_blocks, block_size, nkv, hd)``;
-    ``block_table`` (B, P) int32 maps logical pages to pool pages (entries
-    ``>= num_blocks`` are free-slot sentinels); ``seq_lens`` (B,) int32 is
-    each slot's current length — the new token's KV lands at logical
-    position ``seq_lens[b]`` and attention covers positions
-    ``<= seq_lens[b]``. ``active`` (B,) bool masks the page write for idle
-    slots (their table rows may point at pages since re-allocated to other
-    sequences — the write is routed out of bounds and dropped, so an idle
-    slot can never corrupt a live one). Idle rows still produce (garbage)
-    outputs; the engine discards them.
+    x: (B, 1, d) — B is the engine's slot count. ``pool`` is the layer's
+    page-pool dict: ``k_pages``/``v_pages`` are
+    ``(num_blocks, block_size, nkv, hd)`` (``cfg.act_dtype`` float, or
+    int8 codes when the pool also carries ``k_scales``/``v_scales``
+    per-(page, kv-head) scale leaves — the quantized layout of
+    ``init_paged_cache(kv_dtype="int8")``); ``block_table`` (B, P) int32
+    maps logical pages to pool pages (entries ``>= num_blocks`` are
+    free-slot sentinels); ``seq_lens`` (B,) int32 is each slot's current
+    length — the new token's KV lands at logical position ``seq_lens[b]``
+    and attention covers positions ``<= seq_lens[b]``. ``active`` (B,)
+    bool masks the page write for idle slots (their table rows may point
+    at pages since re-allocated to other sequences — the write is routed
+    out of bounds and dropped, so an idle slot can never corrupt a live
+    one). Idle rows still produce (garbage) outputs; the engine discards
+    them. ``attn_spec`` is the optional
+    :class:`~repro.quant.spec.AttnDatapathSpec` request forwarded to the
+    quantized kernel for validation against the pool layout.
 
-    Returns (y, new_k_pages, new_v_pages).
+    Returns (y, new_pool).
     """
     from repro.kernels.paged_attention import (
         paged_attention_reference,
@@ -424,24 +459,53 @@ def paged_attention_decode(params, x, cfg: ModelConfig, k_pages, v_pages,
     B = x.shape[0]
     positions = seq_lens[:, None]  # (B, 1) — per-slot RoPE positions
     q, k, v = _qkv(params, x, cfg, positions)
+    k_pages, v_pages = pool["k_pages"], pool["v_pages"]
+    quantized = "k_scales" in pool
     nb, bs = k_pages.shape[0], k_pages.shape[1]
+    if attn_spec is not None:
+        # validate the request against the pool-derived record on EVERY
+        # impl (the gather reference included) — a disagreeing record must
+        # raise here too, never silently serve (the validate_datapath
+        # contract; float pools count as "no record")
+        from repro.quant.spec import AttnDatapathSpec, validate_attn_datapath
+
+        derived = (
+            AttnDatapathSpec.for_cache(
+                cfg.head_dim, bs, kv_bits=8 * k_pages.dtype.itemsize)
+            if quantized else None
+        )
+        validate_attn_datapath(derived, attn_spec)
     page = jnp.where(active, block_table[jnp.arange(B), seq_lens // bs], nb)
     off = seq_lens % bs
-    k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype), mode="drop")
-    v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype), mode="drop")
+    if quantized:
+        k_pages, k_scales = _append_kv_page_quant(
+            k_pages, pool["k_scales"], page, off, k[:, 0])
+        v_pages, v_scales = _append_kv_page_quant(
+            v_pages, pool["v_scales"], page, off, v[:, 0])
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages,
+                    "k_scales": k_scales, "v_scales": v_scales}
+        scale_kw = {"k_scales": k_scales, "v_scales": v_scales}
+    else:
+        k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype),
+                                            mode="drop")
+        v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype),
+                                            mode="drop")
+        new_pool = {"k_pages": k_pages, "v_pages": v_pages}
+        scale_kw = {}
     lens_now = seq_lens + 1  # attend over positions < lens_now (self incl.)
     if impl == "ref":
         out = paged_attention_reference(
             q[:, 0], k_pages, v_pages, block_table, lens_now,
-            softcap=cfg.attn_logit_softcap,
+            softcap=cfg.attn_logit_softcap, **scale_kw,
         )
     else:
         out = paged_decode_attention(
             q[:, 0], k_pages, v_pages, block_table, lens_now,
-            softcap=cfg.attn_logit_softcap, interpret=(impl == "interpret"),
+            softcap=cfg.attn_logit_softcap, attn_spec=attn_spec,
+            interpret=(impl == "interpret"), **scale_kw,
         )
     y = pmm(params, "wo", out.reshape(B, 1, cfg.n_heads * cfg.head_dim))
-    return y, k_pages, v_pages
+    return y, new_pool
 
 
 def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v, index):

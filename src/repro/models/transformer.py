@@ -210,7 +210,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = Fals
 
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
-                     block_size: int, max_pages: int, abstract: bool = False):
+                     block_size: int, max_pages: int, abstract: bool = False,
+                     kv_dtype: str | None = None):
     """Paged decode cache: one KV *page pool* per attention slot plus the
     shared continuous-batching state (see docs/serving_scheduler.md).
 
@@ -221,6 +222,16 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
     (continuous batching swaps a slot's state wholesale at admission).
     Page allocation state (``free_list`` stack + ``free_top``) is part of
     the pytree so pop/push happen inside the jitted admit/release programs.
+
+    ``kv_dtype`` selects the pool element type (default ``cfg.act_dtype``).
+    ``kv_dtype="int8"`` stores *quantized* pages: int8 codes plus
+    per-(page, kv-head) symmetric ``k_scales``/``v_scales`` f32 leaves
+    (``(R, num_blocks, nkv)``) — pool HBM halves vs bf16 and attention
+    runs the :class:`~repro.quant.spec.AttnDatapathSpec`-certified integer
+    datapath (see ``repro.kernels.paged_attention``). Scales start at
+    zero; admission stamps them per scattered page and the decode append
+    resets them on a page's first write, so recycled pages can never leak
+    a stale scale into a live sequence.
     """
 
     def make(shape, dtype):
@@ -228,13 +239,20 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
             return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
         return jnp.zeros(shape, dtype)
 
+    kv_dtype = kv_dtype or cfg.act_dtype
+    kv_quantized = jnp.dtype(kv_dtype) == jnp.int8
     pools = []
     for spec in cfg.pattern:
         if spec.mixer == "attn":
             kv = (cfg.repeats, num_blocks, block_size, cfg.n_kv_heads,
                   cfg.head_dim)
-            pools.append({"k_pages": make(kv, cfg.act_dtype),
-                          "v_pages": make(kv, cfg.act_dtype)})
+            pool = {"k_pages": make(kv, kv_dtype),
+                    "v_pages": make(kv, kv_dtype)}
+            if kv_quantized:
+                sc = (cfg.repeats, num_blocks, cfg.n_kv_heads)
+                pool["k_scales"] = make(sc, jnp.float32)
+                pool["v_scales"] = make(sc, jnp.float32)
+            pools.append(pool)
         else:
             shapes = _slot_cache_shapes(spec, cfg, num_slots, block_size)
             pools.append({
@@ -263,13 +281,15 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
 
 
 def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
-                      attn_impl: str = "ref"):
+                      attn_impl: str = "ref", attn_spec=None):
     """One decode step over the paged cache. tokens: (num_slots, 1) int32.
 
     Unlike :func:`decode_step`'s single scalar ``index``, every slot
     advances at its own ``cache["seq_lens"]`` position (heterogeneous
     lengths are the point of paging); idle slots (``active`` False) compute
-    but write nothing and do not advance. Returns (logits, new_cache).
+    but write nothing and do not advance. ``attn_spec`` is the optional
+    :class:`~repro.quant.spec.AttnDatapathSpec` request, forwarded when
+    the pools hold int8 quantized pages. Returns (logits, new_cache).
     """
     from repro.models.layers import paged_attention_decode
 
@@ -286,12 +306,11 @@ def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
             c_in = slot_caches[i]
             if spec.mixer == "attn":
                 h = norm(p["norm1"], x, cfg.norm)
-                y, kp, vp = paged_attention_decode(
-                    p["mixer"], h, cfg, c_in["k_pages"], c_in["v_pages"],
-                    table, lens, active, impl=attn_impl,
+                y, c_out = paged_attention_decode(
+                    p["mixer"], h, cfg, c_in, table, lens, active,
+                    impl=attn_impl, attn_spec=attn_spec,
                 )
                 x = x + y
-                c_out = {"k_pages": kp, "v_pages": vp}
             elif spec.mixer != "none":
                 h = norm(p["norm1"], x, cfg.norm)
                 y, c_out = _mixer_decode(p, spec, cfg, h, c_in, 0)

@@ -329,6 +329,12 @@ def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
             # (divisibility fallback in resolve_spec -> replicated)
             names = (None, None, None, "kv_heads", None)
             return NamedSharding(mesh, resolve_spec(leaf.shape, names, mesh, rules))
+        if name in ("k_scales", "v_scales") and leaf.ndim == 3:
+            # (R, num_blocks, nkv): int8-KV per-(page, head) scales — must
+            # co-shard with the pools' kv_heads axis so a device holding a
+            # head's codes also holds its scales; page axis never shards
+            names = (None, None, "kv_heads")
+            return NamedSharding(mesh, resolve_spec(leaf.shape, names, mesh, rules))
         if name in ("k", "v") and leaf.ndim == 5:
             nkv = leaf.shape[3]
             if nkv % model_size == 0:

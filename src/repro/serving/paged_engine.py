@@ -52,7 +52,12 @@ from repro.models.transformer import (
     prefill,
 )
 from repro.quant.serve_packed import upgrade_packed_params
-from repro.quant.spec import tree_datapath_fingerprint, validate_datapath
+from repro.quant.spec import (
+    AttnDatapathSpec,
+    tree_datapath_fingerprint,
+    validate_attn_datapath,
+    validate_datapath,
+)
 from repro.serving.engine import SamplerConfig, _sample
 from repro.serving.scheduler import Request, Scheduler
 
@@ -66,6 +71,11 @@ class PagedConfig:
     the page granularity; ``max_pages_per_seq`` caps one sequence's block
     table row (defaults to ``ceil(max_seq_len / block_size)``);
     ``chunk_max`` bounds how many decode steps run per host sync.
+    ``kv_dtype="int8"`` stores *quantized* KV pages (int8 codes +
+    per-(page, kv-head) scale leaves — pool HBM halves, so an HBM budget
+    admits ~2x the sequences; see ``scheduler.blocks_for_budget``) and
+    attention runs the AttnDatapathSpec-certified integer datapath;
+    ``"act"`` keeps ``cfg.act_dtype`` float pages.
     """
 
     block_size: int = 64
@@ -74,6 +84,7 @@ class PagedConfig:
     max_pages_per_seq: int | None = None
     chunk_max: int = 32
     attn_impl: str = "auto"  # auto | ref | kernel | interpret
+    kv_dtype: str = "act"  # act (= cfg.act_dtype) | int8 (quantized pages)
 
 
 def _fold_keys(seed: int, uids, steps):
@@ -94,22 +105,37 @@ def _sample_rows(logits, temperature: float, keys):
 
 class PagedEngine:
     def __init__(self, params, cfg: ModelConfig, paged: PagedConfig = PagedConfig(),
-                 sampler: SamplerConfig = SamplerConfig(), datapath=None):
+                 sampler: SamplerConfig = SamplerConfig(), datapath=None,
+                 attn_datapath=None):
         self.params = upgrade_packed_params(params)
         if datapath is not None:
             validate_datapath(self.params, datapath)
         self.datapath_fingerprint = tree_datapath_fingerprint(self.params)
         self.cfg = cfg
         self.sampler = sampler
+        if paged.kv_dtype not in ("act", "int8"):
+            raise ValueError(f"kv_dtype {paged.kv_dtype!r} not in ('act', 'int8')")
         max_pages = paged.max_pages_per_seq or -(-cfg.max_seq_len // paged.block_size)
         self.paged = paged = PagedConfig(
             block_size=paged.block_size, num_blocks=paged.num_blocks,
             max_concurrency=paged.max_concurrency, max_pages_per_seq=max_pages,
             chunk_max=paged.chunk_max, attn_impl=paged.attn_impl,
+            kv_dtype=paged.kv_dtype,
         )
+        #: the attention accumulator record the quantized kernel serves
+        #: (None for float KV) — the attention analogue of the per-site
+        #: DatapathSpec; ``attn_datapath`` is a *request* validated
+        #: against it exactly like ``datapath`` against the packed leaves
+        self.attn_spec = (
+            AttnDatapathSpec.for_cache(cfg.head_dim, paged.block_size)
+            if paged.kv_dtype == "int8" else None
+        )
+        if attn_datapath is not None:
+            validate_attn_datapath(self.attn_spec, attn_datapath)
         self.cache = init_paged_cache(
             cfg, paged.max_concurrency, paged.num_blocks, paged.block_size,
             max_pages,
+            kv_dtype="int8" if paged.kv_dtype == "int8" else None,
         )
         #: trace counters (python side effects — bump at trace time only)
         self.admit_traces = 0
@@ -130,11 +156,12 @@ class PagedEngine:
                 return self._admit_impl(params, cache, prompt, slot, uid,
                                         n_pages)
 
-        @partial(jax.jit, static_argnames=("backend", "attn_impl", "datapath"),
+        @partial(jax.jit, static_argnames=("backend", "attn_impl", "datapath",
+                                           "attn_spec"),
                  donate_argnames=("cache",))
-        def _chunk(params, cache, k, backend, attn_impl, datapath):
+        def _chunk(params, cache, k, backend, attn_impl, datapath, attn_spec):
             with use_packed_backend(backend):
-                return self._chunk_impl(params, cache, k, attn_impl)
+                return self._chunk_impl(params, cache, k, attn_impl, attn_spec)
 
         @partial(jax.jit, static_argnames=("n_pages",),
                  donate_argnames=("cache",))
@@ -179,11 +206,26 @@ class PagedEngine:
                     r, _, _, nkv, hd = a.shape
                     return a.reshape(r, n_prompt_pages, bs, nkv, hd)
 
-                kp = c["k_pages"].at[:, prompt_pages].set(
-                    to_pages(d["k"]).astype(c["k_pages"].dtype))
-                vp = c["v_pages"].at[:, prompt_pages].set(
-                    to_pages(d["v"]).astype(c["v_pages"].dtype))
-                pools.append({"k_pages": kp, "v_pages": vp})
+                if "k_scales" in c:
+                    # quantize-on-scatter: codes + per-(page, head) scales
+                    # stamped together (padded tail positions are zeros and
+                    # cannot raise a page's max)
+                    from repro.kernels.paged_attention import quantize_kv_pages
+
+                    kc, ks = quantize_kv_pages(to_pages(d["k"]))
+                    vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                    pools.append({
+                        "k_pages": c["k_pages"].at[:, prompt_pages].set(kc),
+                        "v_pages": c["v_pages"].at[:, prompt_pages].set(vc),
+                        "k_scales": c["k_scales"].at[:, prompt_pages].set(ks),
+                        "v_scales": c["v_scales"].at[:, prompt_pages].set(vs),
+                    })
+                else:
+                    kp = c["k_pages"].at[:, prompt_pages].set(
+                        to_pages(d["k"]).astype(c["k_pages"].dtype))
+                    vp = c["v_pages"].at[:, prompt_pages].set(
+                        to_pages(d["v"]).astype(c["v_pages"].dtype))
+                    pools.append({"k_pages": kp, "v_pages": vp})
             elif spec.mixer != "none":
                 # recurrent state: splice the (R, 1, ...) prefill state into
                 # the slot's lane of the (R, num_slots, ...) batch
@@ -212,7 +254,7 @@ class PagedEngine:
         new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
         return new, nxt[0]
 
-    def _chunk_impl(self, params, cache, k, attn_impl: str):
+    def _chunk_impl(self, params, cache, k, attn_impl: str, attn_spec):
         """Up to ``chunk_max`` decode steps; ``k`` is a *dynamic* trip
         count so every chunk length reuses one trace."""
         self.chunk_traces += 1
@@ -228,7 +270,7 @@ class PagedEngine:
             t, cache, buf = st
             logits, cache = decode_step_paged(
                 params, cache["last_tok"][:, None], cache, cfg,
-                attn_impl=attn_impl)
+                attn_impl=attn_impl, attn_spec=attn_spec)
             keys = _fold_keys(samp.seed, cache["uids"], cache["steps"])
             nxt = _sample_rows(logits[:, -1], samp.temperature, keys)
             active = cache["active"]
@@ -305,7 +347,7 @@ class PagedEngine:
             k = min(self.paged.chunk_max, sched.min_remaining())
             self.cache, buf = self._chunk(
                 self.params, self.cache, jnp.int32(k), backend, attn_impl,
-                self.datapath_fingerprint)
+                self.datapath_fingerprint, self.attn_spec)
             buf = np.asarray(jax.device_get(buf))
             for slot in list(sched.active):
                 toks = buf[slot, :k].tolist()[: sched.remaining(slot)]

@@ -24,6 +24,40 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# Pool HBM accounting (the docs/serving_scheduler.md formula)
+# ---------------------------------------------------------------------------
+def kv_page_bytes(cfg, block_size: int, kv_dtype: str = "act") -> int:
+    """Bytes one KV page costs across every attention layer of the stack
+    (K and V, codes plus — for ``kv_dtype="int8"`` — the per-(page,
+    kv-head) f32 scale leaves). This is the unit the admission reservation
+    multiplies: a request's worst case is ``pages_for(S0, max_new)`` of
+    these."""
+    n_attn = sum(1 for s in cfg.pattern if s.mixer == "attn") * cfg.repeats
+    itemsize = 1 if kv_dtype == "int8" else np.dtype(cfg.act_dtype).itemsize
+    per_page = 2 * block_size * cfg.n_kv_heads * cfg.head_dim * itemsize
+    if kv_dtype == "int8":
+        per_page += 2 * cfg.n_kv_heads * 4  # k_scales + v_scales, f32
+    return n_attn * per_page
+
+
+def kv_pool_bytes(cfg, num_blocks: int, block_size: int,
+                  kv_dtype: str = "act") -> int:
+    """Total KV pool HBM for a ``num_blocks``-page pool — int8 pages cost
+    about half the bf16 pool (exactly half plus the scale leaves)."""
+    return num_blocks * kv_page_bytes(cfg, block_size, kv_dtype)
+
+
+def blocks_for_budget(budget_bytes: int, cfg, block_size: int,
+                      kv_dtype: str = "act") -> int:
+    """Largest page pool an HBM budget affords. Because int8 pages cost
+    ~half the bf16 bytes, the same budget holds ~2x the pages — and since
+    admission reserves the worst case in *pages*, the scheduler admits
+    ~2x the sequences before stalling (asserted in tests/test_scheduler.py).
+    """
+    return budget_bytes // kv_page_bytes(cfg, block_size, kv_dtype)
+
+
 @dataclass(frozen=True)
 class Request:
     """One generation request: ``uid`` must be unique per engine lifetime

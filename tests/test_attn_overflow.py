@@ -1,0 +1,188 @@
+"""The attention analogue of ``test_overflow.py``: the
+:class:`~repro.quant.spec.AttnDatapathSpec` accumulator record certifies
+that the quantized paged-attention reductions — the hd-deep QK^T dot and
+the per-page block_size-deep PV dot — never overflow their P_qk / P_pv
+registers for ANY codes in their alphabets, and that both bounds are
+*tight*: one fewer bit genuinely wraps on the adversarial ±max-code pages.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.quant.spec import (
+    AttnDatapathSpec,
+    DatapathMismatchError,
+    attn_accumulator_bits,
+    validate_attn_datapath,
+)
+
+
+def _signed_limit(p):
+    return 2 ** (p - 1) - 1
+
+
+def _wrap(x, p_bits):
+    """Two's-complement wrap of an exact int64 value into a P-bit register."""
+    m = np.int64(1) << (p_bits - 1)
+    return ((x + m) % (2 * m)) - m
+
+
+@pytest.mark.parametrize("hd,bs", [(8, 8), (20, 16), (64, 64), (128, 128),
+                                   (7, 8), (11, 16)])
+def test_spec_bounds_hold_and_are_tight(hd, bs):
+    spec = AttnDatapathSpec.for_cache(hd, bs)
+    assert spec.certify()
+    # tight: P-1 bits does overflow for both registers
+    assert spec.qk_worst_abs() > _signed_limit(spec.p_qk - 1)
+    assert spec.pv_worst_abs() > _signed_limit(spec.p_pv - 1)
+
+
+def test_accumulator_bits_matches_analytic_bound():
+    # hd * q_qmax * kv_qmax for hd=128 int8xint8: 128 * 127 * 127
+    #   = 2064512 <= 2^21 - 1, so a 22-bit register holds it
+    assert attn_accumulator_bits(128, 127, 127) == 22
+    # bs * prob_qmax * kv_qmax for bs=128: 128 * 255 * 127
+    #   = 4145280 <= 2^22 - 1 -> 23 bits
+    assert attn_accumulator_bits(128, 255, 127) == 23
+    # the defaults are exactly the hd=128 / bs=128 recipe
+    d = AttnDatapathSpec()
+    assert (d.p_qk, d.p_pv) == (22, 23) and d.certify()
+    with pytest.raises(ValueError, match="depth"):
+        attn_accumulator_bits(0, 127, 127)
+
+
+@pytest.mark.parametrize("hd,bs", [(16, 8), (64, 32)])
+def test_adversarial_max_code_pages_never_wrap(rng, hd, bs):
+    """Exhaustive adversary, mirroring ``simulate_accumulation``: dot the
+    ±max-code K/V pages against ±max query / probability codes plus random
+    codes; the exact int64 accumulation must survive a P-bit register
+    unchanged (no wrap) — and genuinely wrap at P-1 bits."""
+    spec = AttnDatapathSpec.for_cache(hd, bs)
+
+    # QK^T: q codes x k codes over hd
+    k_adv = np.full((bs, hd), spec.kv_qmax, np.int64)
+    q_rows = np.stack([
+        np.full(hd, spec.q_qmax, np.int64),
+        np.full(hd, -spec.q_qmax, np.int64),
+        rng.integers(-spec.q_qmax, spec.q_qmax + 1, size=hd),
+    ])
+    s_exact = q_rows @ k_adv.T  # int64, worst |value| = qk_worst_abs
+    assert np.abs(s_exact).max() == spec.qk_worst_abs()
+    assert np.abs(s_exact).max() <= _signed_limit(spec.p_qk)
+    np.testing.assert_array_equal(_wrap(s_exact, spec.p_qk), s_exact)
+    assert (_wrap(s_exact, spec.p_qk - 1) != s_exact).any()  # P-1 wraps
+
+    # PV: probability codes x v codes over the page
+    v_adv = np.full((bs, hd), -spec.kv_qmax, np.int64)
+    p_rows = np.stack([
+        np.full(bs, spec.prob_qmax, np.int64),
+        rng.integers(0, spec.prob_qmax + 1, size=bs),
+    ])
+    pv_exact = p_rows @ v_adv
+    assert np.abs(pv_exact).max() == spec.pv_worst_abs()
+    assert np.abs(pv_exact).max() <= _signed_limit(spec.p_pv)
+    np.testing.assert_array_equal(_wrap(pv_exact, spec.p_pv), pv_exact)
+    assert (_wrap(pv_exact, spec.p_pv - 1) != pv_exact).any()
+
+
+def test_kernel_register_checks_hold_on_adversarial_pages():
+    """Drive the interpret-mode kernel over ±max-code pages with a query
+    that quantizes to ±max codes, with ``assert_bounds=True``: the QK^T
+    watermark achieves exactly ``hd * q_qmax * kv_qmax`` and the in-kernel
+    register checks must still pass (the certificate is not vacuous —
+    these are the worst inputs the alphabet admits)."""
+    B, nkv, g, hd, bs, P = 2, 2, 2, 16, 8, 2
+    nh = nkv * g
+    nb = B * P
+    spec = AttnDatapathSpec.for_cache(hd, bs)
+    # constant-sign max-magnitude rows quantize to exactly ±q_qmax codes
+    q = jnp.ones((B, nh, hd), jnp.float32) * 3.0
+    kc = jnp.full((nb, bs, nkv, hd), spec.kv_qmax, jnp.int8)
+    vc = jnp.full((nb, bs, nkv, hd), -spec.kv_qmax, jnp.int8)
+    scales = jnp.full((nb, nkv), 0.01, jnp.float32)
+    tab = jnp.arange(nb, dtype=jnp.int32).reshape(B, P)
+    lens = jnp.asarray([P * bs, P * bs - 1], jnp.int32)
+    out = paged_decode_attention(q, kc, vc, tab, lens, k_scales=scales,
+                                 v_scales=scales, interpret=True,
+                                 assert_bounds=True)
+    # every value row is the constant -kv_qmax * scale vector; the weighted
+    # average of a constant is that constant, whatever the probabilities
+    want = -float(spec.kv_qmax) * 0.01
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-3)
+
+
+def test_validate_attn_datapath_contract():
+    spec = AttnDatapathSpec.for_cache(16, 8)
+    validate_attn_datapath(spec, AttnDatapathSpec.for_cache(16, 8))
+    with pytest.raises(DatapathMismatchError, match="float KV"):
+        validate_attn_datapath(None, spec)
+    with pytest.raises(DatapathMismatchError, match="attention datapath"):
+        validate_attn_datapath(spec, AttnDatapathSpec.for_cache(16, 16))
+    # scale_bound is calibration numerics, not datapath identity
+    import dataclasses
+
+    validate_attn_datapath(spec, dataclasses.replace(spec, scale_bound=0.5))
+
+
+def test_kernel_spec_request_validated_like_weight_sites(rng):
+    """A quantized-kernel call with a disagreeing AttnDatapathSpec request
+    raises loudly (the packed_linear contract), and the matching request
+    passes."""
+    B, nkv, g, hd, bs, P = 2, 2, 1, 8, 4, 2
+    nh, nb = nkv * g, B * P
+    q = jnp.asarray(rng.normal(size=(B, nh, hd)), jnp.float32)
+    kc = jnp.asarray(rng.integers(-127, 128, size=(nb, bs, nkv, hd)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, size=(nb, bs, nkv, hd)), jnp.int8)
+    sc = jnp.full((nb, nkv), 0.05, jnp.float32)
+    tab = jnp.arange(nb, dtype=jnp.int32).reshape(B, P)
+    lens = jnp.asarray([3, 7], jnp.int32)
+    good = AttnDatapathSpec.for_cache(hd, bs)
+    paged_decode_attention(q, kc, vc, tab, lens, k_scales=sc, v_scales=sc,
+                           attn_spec=good, interpret=True)
+    with pytest.raises(DatapathMismatchError, match="attention datapath"):
+        paged_decode_attention(q, kc, vc, tab, lens, k_scales=sc, v_scales=sc,
+                               attn_spec=AttnDatapathSpec.for_cache(hd, 2 * bs),
+                               interpret=True)
+    # a request against FLOAT pages must raise too (absence of a record is
+    # a mismatch, not a match) — never a silent float fallback
+    kf = jnp.asarray(rng.normal(size=(nb, bs, nkv, hd)), jnp.float32)
+    with pytest.raises(DatapathMismatchError, match="float KV"):
+        paged_decode_attention(q, kf, kf, tab, lens, attn_spec=good,
+                               interpret=True)
+
+
+def test_layer_ref_impl_validates_spec_request(rng):
+    """The gather-reference impl (the CPU default) enforces the same
+    request validation as the kernel: a disagreeing AttnDatapathSpec (or
+    any request against a float pool) raises from the layer seam."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models.layers import init_attention, paged_attention_decode
+    from repro.models.transformer import init_paged_cache
+
+    cfg = get_smoke("smollm-360m")
+    p = init_attention(jax.random.key(0), cfg)
+    B, bs = 2, 8
+    cache = init_paged_cache(cfg, B, 8, bs, 2, kv_dtype="int8")
+    pool = {k: v[0] for k, v in cache["pools"][0].items()}  # strip R
+    x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
+    table = jnp.zeros((B, 2), jnp.int32).at[1, 0].set(1)
+    lens = jnp.asarray([1, 1], jnp.int32)
+    active = jnp.ones((B,), bool)
+    good = AttnDatapathSpec.for_cache(cfg.head_dim, bs)
+    y, new_pool = paged_attention_decode(p, x, cfg, pool, table, lens,
+                                         active, impl="ref", attn_spec=good)
+    assert "k_scales" in new_pool and y.shape == (B, 1, cfg.d_model)
+    with pytest.raises(DatapathMismatchError, match="attention datapath"):
+        paged_attention_decode(p, x, cfg, pool, table, lens, active,
+                               impl="ref",
+                               attn_spec=AttnDatapathSpec.for_cache(
+                                   cfg.head_dim, 2 * bs))
+    float_pool = {k: v for k, v in pool.items() if "scales" not in k}
+    float_pool = {k: v.astype(jnp.float32) for k, v in float_pool.items()}
+    with pytest.raises(DatapathMismatchError, match="float KV"):
+        paged_attention_decode(p, x, cfg, float_pool, table, lens, active,
+                               impl="ref", attn_spec=good)

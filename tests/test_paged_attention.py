@@ -1,6 +1,7 @@
 """Paged decode-attention kernel vs the gather reference — interpret-mode
 shape/raggedness sweeps (the w4a8_mm testing pattern), plus agreement of
-the gather reference with the dense-slab ``attention_decode`` math."""
+the gather reference with the dense-slab ``attention_decode`` math, for
+both the float and the int8-quantized KV paths."""
 
 import math
 
@@ -10,8 +11,10 @@ import numpy as np
 import pytest
 
 from repro.kernels.paged_attention import (
+    dequantize_kv_pages,
     paged_attention_reference,
     paged_decode_attention,
+    quantize_kv_pages,
 )
 
 
@@ -31,6 +34,11 @@ def _random_case(rng, B, nkv, g, hd, bs, P, extra_blocks=4, dtype=jnp.float32):
         tab[b, :n_pages] = perm[o:o + n_pages]
         o += n_pages
     return q, kp, vp, jnp.asarray(tab), jnp.asarray(lens)
+
+
+def _quantize_case(kp, vp):
+    (kc, ks), (vc, vs) = quantize_kv_pages(kp), quantize_kv_pages(vp)
+    return kc, vc, {"k_scales": ks, "v_scales": vs}
 
 
 @pytest.mark.parametrize(
@@ -97,3 +105,133 @@ def test_reference_matches_dense_slab_math(rng):
     tab = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
     ref = paged_attention_reference(q, kp, vp, tab, lens)
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(dense))
+
+
+# ---------------------------------------------------------------------------
+# Ragged-shape parity sweep: interpret-mode kernel vs gather reference over
+# page-boundary lengths and awkward head shapes — float AND int8 KV paths.
+# ---------------------------------------------------------------------------
+def _sweep_lens(rng, B, bs, P, mode):
+    """Row lengths exercising the mode: not-divisible, exact last block,
+    and the ±1 brackets around an exact last block."""
+    full = P * bs
+    if mode == "ragged":  # S % bs != 0 everywhere
+        lens = [(i * bs + 1 + int(rng.integers(0, bs - 1))) % full or 1
+                for i in range(B)]
+        lens = [ln if ln % bs else ln - 1 or 1 for ln in lens]
+    elif mode == "exact":  # every row ends exactly on a page boundary
+        lens = [((i % P) + 1) * bs for i in range(B)]
+    else:  # "exact±1": brackets around the boundary (and the full table)
+        lens = [max(1, bs - 1), bs + 1, full, max(1, full - 1)][:B]
+    return jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("kv", ["float", "int8"])
+@pytest.mark.parametrize("bs", [8, 16, 128])
+@pytest.mark.parametrize("mode", ["ragged", "exact", "exact±1"])
+def test_kernel_parity_sweep_block_sizes(rng, kv, bs, mode):
+    B, nkv, g, hd, P = 4, 2, 2, 16, 2 if bs == 128 else 3
+    q, kp, vp, tab, _ = _random_case(rng, B, nkv, g, hd, bs, P)
+    lens = _sweep_lens(rng, B, bs, P, mode)
+    if kv == "float":
+        ref = paged_attention_reference(q, kp, vp, tab, lens)
+        ker = paged_decode_attention(q, kp, vp, tab, lens, interpret=True)
+        tol = dict(rtol=1e-5, atol=1e-5)
+    else:
+        kc, vc, scales = _quantize_case(kp, vp)
+        ref = paged_attention_reference(q, kc, vc, tab, lens, **scales)
+        ker = paged_decode_attention(q, kc, vc, tab, lens, interpret=True,
+                                     assert_bounds=True, **scales)
+        # the kernel runs the integer datapath (q and softmax probabilities
+        # quantized on top of the shared KV codes); the reference dequantizes
+        # and runs float math — agreement is to quantization tolerance
+        tol = dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), **tol)
+
+
+@pytest.mark.parametrize("kv", ["float", "int8"])
+@pytest.mark.parametrize(
+    "B,nkv,g,hd,bs,P",
+    [
+        (3, 1, 3, 7, 8, 3),   # odd nh (3) and odd hd (7)
+        (2, 3, 1, 16, 8, 2),  # odd nkv == nh
+        (3, 1, 5, 11, 16, 2),  # odd everything, MQA grouping
+    ],
+)
+def test_kernel_parity_odd_heads(rng, kv, B, nkv, g, hd, bs, P):
+    q, kp, vp, tab, lens = _random_case(rng, B, nkv, g, hd, bs, P)
+    if kv == "float":
+        ref = paged_attention_reference(q, kp, vp, tab, lens)
+        ker = paged_decode_attention(q, kp, vp, tab, lens, interpret=True)
+        tol = dict(rtol=1e-5, atol=1e-5)
+    else:
+        kc, vc, scales = _quantize_case(kp, vp)
+        ref = paged_attention_reference(q, kc, vc, tab, lens, **scales)
+        ker = paged_decode_attention(q, kc, vc, tab, lens, interpret=True,
+                                     assert_bounds=True, **scales)
+        tol = dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), **tol)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV: the quantized gather reference is the quantize→dequantize image
+# of the dense-slab math — bit-identical (the golden anchor the engine
+# accuracy test builds on).
+# ---------------------------------------------------------------------------
+def test_quantized_reference_is_dequantized_dense_math(rng):
+    B, nkv, g, hd, bs, P = 2, 2, 2, 16, 8, 2
+    nh = nkv * g
+    S = P * bs
+    q = jnp.asarray(rng.normal(size=(B, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, nkv, hd)), jnp.float32)
+    lens = jnp.asarray([5, 13], jnp.int32)
+
+    # quantize per page, then lay the *dequantized* values back into a
+    # dense slab and run the dense-slab decode-attention math on them
+    kc, ks = quantize_kv_pages(k.reshape(B * P, bs, nkv, hd))
+    vc, vs = quantize_kv_pages(v.reshape(B * P, bs, nkv, hd))
+    k_dq = dequantize_kv_pages(kc, ks).reshape(B, S, nkv, hd)
+    v_dq = dequantize_kv_pages(vc, vs).reshape(B, S, nkv, hd)
+    qg = q.reshape(B, nkv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_dq).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    dense = jnp.einsum("bkgs,bskd->bkgd", p, v_dq).reshape(B, nh, hd)
+
+    tab = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    ref = paged_attention_reference(q, kc, vc, tab, lens,
+                                    k_scales=ks, v_scales=vs)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(dense))
+
+
+def test_quantize_kv_pages_roundtrip(rng):
+    """Per-(page, head) symmetric quantization: codes bounded by the int8
+    alphabet, round-trip error within half a step of each page's scale,
+    and all-zero pages keep the 1e-8 floor scale (no NaNs)."""
+    pages = jnp.asarray(rng.normal(size=(5, 8, 3, 16)) * 4.0, jnp.float32)
+    pages = pages.at[0].set(0.0)
+    codes, scales = quantize_kv_pages(pages)
+    assert codes.dtype == jnp.int8 and scales.shape == (5, 3)
+    assert int(jnp.max(jnp.abs(codes))) <= 127
+    assert float(scales[0].min()) == pytest.approx(1e-8)
+    err = jnp.abs(dequantize_kv_pages(codes, scales) - pages)
+    assert float(jnp.max(err / scales[:, None, :, None])) <= 0.5 + 1e-6
+
+
+def test_quantized_scale_indexing_follows_block_table(rng):
+    """Pages with wildly different magnitudes: the reference must pair each
+    gathered page with *its* scale through the same table indirection (a
+    mispairing is off by orders of magnitude, not tolerance)."""
+    B, nkv, g, hd, bs, P = 2, 2, 1, 8, 4, 2
+    q, kp, vp, tab, lens = _random_case(rng, B, nkv, g, hd, bs, P)
+    # scale page magnitudes by their pool index so every page differs
+    mags = jnp.exp(jnp.linspace(0.0, 4.0, kp.shape[0]))[:, None, None, None]
+    kc, vc, scales = _quantize_case(kp * mags, vp * mags)
+    ref = paged_attention_reference(q, kc, vc, tab, lens, **scales)
+    ker = paged_decode_attention(q, kc, vc, tab, lens, interpret=True,
+                                 **scales)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)

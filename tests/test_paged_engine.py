@@ -1,9 +1,16 @@
 """PagedEngine (paged KV + continuous batching) vs the dense-slab
 GenerationEngine: golden bit-identity, mid-flight admission, page
 exhaustion stalls, exact-block-boundary sequences, free-list reuse after
-early EOS, and trace/bucket accounting."""
+early EOS, trace/bucket accounting — plus the int8 quantized-KV golden
+accuracy battery (briefly *trained* tiny models, whose greedy gaps dwarf
+the int8 page-quantization noise, so token-for-token equality is a
+structural property rather than seed luck) and the randomized device
+free-list property sweep."""
+
+import random
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -28,11 +35,40 @@ def setup():
     return cfg, params, prompts
 
 
-def _paged(cfg, params, sampler=GREEDY, **kw):
+def _train_briefly(cfg, steps=250, lr=2e-3):
+    from repro.data import DataConfig, TokenBatcher
+    from repro.optim import OptimizerConfig
+    from repro.runtime.steps import TrainRunConfig, init_train_state, make_train_step
+
+    run = TrainRunConfig(optimizer=OptimizerConfig(
+        lr=lr, warmup_steps=10, total_steps=steps))
+    state = init_train_state(jax.random.key(0), cfg, run)
+    step = jax.jit(make_train_step(cfg, run), donate_argnums=(0,))
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                   global_batch=8, seed=7))
+    for i in range(steps):
+        state, _ = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+    return state["params"]
+
+
+@pytest.fixture(scope="module")
+def trained_dense():
+    cfg = get_smoke("smollm-360m").scaled(n_layers=2, vocab=128)
+    return cfg, _train_briefly(cfg)
+
+
+@pytest.fixture(scope="module")
+def trained_hybrid():
+    cfg = get_config("tiny-hybrid")
+    return cfg, _train_briefly(cfg)
+
+
+def _paged(cfg, params, sampler=GREEDY, attn_datapath=None, **kw):
     pc = dict(block_size=8, num_blocks=16, max_concurrency=3,
               max_pages_per_seq=4, chunk_max=4, attn_impl="ref")
     pc.update(kw)
-    return PagedEngine(params, cfg, PagedConfig(**pc), sampler)
+    return PagedEngine(params, cfg, PagedConfig(**pc), sampler,
+                       attn_datapath=attn_datapath)
 
 
 def test_golden_equal_length_batch_bit_identical(setup):
@@ -159,6 +195,174 @@ def test_sampled_request_determinism(setup):
          Request(uid=9, prompt=prompts[1], max_new=6),
          Request(uid=11, prompt=prompts[2], max_new=3)])
     np.testing.assert_array_equal(alone[5], batched[5])
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized KV pages: golden accuracy + datapath validation
+# ---------------------------------------------------------------------------
+def test_int8_kv_golden_greedy_matches_float_dense(trained_dense):
+    """Acceptance golden: greedy decode over int8 quantized pages matches
+    float-KV decode token-for-token (dense attention-only config), for
+    both gather-reference and interpret-mode kernel implementations."""
+    cfg, params = trained_dense
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=(3, 8)).astype(np.int32)
+    ref = _paged(cfg, params).generate(prompts, 8)
+    np.testing.assert_array_equal(
+        ref, GenerationEngine(params, cfg, GREEDY).generate(prompts, 8))
+    q8 = _paged(cfg, params, kv_dtype="int8").generate(prompts, 8)
+    np.testing.assert_array_equal(q8, ref)
+    q8k = _paged(cfg, params, kv_dtype="int8",
+                 attn_impl="interpret").generate(prompts, 8)
+    np.testing.assert_array_equal(q8k, ref)
+
+
+def test_int8_kv_golden_greedy_matches_float_hybrid(trained_hybrid):
+    """Same golden on the hybrid attn+mamba pattern: quantized attention
+    pages coexist with dense recurrent per-slot state, including a
+    mid-flight admission into recycled pages."""
+    cfg, params = trained_hybrid
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=u, prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+                    max_new=[8, 12, 4][u]) for u in range(3)]
+    # 2 slots for 3 requests: uid 2 admits into pages freed mid-flight
+    kw = dict(max_concurrency=2, num_blocks=8, max_pages_per_seq=3,
+              chunk_max=3)
+    res_f = _paged(cfg, params, **kw).serve(reqs)
+    res_q = _paged(cfg, params, kv_dtype="int8", **kw).serve(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(res_q[r.uid], res_f[r.uid])
+
+
+def test_int8_kv_attn_datapath_validation(setup):
+    """The engine's attention accumulator record is validated like the
+    weight-site datapath: a matching request passes, a disagreeing one (or
+    a float-KV cache given any request) raises DatapathMismatchError."""
+    from repro.quant.spec import AttnDatapathSpec, DatapathMismatchError
+
+    cfg, params, _ = setup
+    spec = AttnDatapathSpec.for_cache(cfg.head_dim, 8)
+    eng = _paged(cfg, params, kv_dtype="int8", attn_datapath=spec)
+    assert eng.attn_spec.matches(spec) and eng.attn_spec.certify()
+    with pytest.raises(DatapathMismatchError, match="attention datapath"):
+        _paged(cfg, params, kv_dtype="int8",
+               attn_datapath=AttnDatapathSpec.for_cache(cfg.head_dim, 16))
+    with pytest.raises(DatapathMismatchError, match="float KV"):
+        _paged(cfg, params, attn_datapath=spec)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        _paged(cfg, params, kv_dtype="fp8")
+
+
+def _paged_kw(eng):
+    from repro.models.layers import packed_backend, resolve_paged_attn_impl
+
+    return dict(backend=packed_backend(),
+                attn_impl=resolve_paged_attn_impl(eng.paged.attn_impl))
+
+
+def _assert_pool_invariants(eng, sched):
+    """Device free-list stack vs host scheduler accounting: conservation,
+    disjointness, and agreement — after every admit/chunk/release."""
+    state = jax.device_get({k: eng.cache[k] for k in
+                            ("free_list", "free_top", "block_table")})
+    nb = eng.paged.num_blocks
+    top = int(state["free_top"])
+    held = sum(a.n_pages for a in sched.active.values())
+    assert top == held  # stack pointer == total reserved pages
+    assert sched.free_pages == nb - top
+    free = state["free_list"][top:].tolist()
+    assert len(set(free)) == len(free)
+    live = []
+    for slot, a in sched.active.items():
+        row = state["block_table"][slot][:a.n_pages].tolist()
+        assert all(0 <= p < nb for p in row)  # live tables hold real pages
+        live.extend(row)
+    # no page may ever appear in two live block tables, nor in a live
+    # table and the free stack at once; together they cover the pool
+    assert len(live) == len(set(live))
+    assert set(free).isdisjoint(live)
+    assert set(free) | set(live) == set(range(nb))
+
+
+def _serve_checked(eng, reqs, late_reqs=()):
+    """Mirror ``PagedEngine.serve`` while asserting pool invariants after
+    every transition and injecting mid-flight arrivals; also asserts that
+    an admission stall is always explained by slot or page exhaustion."""
+    sched = eng.submit_all(reqs)
+    late = list(late_reqs)
+    kw = _paged_kw(eng)
+    results = {}
+
+    def finish(slot):
+        st = sched.finish(slot)
+        eng.cache = eng._release(eng.cache, jnp.int32(slot), st.n_pages)
+        results[st.req.uid] = np.concatenate(
+            [st.req.prompt, np.asarray(st.tokens, np.int32)])
+
+    while sched.has_work:
+        adm = sched.try_admit()
+        while adm is not None:
+            slot, req, n_pages = adm
+            eng.cache, tok0 = eng._admit(
+                eng.params, eng.cache,
+                jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(slot),
+                jnp.int32(req.uid), n_pages, kw["backend"], kw["attn_impl"],
+                eng.datapath_fingerprint)
+            sched.record(slot, [int(jax.device_get(tok0))])
+            _assert_pool_invariants(eng, sched)
+            if sched.remaining(slot) == 0:
+                finish(slot)
+                _assert_pool_invariants(eng, sched)
+            adm = sched.try_admit()
+        if sched.queue and sched.free_slots:
+            head = sched.queue[0]
+            need = sched.pages_for(head.prompt.size, head.max_new)
+            assert need > sched.free_pages  # exhaustion stall, explained
+        if late:
+            sched.submit(late.pop())
+            continue
+        if not sched.active:
+            continue
+        k = min(eng.paged.chunk_max, sched.min_remaining())
+        eng.cache, buf = eng._chunk(
+            eng.params, eng.cache, jnp.int32(k), kw["backend"],
+            kw["attn_impl"], eng.datapath_fingerprint, eng.attn_spec)
+        buf = np.asarray(jax.device_get(buf))
+        for slot in list(sched.active):
+            sched.record(slot, buf[slot, :k].tolist()[: sched.remaining(slot)])
+            if sched.remaining(slot) == 0:
+                finish(slot)
+        _assert_pool_invariants(eng, sched)
+    assert not sched.active and not sched.queue
+    return results
+
+
+@pytest.mark.parametrize("seed,kv_dtype", [(0, "act"), (1, "int8"),
+                                           (2, "act")])
+def test_randomized_trace_free_list_property(setup, seed, kv_dtype):
+    """Randomized arrival/length traces through the *real* engine: the
+    device free-list stack and the per-slot block tables conserve the
+    pool, no page is ever double-allocated, exhaustion only stalls
+    admission, and every request completes at its exact length. (The
+    pure-host scheduler property sweep lives in test_scheduler.py; seeded
+    ``random`` is the hypothesis fallback per the conftest convention.)"""
+    cfg, params, _ = setup
+    r = random.Random(seed)
+    eng = _paged(cfg, params, max_concurrency=2, num_blocks=4,
+                 max_pages_per_seq=3, chunk_max=3, kv_dtype=kv_dtype)
+    # lengths around page boundaries; the tiny pool forces stalls + reuse
+    reqs, late = [], []
+    for uid in range(5):
+        req = Request(
+            uid=uid,
+            prompt=np.asarray(r.choices(range(cfg.vocab),
+                                        k=r.choice([3, 8, 9])), np.int32),
+            max_new=r.choice([1, 4, 8]))
+        (late if uid >= 3 else reqs).append(req)
+    results = _serve_checked(eng, reqs, late)
+    assert int(jax.device_get(eng.cache["free_top"])) == 0  # all pages back
+    for req in reqs + late:
+        assert results[req.uid].size == req.prompt.size + req.max_new
 
 
 def test_hybrid_family_paged_decode():

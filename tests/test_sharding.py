@@ -87,6 +87,26 @@ def test_paged_cache_shardings(mesh):
         assert sh[name].spec == P()
 
 
+def test_paged_cache_shardings_int8_scale_leaves(mesh):
+    """int8 KV pools: the per-(page, head) scale leaves resolve and
+    co-shard their kv_heads dim with the code pools (a device holding a
+    head's codes must hold its scales); page axis never sharded."""
+    from repro.models.transformer import init_paged_cache
+
+    cfg = get_smoke("smollm-360m")
+    cache = init_paged_cache(cfg, num_slots=4, num_blocks=16, block_size=8,
+                             max_pages=4, abstract=True, kv_dtype="int8")
+    pool = cache["pools"][0]
+    assert pool["k_pages"].dtype == jnp.int8
+    assert pool["k_scales"].shape == (cfg.repeats, 16, cfg.n_kv_heads)
+    sh = cache_shardings(cache, cfg, mesh)
+    for name in ("k_scales", "v_scales"):
+        spec = sh["pools"][0][name].spec
+        assert len(spec) == 3
+        assert spec[0] is None and spec[1] is None  # repeats / page axis
+        assert spec[2] == sh["pools"][0]["k_pages"].spec[3]  # kv_heads dim
+
+
 def test_logical_constraint_noop_without_rules():
     from repro.runtime.sharding import logical_constraint
 
