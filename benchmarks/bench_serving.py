@@ -11,9 +11,18 @@ same trace through the continuous-batching scheduler: a finished sequence
 frees its pages and its slot is refilled mid-flight.
 
 Throughput counts *useful* tokens only (each request's own max_new), so
-the fixed-slot engine gets no credit for decoding padding slots. Writes
-``BENCH_serving.json``; the CI regression gate (scripts/bench_compare.py)
-tracks the tok/s numbers and the speedup.
+the fixed-slot engine gets no credit for decoding padding slots.
+
+A second, multi-tenant trace models the prompt-cache workload: a handful
+of shared block-aligned system prompts fan out into many short
+completions, so prefill dominates and the prefix cache's shared-prefix /
+fully-cached admits remove most of the work. That grid runs on briefly
+*trained* params (``benchmarks.common.trained_params``) so the
+bit-identity assertion between the cold and warm engines is structural
+rather than argmax seed luck, and reports ``prefix_cache.hit_rate`` and
+``prefix_cache.speedup_vs_cold``. Writes ``BENCH_serving.json``; the CI
+regression gate (scripts/bench_compare.py) tracks the tok/s numbers, the
+speedups and the hit rate.
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ from repro.serving import (
     SamplerConfig,
 )
 
-from .common import FAST, csv_row, write_bench_json
+from .common import FAST, csv_row, trained_params, write_bench_json
 
 import jax
 
@@ -48,6 +57,14 @@ else:
     PROMPT_LENS, PROMPT_P = [16, 32, 64], [0.5, 0.3, 0.2]
     GEN_LENS, GEN_P = [16, 32, 64, 128, 256], [0.35, 0.3, 0.2, 0.1, 0.05]
     BLOCK_SIZE = 16
+# multi-tenant grid: N_SYSTEMS shared block-aligned system prompts of
+# SYS_BLOCKS pages each fanning out into MT_N_REQ short completions —
+# deep systems + few new tokens keep the trace prefill-dominated, which
+# is the regime the prefix cache removes work from
+N_SYSTEMS = 2
+SYS_BLOCKS = 8
+MT_N_REQ = 16 if FAST else 32
+MT_MAX_NEW = 4
 
 
 def make_trace(vocab: int, seed: int = 0) -> list[Request]:
@@ -78,7 +95,8 @@ def run_fixed_slot(eng: GenerationEngine, reqs) -> float:
     return time.time() - t0
 
 
-def make_paged_engine(params, cfg, reqs, kv_dtype: str = "act") -> PagedEngine:
+def make_paged_engine(params, cfg, reqs, kv_dtype: str = "act",
+                      prefix_cache: bool = False) -> PagedEngine:
     max_pages = max(
         -(-(r.prompt.size + r.max_new - 1) // BLOCK_SIZE) for r in reqs)
     return PagedEngine(
@@ -87,9 +105,68 @@ def make_paged_engine(params, cfg, reqs, kv_dtype: str = "act") -> PagedEngine:
                     num_blocks=CONCURRENCY * max_pages,
                     max_concurrency=CONCURRENCY,
                     max_pages_per_seq=max_pages,
-                    kv_dtype=kv_dtype),
+                    kv_dtype=kv_dtype,
+                    prefix_cache=prefix_cache),
         SamplerConfig(temperature=0.0),
     )
+
+
+def make_multitenant_trace(vocab: int, seed: int = 1) -> list[Request]:
+    """N_SYSTEMS shared block-aligned system prompts x MT_N_REQ short
+    completions; a zero-length tail on a block-aligned prompt exercises
+    the fully-cached (zero-prefill) admit."""
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(0, vocab, size=SYS_BLOCKS * BLOCK_SIZE)
+               .astype(np.int32) for _ in range(N_SYSTEMS)]
+    reqs = []
+    for uid in range(MT_N_REQ):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(0, BLOCK_SIZE))
+                            ).astype(np.int32)
+        reqs.append(Request(
+            uid=uid, prompt=np.concatenate([systems[uid % N_SYSTEMS], tail]),
+            max_new=MT_MAX_NEW))
+    return reqs
+
+
+def run_multitenant(params, cfg, kv_dtype: str, reps: int) -> dict:
+    """Cold engine vs prefix-cache engine over the multi-tenant trace.
+    Greedy outputs must be bit-identical before any speedup is reported
+    (first warm pass and steady state alike); the timed warm passes run
+    against the populated cache, so ``speedup_vs_cold`` is the steady-
+    state prompt-cache win."""
+    trace = make_multitenant_trace(cfg.vocab)
+    useful = sum(r.max_new for r in trace)
+
+    def timed(eng):
+        best, res = float("inf"), None
+        for _ in range(reps):
+            t0 = time.time()
+            out = eng.serve(trace)
+            dt = time.time() - t0
+            if dt < best:
+                best, res = dt, out
+        return best, res
+
+    cold = make_paged_engine(params, cfg, trace, kv_dtype=kv_dtype)
+    ref = cold.serve(trace)  # warm the jit buckets
+    dt_cold, _ = timed(cold)
+    warm = make_paged_engine(params, cfg, trace, kv_dtype=kv_dtype,
+                             prefix_cache=True)
+    first = warm.serve(trace)  # populate the cache + warm the buckets
+    dt_warm, steady = timed(warm)
+    for r in trace:
+        np.testing.assert_array_equal(first[r.uid], ref[r.uid])
+        np.testing.assert_array_equal(steady[r.uid], ref[r.uid])
+    stats = warm.prefix_cache.stats()
+    return {
+        "hit_rate": stats["hit_rate"],
+        "hits": stats["hits"],
+        "lookups": stats["lookups"],
+        "cold_toks": useful / dt_cold,
+        "warm_toks": useful / dt_warm,
+        "speedup_vs_cold": dt_cold / dt_warm,
+    }
 
 
 def hbm_accounting(cfg, reqs, num_blocks: int, kv_dtype: str = "act") -> dict:
@@ -142,6 +219,12 @@ def run():
 
     dt_paged8 = min(paged8_pass() for _ in range(reps))
 
+    # multi-tenant prompt-cache grid on briefly trained params (greedy
+    # bit-identity cold-vs-warm is asserted inside, float and int8 KV)
+    mt_cfg, mt_params = trained_params(ARCH)
+    prefix = run_multitenant(mt_params, mt_cfg, "act", reps)
+    prefix["int8"] = run_multitenant(mt_params, mt_cfg, "int8", reps)
+
     fixed_toks = useful / dt_fixed
     paged_toks = useful / dt_paged
     paged8_toks = useful / dt_paged8
@@ -169,12 +252,15 @@ def run():
             "hbm": hbm_accounting(cfg, reqs, eng8.paged.num_blocks,
                                   kv_dtype="int8"),
         },
+        "prefix_cache": prefix,
     }
     csv_row(f"serving/trace/{'fast' if FAST else 'full'}", results["us_per_tok_paged"],
             f"paged={paged_toks:.1f}toks;fixed={fixed_toks:.1f}toks;"
             f"speedup={speedup:.2f}x;"
             f"int8kv={paged8_toks:.1f}toks@"
-            f"{results['int8_kv']['hbm']['pool_over_slab']:.2f}pool")
+            f"{results['int8_kv']['hbm']['pool_over_slab']:.2f}pool;"
+            f"pc={prefix['speedup_vs_cold']:.2f}x@"
+            f"{prefix['hit_rate']:.2f}hr")
     write_bench_json("BENCH_serving.json", results)
     return results
 

@@ -10,7 +10,8 @@ Every numeric leaf whose key names a perf metric is compared:
 
 * ``us``-style keys (``us_kernel``, ``us_per_tok_paged``, ...): lower is
   better — fail when current > baseline * (1 + threshold);
-* ``toks``-style keys and ``speedup``: higher is better — fail when
+* ``toks``-style keys, ``speedup`` and ``rate`` (e.g. the serving
+  bench's ``prefix_cache.hit_rate``): higher is better — fail when
   current < baseline * (1 - threshold).
 
 Non-perf leaves (shapes, error norms, config echoes) are ignored. The
@@ -38,7 +39,7 @@ def _is_perf_key(key: str) -> str | None:
     parts = key.lower().replace("/", "_").split("_")
     if "us" in parts:
         return "lower"
-    if "toks" in parts or "speedup" in parts:
+    if "toks" in parts or "speedup" in parts or "rate" in parts:
         return "higher"
     return None
 

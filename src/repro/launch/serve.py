@@ -83,6 +83,11 @@ def main(argv=None):
                     help="size the page pool to an HBM budget (MB) instead "
                          "of --num-blocks — at int8 the same budget holds "
                          "~2x the pages, so admission capacity ~doubles")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full prompt blocks across requests "
+                         "(--paged, attention-only patterns): repeated "
+                         "prefixes prefill only their uncached suffix; "
+                         "pages are refcounted with LRU eviction")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -109,9 +114,10 @@ def main(argv=None):
     )
     prompts = np.asarray(data.batch(0)["tokens"])
     sampler = SamplerConfig(temperature=args.temperature, seed=args.seed)
-    if not args.paged and (args.kv_dtype != "act" or args.kv_hbm_mb is not None):
-        raise SystemExit("--kv-dtype/--kv-hbm-mb apply to the paged engine "
-                         "only (add --paged)")
+    if not args.paged and (args.kv_dtype != "act" or args.kv_hbm_mb is not None
+                           or args.prefix_cache):
+        raise SystemExit("--kv-dtype/--kv-hbm-mb/--prefix-cache apply to the "
+                         "paged engine only (add --paged)")
     if args.paged:
         if args.host_loop:
             raise SystemExit("--host-loop applies to the fixed-slot engine only")
@@ -135,16 +141,18 @@ def main(argv=None):
             params, cfg,
             PagedConfig(block_size=args.block_size, num_blocks=num_blocks,
                         max_concurrency=args.max_concurrency,
-                        kv_dtype=args.kv_dtype),
+                        kv_dtype=args.kv_dtype,
+                        prefix_cache=args.prefix_cache),
             sampler,
         )
         pool_mb = kv_pool_bytes(cfg, num_blocks, args.block_size,
                                 args.kv_dtype) / 2**20
         attn_dp = (f" attn_datapath=[{engine.attn_spec.describe()}]"
                    if engine.attn_spec else "")
+        pc = " prefix_cache=on" if args.prefix_cache else ""
         print(f"[serve] paged engine: block_size={args.block_size} "
               f"num_blocks={num_blocks} slots={args.max_concurrency} "
-              f"kv_dtype={args.kv_dtype} pool={pool_mb:.2f}MB{attn_dp}")
+              f"kv_dtype={args.kv_dtype} pool={pool_mb:.2f}MB{pc}{attn_dp}")
         gen = engine.generate
     else:
         engine = GenerationEngine(params, cfg, sampler)

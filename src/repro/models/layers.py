@@ -310,14 +310,22 @@ def _softcap(scores, cap):
 
 
 def _full_causal_attention(q, k, v, cfg: ModelConfig):
-    """Materialized causal attention (S <= attn_chunk_threshold)."""
+    """Materialized causal attention (S <= attn_chunk_threshold).
+
+    ``k``/``v`` may carry ``T >= S`` positions: the leading ``T - S`` keys
+    are a *prefix context* every query attends to (the shared-prefix
+    suffix-prefill path — see :func:`attention`'s ``prefix_kv``); query
+    row ``i`` sits at absolute position ``(T - S) + i``, so the mask is
+    the usual causal triangle shifted by the prefix length. ``T == S``
+    reduces to the plain causal mask."""
     B, S, nh, hd = q.shape
+    T = k.shape[1]
     nkv = k.shape[2]
     g = nh // nkv
     qg = q.reshape(B, S, nkv, g, hd)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
     scores = _softcap(scores / math.sqrt(hd), cfg.attn_logit_softcap)
-    causal = jnp.tril(jnp.ones((S, S), bool))
+    causal = jnp.arange(T)[None, :] <= (jnp.arange(S) + (T - S))[:, None]
     scores = jnp.where(causal, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
@@ -372,11 +380,26 @@ def _chunked_causal_attention(q, k, v, cfg: ModelConfig):
     return out[:, :S0].astype(q.dtype)
 
 
-def attention(params, x, cfg: ModelConfig, positions):
-    """Training / prefill attention. Returns (y, (k, v)) — k/v for caching."""
+def attention(params, x, cfg: ModelConfig, positions, prefix_kv=None):
+    """Training / prefill attention. Returns (y, (k, v)) — k/v for caching.
+
+    ``prefix_kv``: optional ``(prefix_k, prefix_v)`` of shape
+    ``(B, L, nkv, hd)`` — already-RoPE'd KV for a cached prompt prefix
+    (the prefix-cache suffix-prefill path). Queries attend over
+    ``concat(prefix, suffix)`` with the rectangular causal mask;
+    ``positions`` must then carry the absolute offsets (``L + i``). The
+    returned ``(k, v)`` stay suffix-only — that is what gets scattered
+    into fresh pages (the prefix pages already exist and are shared)."""
     B, S, _ = x.shape
     q, k, v = _qkv(params, x, cfg, positions)
-    if S > cfg.attn_chunk_threshold:
+    if prefix_kv is not None:
+        pk, pv = prefix_kv
+        k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        # suffixes are short by construction (the cached prefix absorbed
+        # the bulk); the materialized rectangular path is the right tool
+        out = _full_causal_attention(q, k_all, v_all, cfg)
+    elif S > cfg.attn_chunk_threshold:
         out = _chunked_causal_attention(q, k, v, cfg)
     else:
         out = _full_causal_attention(q, k, v, cfg)

@@ -113,14 +113,20 @@ def _apply_block(p, spec: LayerSpec, cfg: ModelConfig, x, positions):
     return x, aux
 
 
-def _embed_inputs(params, batch, cfg: ModelConfig):
-    """Token embedding plus the (stub) modality frontend prefix."""
+def _embed_inputs(params, batch, cfg: ModelConfig, pos_offset: int = 0):
+    """Token embedding plus the (stub) modality frontend prefix.
+
+    ``pos_offset`` shifts the RoPE positions — nonzero only on the
+    prefix-cache suffix-prefill path, where ``batch["tokens"]`` is the
+    uncached tail of a prompt whose first ``pos_offset`` tokens already
+    sit in shared KV pages."""
     x = embed(params["embedding"], batch["tokens"], cfg)
     if cfg.frontend == "vision_stub" and cfg.frontend_tokens:
         # precomputed patch embeddings arrive as inputs (assignment spec)
         x = jnp.concatenate([batch["pixel_embeds"].astype(x.dtype), x], axis=1)
     B, S, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    positions = jnp.broadcast_to(
+        pos_offset + jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     return x, positions
 
 
@@ -232,6 +238,13 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
     zero; admission stamps them per scattered page and the decode append
     resets them on a page's first write, so recycled pages can never leak
     a stale scale into a live sequence.
+
+    ``page_refcounts`` counts readers per physical page: the live
+    block-table rows containing it, plus one when the prefix cache holds
+    it (docs/serving_scheduler.md, "Prefix cache"). A page returns to the
+    free-list stack only when the count drops to zero — the refcount-aware
+    subset-push release program. All-zero init preserves the original
+    exclusive-ownership semantics (cold admits set each popped page to 1).
     """
 
     def make(shape, dtype):
@@ -277,6 +290,7 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
         "last_tok": make((num_slots,), jnp.int32),
         "free_list": free_list,
         "free_top": make((), jnp.int32),
+        "page_refcounts": make((num_blocks,), jnp.int32),
     }
 
 
@@ -393,11 +407,13 @@ def decode_step(params, tokens, cache, index, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Prefill (forward + state emission for subsequent decode)
 # ---------------------------------------------------------------------------
-def _mixer_prefill(p, spec: LayerSpec, cfg: ModelConfig, h, positions, max_len):
+def _mixer_prefill(p, spec: LayerSpec, cfg: ModelConfig, h, positions, max_len,
+                   prefix_kv=None):
     """Returns (y, cache_dict) with states positioned for decode at index S."""
     B, S, _ = h.shape
     if spec.mixer == "attn":
-        y, (k, v) = attention(p["mixer"], h, cfg, positions)
+        y, (k, v) = attention(p["mixer"], h, cfg, positions,
+                              prefix_kv=prefix_kv)
         pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
         return y, {
             "k": jnp.pad(k.astype(jnp.dtype(cfg.act_dtype)), pad),
@@ -431,17 +447,34 @@ def _mixer_prefill(p, spec: LayerSpec, cfg: ModelConfig, h, positions, max_len):
     return ys.transpose(1, 0, 2), cache
 
 
-def prefill(params, batch, cfg: ModelConfig, max_len: int):
-    """Run the prompt, returning (logits, cache ready for decode at index S)."""
-    x, positions = _embed_inputs(params, batch, cfg)
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            prefix_kv=None, pos_offset: int = 0):
+    """Run the prompt, returning (logits, cache ready for decode at index S).
 
-    def body(x, layer_params):
+    ``prefix_kv`` enables *suffix prefill* against a cached prompt prefix
+    (the prefix-cache admit path): a tuple aligned with ``cfg.pattern``
+    whose attention entries are ``{"k", "v"}`` of shape
+    ``(R, B, L, nkv, hd)`` — per-repeat RoPE'd KV for the first ``L``
+    prompt tokens, gathered (and dequantized, for int8 pools) from shared
+    pages — and whose other entries are ``{}``. ``batch["tokens"]`` then
+    carries only the uncached suffix and ``pos_offset`` must equal ``L``.
+    The returned cache stays suffix-only: exactly what gets scattered
+    into the request's *fresh* pages. With ``prefix_kv=None`` this is the
+    original cold prefill, bit for bit (separate scan branch)."""
+    x, positions = _embed_inputs(params, batch, cfg, pos_offset)
+
+    def body(x, xs):
+        layer_params = xs[0] if prefix_kv is not None else xs
         caches = []
         for i, spec in enumerate(cfg.pattern):
             p = layer_params[i]
             if spec.mixer != "none":
                 h = norm(p["norm1"], x, cfg.norm)
-                y, c = _mixer_prefill(p, spec, cfg, h, positions, max_len)
+                pkv = None
+                if prefix_kv is not None and spec.mixer == "attn":
+                    pkv = (xs[1][i]["k"], xs[1][i]["v"])
+                y, c = _mixer_prefill(p, spec, cfg, h, positions, max_len,
+                                      prefix_kv=pkv)
                 x = x + y
             else:
                 c = {}
@@ -455,6 +488,8 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int):
             caches.append(c)
         return x, tuple(caches)
 
-    x, cache = jax.lax.scan(body, x, params["layers"])
+    xs = params["layers"] if prefix_kv is None else (params["layers"],
+                                                     tuple(prefix_kv))
+    x, cache = jax.lax.scan(body, x, xs)
     x = norm(params["final_norm"], x, cfg.norm)
     return lm_logits(params["embedding"], x, cfg), cache

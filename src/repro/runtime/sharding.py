@@ -299,7 +299,7 @@ def batch_shardings(batch, mesh: Mesh, rules: dict | None = None):
 #: cross-device gather.
 _PAGED_ADMIN_LEAVES = (
     "block_table", "seq_lens", "active", "uids", "steps", "last_tok",
-    "free_list", "free_top",
+    "free_list", "free_top", "page_refcounts",
 )
 
 

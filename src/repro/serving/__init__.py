@@ -1,11 +1,14 @@
 from .engine import GenerationEngine, SamplerConfig
 from .paged_engine import PagedConfig, PagedEngine
-from .scheduler import Request, Scheduler
+from .prefix_cache import PrefixCache
+from .scheduler import PoolState, Request, Scheduler
 
 __all__ = [
     "GenerationEngine",
     "PagedConfig",
     "PagedEngine",
+    "PoolState",
+    "PrefixCache",
     "Request",
     "SamplerConfig",
     "Scheduler",

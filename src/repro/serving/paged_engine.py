@@ -21,8 +21,18 @@ Three jitted device programs, all operating on one cache pytree
   (``lax.while_loop`` with a *dynamic* trip count ``k``, so one trace
   serves every chunk length); every live slot advances at its own
   length. The host syncs once per chunk, not once per token.
-* **release** — push the slot's pages back onto the free-list stack and
-  clear its active bit.
+* **release** — drop one reader from each of the slot's pages
+  (``page_refcounts`` leaf) and push the ones that hit zero back onto the
+  free-list stack (dynamic count — one trace for every page mix), then
+  clear the active bit.
+
+With ``PagedConfig.prefix_cache=True`` two more admit variants join:
+**suffix admit** (block table points at cached prefix pages, prefill runs
+only the uncached tail against the gathered prefix KV) and **cached
+admit** (fully cached prompt: no prefill forward pass at all — the
+program takes no params and is structurally FLOP-free; the first token
+defers to the next decode chunk with an unchanged sampling stream). See
+``repro.serving.prefix_cache`` and docs/serving_scheduler.md.
 
 Sampling is per-request deterministic: slot ``b``'s step ``t`` key is
 ``fold_in(fold_in(key(seed), uid_b), t)``, so a request's sampled tokens
@@ -59,7 +69,8 @@ from repro.quant.spec import (
     validate_datapath,
 )
 from repro.serving.engine import SamplerConfig, _sample
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import PoolState, Request, Scheduler
 
 
 @dataclass(frozen=True)
@@ -85,6 +96,13 @@ class PagedConfig:
     chunk_max: int = 32
     attn_impl: str = "auto"  # auto | ref | kernel | interpret
     kv_dtype: str = "act"  # act (= cfg.act_dtype) | int8 (quantized pages)
+    #: share full, immutable prompt blocks across requests through a
+    #: host-side radix map over block digests (repro.serving.prefix_cache)
+    #: plus per-page refcounts; repeated prefixes prefill only their
+    #: uncached suffix (a fully cached prompt runs NO prefill forward
+    #: pass). Requires an attention-only pattern: recurrent mixers keep
+    #: dense per-slot state that is not paged and cannot be shared.
+    prefix_cache: bool = False
 
 
 def _fold_keys(seed: int, uids, steps):
@@ -120,8 +138,24 @@ class PagedEngine:
             block_size=paged.block_size, num_blocks=paged.num_blocks,
             max_concurrency=paged.max_concurrency, max_pages_per_seq=max_pages,
             chunk_max=paged.chunk_max, attn_impl=paged.attn_impl,
-            kv_dtype=paged.kv_dtype,
+            kv_dtype=paged.kv_dtype, prefix_cache=paged.prefix_cache,
         )
+        if paged.prefix_cache:
+            recurrent = sorted({s.mixer for s in cfg.pattern
+                                if s.mixer not in ("attn", "none")})
+            if recurrent:
+                raise ValueError(
+                    f"prefix_cache=True needs an attention-only pattern: "
+                    f"{recurrent} mixers keep dense per-slot state that is "
+                    f"not paged and cannot be shared across requests"
+                )
+        self.prefix_cache = (
+            PrefixCache(paged.num_blocks, paged.block_size)
+            if paged.prefix_cache else None
+        )
+        #: host mirror of the device page allocator + refcounts — persists
+        #: across serve() calls (cached pages stay out of the free stack)
+        self.pool_state = PoolState.fresh(paged.num_blocks)
         #: the attention accumulator record the quantized kernel serves
         #: (None for float KV) — the attention analogue of the per-site
         #: DatapathSpec; ``attn_datapath`` is a *request* validated
@@ -139,7 +173,10 @@ class PagedEngine:
         )
         #: trace counters (python side effects — bump at trace time only)
         self.admit_traces = 0
+        self.suffix_traces = 0
+        self.cached_traces = 0
         self.chunk_traces = 0
+        self.release_traces = 0
         self._uid_gen = 0
 
         # the cache pytree is DONATED to every program: it crosses the jit
@@ -150,11 +187,30 @@ class PagedEngine:
         @partial(jax.jit, static_argnames=("n_pages", "backend", "attn_impl",
                                            "datapath"),
                  donate_argnames=("cache",))
-        def _admit(params, cache, prompt, slot, uid, n_pages, backend,
+        def _admit(params, cache, prompt, slot, uid, incs, n_pages, backend,
                    attn_impl, datapath):
             with use_packed_backend(backend):
                 return self._admit_impl(params, cache, prompt, slot, uid,
-                                        n_pages)
+                                        incs, n_pages)
+
+        @partial(jax.jit, static_argnames=("n_pages", "n_shared", "backend",
+                                           "attn_impl", "datapath"),
+                 donate_argnames=("cache",))
+        def _admit_suffix(params, cache, suffix, shared_pages, slot, uid,
+                          incs, n_pages, n_shared, backend, attn_impl,
+                          datapath):
+            with use_packed_backend(backend):
+                return self._admit_suffix_impl(params, cache, suffix,
+                                               shared_pages, slot, uid, incs,
+                                               n_pages, n_shared)
+
+        @partial(jax.jit, static_argnames=("n_pages", "n_shared"),
+                 donate_argnames=("cache",))
+        def _admit_cached(cache, shared_pages, cow_src, slot, uid, s0,
+                          last_tok, incs, n_pages, n_shared):
+            return self._admit_cached_impl(cache, shared_pages, cow_src,
+                                           slot, uid, s0, last_tok, incs,
+                                           n_pages, n_shared)
 
         @partial(jax.jit, static_argnames=("backend", "attn_impl", "datapath",
                                            "attn_spec"),
@@ -163,21 +219,25 @@ class PagedEngine:
             with use_packed_backend(backend):
                 return self._chunk_impl(params, cache, k, attn_impl, attn_spec)
 
-        @partial(jax.jit, static_argnames=("n_pages",),
-                 donate_argnames=("cache",))
-        def _release(cache, slot, n_pages):
-            return self._release_impl(cache, slot, n_pages)
+        @partial(jax.jit, donate_argnames=("cache",))
+        def _release(cache, slot, pages, n):
+            return self._release_impl(cache, slot, pages, n)
 
         self._admit = _admit
+        self._admit_suffix = _admit_suffix
+        self._admit_cached = _admit_cached
         self._chunk = _chunk
         self._release = _release
 
     # ------------------------------------------------------------------
     # Device programs (traced bodies)
     # ------------------------------------------------------------------
-    def _admit_impl(self, params, cache, prompt, slot, uid, n_pages: int):
+    def _admit_impl(self, params, cache, prompt, slot, uid, incs,
+                    n_pages: int):
         """Admit one request into ``slot``: allocate pages, prefill, splice
-        state, sample the generation's first token."""
+        state, sample the generation's first token. ``incs`` is the host's
+        per-row-position refcount increment vector (1 per entry, +1 extra
+        for fresh blocks the prefix cache registers)."""
         self.admit_traces += 1
         cfg, paged = self.cfg, self.paged
         bs = paged.block_size
@@ -247,12 +307,161 @@ class PagedEngine:
         new["pools"] = tuple(pools)
         new["block_table"] = table
         new["free_top"] = top + n_pages
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            incs, mode="drop")  # sentinel row entries drop
         new["seq_lens"] = cache["seq_lens"].at[slot].set(s0)
         new["active"] = cache["active"].at[slot].set(True)
         new["uids"] = cache["uids"].at[slot].set(uid)
         new["steps"] = cache["steps"].at[slot].set(1)
         new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
         return new, nxt[0]
+
+    def _admit_suffix_impl(self, params, cache, suffix, shared_pages, slot,
+                           uid, incs, n_pages: int, n_shared: int):
+        """Shared-prefix admit: the request's first ``n_shared`` logical
+        blocks point at existing (refcounted, immutable) pages; only the
+        uncached suffix runs a prefill forward pass, attending over the
+        cached prefix KV gathered — and dequantized, for int8 pools —
+        straight out of the shared pages. One trace per
+        (suffix_len, n_pages, n_shared) bucket."""
+        self.suffix_traces += 1
+        cfg, paged = self.cfg, self.paged
+        bs = paged.block_size
+        _, t = suffix.shape  # (1, T) — the uncached prompt tail
+        prefix_len = n_shared * bs
+        s0 = prefix_len + t
+        n_suffix_pages = -(-t // bs)
+        prefill_len = n_suffix_pages * bs
+        n_pop = n_pages - n_shared
+
+        top = cache["free_top"]
+        popped = jax.lax.dynamic_slice(cache["free_list"], (top,), (n_pop,))
+        row = jnp.full((paged.max_pages_per_seq,), paged.num_blocks, jnp.int32)
+        row = row.at[:n_shared].set(shared_pages)
+        row = row.at[n_shared:n_shared + n_pop].set(popped)
+        table = jax.lax.dynamic_update_slice(
+            cache["block_table"], row[None], (slot, jnp.int32(0)))
+
+        def gather_prefix(pages, scales=None):
+            g = pages[:, shared_pages]  # (R, n_shared, bs, nkv, hd)
+            if scales is not None:  # int8 codes -> float (page-exact)
+                g = g.astype(jnp.float32) * (
+                    scales[:, shared_pages][..., None, :, None])
+            r, _, _, nkv, hd = g.shape
+            return g.reshape(r, 1, prefix_len, nkv, hd)
+
+        prefix_kv = []
+        for i, spec in enumerate(cfg.pattern):
+            if spec.mixer != "attn":
+                prefix_kv.append({})
+                continue
+            c = cache["pools"][i]
+            if "k_scales" in c:
+                prefix_kv.append(
+                    {"k": gather_prefix(c["k_pages"], c["k_scales"]),
+                     "v": gather_prefix(c["v_pages"], c["v_scales"])})
+            else:
+                prefix_kv.append({"k": gather_prefix(c["k_pages"]),
+                                  "v": gather_prefix(c["v_pages"])})
+
+        logits, dense = prefill(params, {"tokens": suffix}, cfg, prefill_len,
+                                prefix_kv=tuple(prefix_kv),
+                                pos_offset=prefix_len)
+        suffix_pages = popped[:n_suffix_pages]
+        pools = []
+        for i, spec in enumerate(cfg.pattern):
+            c = cache["pools"][i]
+            d = dense[i]
+            if spec.mixer == "attn":
+                def to_pages(a):
+                    r, _, _, nkv, hd = a.shape
+                    return a.reshape(r, n_suffix_pages, bs, nkv, hd)
+
+                if "k_scales" in c:
+                    from repro.kernels.paged_attention import quantize_kv_pages
+
+                    kc, ks = quantize_kv_pages(to_pages(d["k"]))
+                    vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                    pools.append({
+                        "k_pages": c["k_pages"].at[:, suffix_pages].set(kc),
+                        "v_pages": c["v_pages"].at[:, suffix_pages].set(vc),
+                        "k_scales": c["k_scales"].at[:, suffix_pages].set(ks),
+                        "v_scales": c["v_scales"].at[:, suffix_pages].set(vs),
+                    })
+                else:
+                    kp = c["k_pages"].at[:, suffix_pages].set(
+                        to_pages(d["k"]).astype(c["k_pages"].dtype))
+                    vp = c["v_pages"].at[:, suffix_pages].set(
+                        to_pages(d["v"]).astype(c["v_pages"].dtype))
+                    pools.append({"k_pages": kp, "v_pages": vp})
+            else:  # "none" mixers only — engine gates recurrent patterns
+                pools.append(c)
+
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.sampler.seed), uid),
+            jnp.int32(0))
+        nxt = _sample(logits[:, -1], self.sampler.temperature, key)  # (1,)
+
+        new = dict(cache)
+        new["pools"] = tuple(pools)
+        new["block_table"] = table
+        new["free_top"] = top + n_pop
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            incs, mode="drop")
+        new["seq_lens"] = cache["seq_lens"].at[slot].set(s0)
+        new["active"] = cache["active"].at[slot].set(True)
+        new["uids"] = cache["uids"].at[slot].set(uid)
+        new["steps"] = cache["steps"].at[slot].set(1)
+        new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
+        return new, nxt[0]
+
+    def _admit_cached_impl(self, cache, shared_pages, cow_src, slot, uid, s0,
+                           last_tok, incs, n_pages: int, n_shared: int):
+        """Fully-cached admit: NO prefill forward pass (takes no params at
+        all — structurally FLOP-free, see :meth:`cached_admit_primitives`).
+        The prompt's blocks are all cached; the last one is copied into a
+        freshly popped private page (copy-on-write: decode appends rewrite
+        position ``s0 - 1`` and grow page scales, which must never touch a
+        shared page). The first token is *deferred*: ``seq_lens = s0 - 1``,
+        ``steps = 0`` and ``last_tok = prompt[-1]`` hand the last prompt
+        token to the next decode chunk, whose first step computes exactly
+        the cold prefill's final-position logits and samples with the same
+        ``fold_in(uid, 0)`` key — the sampling stream is unchanged."""
+        self.cached_traces += 1
+        paged = self.paged
+        n_pop = n_pages - n_shared
+        top = cache["free_top"]
+        popped = jax.lax.dynamic_slice(cache["free_list"], (top,), (n_pop,))
+        dest = popped[0]
+        row = jnp.full((paged.max_pages_per_seq,), paged.num_blocks, jnp.int32)
+        row = row.at[:n_shared].set(shared_pages)
+        row = row.at[n_shared:n_shared + n_pop].set(popped)
+        table = jax.lax.dynamic_update_slice(
+            cache["block_table"], row[None], (slot, jnp.int32(0)))
+
+        pools = []
+        for i, spec in enumerate(self.cfg.pattern):
+            c = cache["pools"][i]
+            if spec.mixer == "attn":
+                # CoW: copy codes AND scales — the private copy must
+                # dequantize identically until the first append
+                pools.append({k: leaf.at[:, dest].set(leaf[:, cow_src])
+                              for k, leaf in c.items()})
+            else:
+                pools.append(c)
+
+        new = dict(cache)
+        new["pools"] = tuple(pools)
+        new["block_table"] = table
+        new["free_top"] = top + n_pop
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            incs, mode="drop")
+        new["seq_lens"] = cache["seq_lens"].at[slot].set(s0 - 1)
+        new["active"] = cache["active"].at[slot].set(True)
+        new["uids"] = cache["uids"].at[slot].set(uid)
+        new["steps"] = cache["steps"].at[slot].set(0)
+        new["last_tok"] = cache["last_tok"].at[slot].set(last_tok)
+        return new
 
     def _chunk_impl(self, params, cache, k, attn_impl: str, attn_spec):
         """Up to ``chunk_max`` decode steps; ``k`` is a *dynamic* trip
@@ -283,17 +492,34 @@ class PagedEngine:
         _, cache, buf = jax.lax.while_loop(cond, body, (jnp.int32(0), cache, buf))
         return cache, buf
 
-    def _release_impl(self, cache, slot, n_pages: int):
-        """Push the slot's pages back onto the free-list stack."""
-        row = jax.lax.dynamic_slice(
-            cache["block_table"], (slot, jnp.int32(0)),
-            (1, self.paged.max_pages_per_seq))[0]
-        top = cache["free_top"] - n_pages
+    def _release_impl(self, cache, slot, pages, n):
+        """Refcount-aware subset-push release: drop one reader from the
+        first ``n`` of ``pages`` (a sentinel-padded ``max_pages_per_seq``-
+        wide list) and push only the pages whose count hits zero — shared
+        prefix pages stay resident for their other readers (or for the
+        cache itself). ``n`` is *dynamic*: one trace serves every page
+        count (and, with ``slot = max_concurrency``, the prefix cache's
+        own evictions — the slot scatter drops)."""
+        self.release_traces += 1
+        W = self.paged.max_pages_per_seq
+        nb = self.paged.num_blocks
+        valid = jnp.arange(W) < n
+        idx = jnp.where(valid, pages, nb)  # sentinel -> dropped scatters
+        rc = cache["page_refcounts"].at[idx].add(
+            -valid.astype(jnp.int32), mode="drop")
+        freed = valid & (rc[jnp.minimum(idx, nb - 1)] == 0)
+        count = jnp.sum(freed.astype(jnp.int32))
+        # compact freed pages to the front in row order (stable sort on
+        # the not-freed flag) and push them at [top - count, top)
+        order = jnp.argsort(~freed, stable=True)
+        push = idx[order]
+        top = cache["free_top"] - count
+        dest = jnp.where(jnp.arange(W) < count, top + jnp.arange(W), nb)
         new = dict(cache)
-        new["free_list"] = jax.lax.dynamic_update_slice(
-            cache["free_list"], row[:n_pages], (top,))
+        new["free_list"] = cache["free_list"].at[dest].set(push, mode="drop")
         new["free_top"] = top
-        new["active"] = cache["active"].at[slot].set(False)
+        new["page_refcounts"] = rc
+        new["active"] = cache["active"].at[slot].set(False, mode="drop")
         return new
 
     # ------------------------------------------------------------------
@@ -302,62 +528,165 @@ class PagedEngine:
     def submit_all(self, requests) -> Scheduler:
         paged = self.paged
         sched = Scheduler(paged.max_concurrency, paged.num_blocks,
-                          paged.block_size, paged.max_pages_per_seq)
+                          paged.block_size, paged.max_pages_per_seq,
+                          prefix_cache=self.prefix_cache,
+                          pool_state=self.pool_state)
         for r in requests:
             sched.submit(r)
         return sched
 
-    def serve(self, requests) -> dict[int, np.ndarray]:
+    def _pad_row(self, pages) -> jnp.ndarray:
+        """Sentinel-pad a physical page list to the block-table width (the
+        release/evict programs take one fixed-width dynamic-count list)."""
+        out = np.full(self.paged.max_pages_per_seq, self.paged.num_blocks,
+                      np.int32)
+        out[:len(pages)] = pages
+        return jnp.asarray(out)
+
+    def _do_admit(self, adm, backend, attn_impl):
+        """Run one admission's device programs (evict, then the admit
+        variant the scheduler picked). Returns the request's first sampled
+        token, or None for a fully cached prompt — its first sample is
+        deferred to the next decode chunk."""
+        if adm.evict_pages is not None and adm.evict_pages.size:
+            self.cache = self._release(
+                self.cache, jnp.int32(self.paged.max_concurrency),
+                self._pad_row(adm.evict_pages),
+                jnp.int32(adm.evict_pages.size))
+        req = adm.req
+        incs = jnp.asarray(adm.incs)
+        shared = jnp.asarray(np.asarray(adm.shared_pages, np.int32))
+        if adm.cow_src is not None:
+            self.cache = self._admit_cached(
+                self.cache, shared, jnp.int32(adm.cow_src),
+                jnp.int32(adm.slot), jnp.int32(req.uid),
+                jnp.int32(req.prompt.size), jnp.int32(req.prompt[-1]),
+                incs, adm.n_pages, adm.n_shared)
+            return None
+        if adm.n_shared:
+            suffix = req.prompt[adm.n_shared * self.paged.block_size:]
+            self.cache, tok0 = self._admit_suffix(
+                self.params, self.cache, jnp.asarray(suffix, jnp.int32)[None],
+                shared, jnp.int32(adm.slot), jnp.int32(req.uid), incs,
+                adm.n_pages, adm.n_shared, backend, attn_impl,
+                self.datapath_fingerprint)
+        else:
+            self.cache, tok0 = self._admit(
+                self.params, self.cache,
+                jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(adm.slot),
+                jnp.int32(req.uid), incs, adm.n_pages, backend, attn_impl,
+                self.datapath_fingerprint)
+        return int(jax.device_get(tok0))
+
+    def serve(self, requests, *, _probe=None, _late=None) -> dict[int, np.ndarray]:
         """Run a request list to completion under continuous batching.
 
         Returns {uid: (S0_uid + n_generated,) int32} — generation is
         trimmed at the first EOS (when the sampler sets one), matching the
         fixed-slot engine's post-EOS padding semantics after re-padding.
+
+        ``_probe(engine, sched)`` (tests) runs after every admit/chunk/
+        release transition; ``_late(sched, pass_idx)`` runs once per
+        scheduler pass (after the decode chunk, when one ran) and may
+        submit mid-flight arrivals — even when the pass drained every
+        active request at admission, so injected work is never stranded.
         """
         sched = self.submit_all(requests)
         backend = packed_backend()
         attn_impl = resolve_paged_attn_impl(self.paged.attn_impl)
         eos = self.sampler.eos_id
         results: dict[int, np.ndarray] = {}
+        chunk_idx = 0
 
         def finish(slot):
             st = sched.finish(slot)
-            self.cache = self._release(self.cache, jnp.int32(slot), st.n_pages)
+            self.cache = self._release(self.cache, jnp.int32(slot),
+                                       self._pad_row(st.row),
+                                       jnp.int32(st.n_pages))
             results[st.req.uid] = np.concatenate(
                 [st.req.prompt, np.asarray(st.tokens, np.int32)])
+            if _probe is not None:
+                _probe(self, sched)
 
         while sched.has_work:
             adm = sched.try_admit()
             while adm is not None:
-                slot, req, n_pages = adm
-                self.cache, tok0 = self._admit(
-                    self.params, self.cache,
-                    jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(slot),
-                    jnp.int32(req.uid), n_pages, backend, attn_impl,
-                    self.datapath_fingerprint)
-                tok0 = int(jax.device_get(tok0))
-                sched.record(slot, [tok0])
-                if sched.remaining(slot) == 0 or tok0 == eos:
-                    finish(slot)
+                tok0 = self._do_admit(adm, backend, attn_impl)
+                if tok0 is not None:
+                    sched.record(adm.slot, [tok0])
+                if _probe is not None:
+                    _probe(self, sched)
+                if tok0 is not None and (
+                        sched.remaining(adm.slot) == 0 or tok0 == eos):
+                    finish(adm.slot)
                 adm = sched.try_admit()
-            if not sched.active:
-                if sched.queue:  # cannot happen: submit() validates fit
-                    raise RuntimeError("queued requests can never be admitted")
-                continue
-            k = min(self.paged.chunk_max, sched.min_remaining())
-            self.cache, buf = self._chunk(
-                self.params, self.cache, jnp.int32(k), backend, attn_impl,
-                self.datapath_fingerprint, self.attn_spec)
-            buf = np.asarray(jax.device_get(buf))
-            for slot in list(sched.active):
-                toks = buf[slot, :k].tolist()[: sched.remaining(slot)]
-                if eos is not None and eos in toks:
-                    toks = toks[: toks.index(eos) + 1]
-                sched.record(slot, toks)
-                if sched.remaining(slot) == 0 or (
-                        eos is not None and toks and toks[-1] == eos):
-                    finish(slot)
+            if sched.active:
+                k = min(self.paged.chunk_max, sched.min_remaining())
+                self.cache, buf = self._chunk(
+                    self.params, self.cache, jnp.int32(k), backend, attn_impl,
+                    self.datapath_fingerprint, self.attn_spec)
+                buf = np.asarray(jax.device_get(buf))
+                if _probe is not None:
+                    _probe(self, sched)
+                for slot in list(sched.active):
+                    toks = buf[slot, :k].tolist()[: sched.remaining(slot)]
+                    if eos is not None and eos in toks:
+                        toks = toks[: toks.index(eos) + 1]
+                    sched.record(slot, toks)
+                    if sched.remaining(slot) == 0 or (
+                            eos is not None and toks and toks[-1] == eos):
+                        finish(slot)
+            elif sched.queue:  # cannot happen: submit() validates fit
+                raise RuntimeError("queued requests can never be admitted")
+            if _late is not None:
+                _late(sched, chunk_idx)
+            chunk_idx += 1
         return results
+
+    # ------------------------------------------------------------------
+    # Structural zero-FLOP certificate for the fully-cached admit
+    # ------------------------------------------------------------------
+    _FLOP_PRIMITIVES = frozenset({"dot_general", "conv_general_dilated"})
+
+    def cached_admit_primitives(self, n_pages: int = 2,
+                                n_shared: int = 1) -> set[str]:
+        """All primitives (recursively) in the fully-cached admit jaxpr.
+        The program takes no model params, so a single matmul appearing
+        here would be a bug — :meth:`assert_cached_admit_flop_free` gates
+        on the intersection with ``_FLOP_PRIMITIVES``."""
+        W = self.paged.max_pages_per_seq
+        i32 = jnp.int32
+        traces = self.cached_traces  # make_jaxpr retraces; don't count it
+        closed = jax.make_jaxpr(
+            partial(self._admit_cached_impl, n_pages=n_pages,
+                    n_shared=n_shared)
+        )(self.cache, jnp.zeros((n_shared,), i32), i32(0), i32(0), i32(0),
+          i32(1), i32(0), jnp.zeros((W,), i32))
+        self.cached_traces = traces
+        prims: set[str] = set()
+
+        def walk(jaxpr):
+            for eqn in jaxpr.eqns:
+                prims.add(eqn.primitive.name)
+                for v in eqn.params.values():
+                    for sub in jax.tree.leaves(
+                            v, is_leaf=lambda x: isinstance(
+                                x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                        if isinstance(sub, jax.core.ClosedJaxpr):
+                            walk(sub.jaxpr)
+                        elif isinstance(sub, jax.core.Jaxpr):
+                            walk(sub)
+
+        walk(closed.jaxpr)
+        return prims
+
+    def assert_cached_admit_flop_free(self) -> None:
+        """Admitting a fully cached prompt must run zero prefill FLOPs:
+        its program is gathers/scatters only (no dot_general, no conv)."""
+        hot = self.cached_admit_primitives() & self._FLOP_PRIMITIVES
+        if hot:
+            raise AssertionError(
+                f"fully-cached admit contains FLOP primitives {sorted(hot)}")
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """Fixed-slot-compatible entry: prompts (B, S0) -> (B, S0 + max_new).

@@ -54,8 +54,21 @@ def blocks_for_budget(budget_bytes: int, cfg, block_size: int,
     ~half the bf16 bytes, the same budget holds ~2x the pages — and since
     admission reserves the worst case in *pages*, the scheduler admits
     ~2x the sequences before stalling (asserted in tests/test_scheduler.py).
+
+    A budget smaller than one page raises (a zero-page pool can never
+    admit anything — ``--kv-hbm-mb`` misconfiguration should fail at
+    launch, not as an unexplained admission stall).
     """
-    return budget_bytes // kv_page_bytes(cfg, block_size, kv_dtype)
+    per_page = kv_page_bytes(cfg, block_size, kv_dtype)
+    n = budget_bytes // per_page
+    if n < 1:
+        raise ValueError(
+            f"KV HBM budget {budget_bytes} B is below one page: a single "
+            f"block_size={block_size} {kv_dtype} page costs {per_page} B "
+            f"across the stack's attention layers — raise the budget or "
+            f"shrink block_size"
+        )
+    return n
 
 
 @dataclass(frozen=True)
@@ -83,19 +96,111 @@ class _Active:
     n_pages: int
     produced: int = 0  # tokens generated so far (admission token included)
     tokens: list = field(default_factory=list)
+    row: np.ndarray | None = None  # (n_pages,) physical pages, row order
+    nodes: list = field(default_factory=list)  # prefix-cache nodes held
+
+
+@dataclass
+class PoolState:
+    """Host mirror of the device page allocator: the ``free_list`` stack
+    (free region = ``free_list[free_top:]``), ``free_top``, and the
+    per-page refcounts. The device admit/release programs and this mirror
+    perform the identical pops/pushes in the identical order, so the host
+    always knows which physical pages a request holds without a device
+    readback — which is what lets the prefix cache hand *physical* page
+    indices to a later admission. Owned by the engine (it must persist
+    across ``serve()`` calls: cached pages stay out of the free stack
+    between traces), shared with each ``Scheduler``.
+    """
+
+    free_list: np.ndarray
+    free_top: int
+    page_rc: np.ndarray
+
+    @classmethod
+    def fresh(cls, num_blocks: int) -> "PoolState":
+        return cls(free_list=np.arange(num_blocks, dtype=np.int32),
+                   free_top=0,
+                   page_rc=np.zeros(num_blocks, np.int32))
+
+    @property
+    def free_pages(self) -> int:
+        return self.free_list.size - self.free_top
+
+    def pop(self, n: int) -> np.ndarray:
+        pages = self.free_list[self.free_top:self.free_top + n].copy()
+        self.free_top += n
+        self.page_rc[pages] += 1
+        return pages
+
+    def push(self, pages) -> None:
+        """Push freed pages (rc already at 0) — same order as the device
+        subset-push: ``free_list[top - n + j] = pages[j]``."""
+        n = len(pages)
+        if not n:
+            return
+        self.free_top -= n
+        self.free_list[self.free_top:self.free_top + n] = pages
+
+
+@dataclass(frozen=True)
+class Admission:
+    """One admission decision, host side. ``row`` is the request's full
+    physical block-table row: ``n_shared`` leading pages borrowed from the
+    prefix cache (refcount bumped, never written), then ``n_pop`` freshly
+    popped pages (``cow_src`` is copied into the first of them on a fully
+    cached prompt — the copy-on-write tail). ``evict_pages`` must be
+    pushed back on device *before* the admit pops. Unpacks as the legacy
+    ``(slot, req, n_pages)`` triple."""
+
+    slot: int
+    req: Request
+    n_pages: int
+    n_shared: int = 0
+    cow_src: int | None = None
+    row: np.ndarray | None = None
+    evict_pages: np.ndarray | None = None
+    incs: np.ndarray | None = None
+
+    @property
+    def n_pop(self) -> int:
+        return self.n_pages - self.n_shared
+
+    @property
+    def shared_pages(self) -> np.ndarray:
+        return self.row[:self.n_shared]
+
+    def __iter__(self):  # legacy (slot, req, n_pages) unpacking
+        return iter((self.slot, self.req, self.n_pages))
+
+    def __getitem__(self, i):  # legacy triple indexing
+        return (self.slot, self.req, self.n_pages)[i]
 
 
 class Scheduler:
     def __init__(self, max_concurrency: int, num_blocks: int, block_size: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, prefix_cache=None,
+                 pool_state: PoolState | None = None):
         self.max_concurrency = max_concurrency
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.max_pages_per_seq = max_pages_per_seq
         self.queue: deque[Request] = deque()
         self.free_slots: list[int] = sorted(range(max_concurrency), reverse=True)
-        self.free_pages = num_blocks
         self.active: dict[int, _Active] = {}
+        self.prefix_cache = prefix_cache
+        self.pool = pool_state if pool_state is not None else PoolState.fresh(
+            num_blocks)
+        if prefix_cache is not None and prefix_cache.block_size != block_size:
+            raise ValueError("prefix cache block_size != scheduler block_size")
+        self._inflight: set[int] = set()
+
+    @property
+    def free_pages(self) -> int:
+        """Pages poppable right now (the device free stack's depth) —
+        excludes pages the prefix cache holds at refcount 1, which are
+        reclaimable only through eviction."""
+        return self.pool.free_pages
 
     # ------------------------------------------------------------------
     # Accounting
@@ -120,23 +225,94 @@ class Scheduler:
                 f"request {req.uid}: needs {need} pages > pool size "
                 f"{self.num_blocks} — can never be admitted"
             )
+        if req.uid in self._inflight:
+            # serve() keys its results dict by uid: a duplicate would
+            # silently clobber one request's output — fail loudly instead
+            raise ValueError(
+                f"request uid {req.uid} is already in flight (queued or "
+                f"active); uids must be unique until the request finishes"
+            )
+        self._inflight.add(req.uid)
         self.queue.append(req)
 
-    def try_admit(self) -> tuple[int, Request, int] | None:
+    def try_admit(self) -> Admission | None:
         """Pop the queue head into a free slot if slot + pages allow;
-        returns (slot, request, n_pages) or None (admission stalls — the
-        request stays queued, nothing is allocated)."""
+        returns an :class:`Admission` (legacy-unpackable as
+        ``(slot, request, n_pages)``) or None — a stalled admission leaves
+        scheduler, pool mirror and prefix cache untouched.
+
+        With a prefix cache attached, the head's worst-case reservation
+        *subtracts* its cached prefix: only ``n_pages - n_shared`` pages
+        must be popped, and a shortage may additionally be covered by
+        evicting cold cache entries (all-or-nothing, LRU leaf-first)."""
         if not self.queue or not self.free_slots:
             return None
         req = self.queue[0]
-        need = self.pages_for(req.prompt.size, req.max_new)
-        if need > self.free_pages:
-            return None  # stall: wait for a running sequence to free pages
+        n_pages = self.pages_for(req.prompt.size, req.max_new)
+        s0, bs = req.prompt.size, self.block_size
+
+        matched, cow_node = [], None
+        if self.prefix_cache is not None:
+            matched = self.prefix_cache.match(req.prompt)
+            if matched and len(matched) * bs == s0:
+                # fully cached prompt: the last cached block doubles as
+                # the decode tail (position s0-1 onward) — share all but
+                # that block, and copy-on-write its page at admit
+                cow_node = matched[-1]
+                matched = matched[:-1]
+        n_shared = len(matched)
+        n_pop = n_pages - n_shared
+
+        evict_plan = []
+        if n_pop > self.pool.free_pages:
+            if self.prefix_cache is None:
+                return None  # stall: wait for a running sequence to free
+            protect = {n.key for n in matched}
+            if cow_node is not None:
+                protect.add(cow_node.key)
+            evict_plan = self.prefix_cache.plan_evict(
+                n_pop - self.pool.free_pages, protect)
+            if evict_plan is None:
+                return None  # shortage not coverable — stall, no mutation
+
+        # ---- commit ----
         self.queue.popleft()
         slot = self.free_slots.pop()
-        self.free_pages -= need
-        self.active[slot] = _Active(req=req, n_pages=need)
-        return slot, req, need
+        evict_pages = np.asarray([n.page for n in evict_plan], np.int32)
+        if evict_plan:
+            self.prefix_cache.evict(evict_plan)
+            self.pool.page_rc[evict_pages] -= 1
+            assert (self.pool.page_rc[evict_pages] == 0).all()
+            self.pool.push(evict_pages)
+        shared = np.asarray([n.page for n in matched], np.int32)
+        popped = self.pool.pop(n_pop)  # rc 0 -> 1 (exclusive row ref)
+        row = np.concatenate([shared, popped])
+        incs = np.zeros(self.max_pages_per_seq, np.int32)
+        incs[:n_pages] = 1  # every row entry is one reader
+        nodes = list(matched)
+        if self.prefix_cache is not None:
+            n_full = s0 // bs
+            self.pool.page_rc[shared] += 1
+            self.prefix_cache.acquire(matched, n_full)
+            if cow_node is not None:
+                self.prefix_cache.touch(cow_node)
+            else:
+                # freshly prefilled full blocks join the cache: +1 cache
+                # ref on top of the row ref
+                new_nodes = self.prefix_cache.insert(req.prompt, row,
+                                                     start_block=n_shared)
+                nodes += new_nodes
+                for j, node in enumerate(new_nodes):
+                    # inserted block i sits at row index n_shared + i
+                    self.pool.page_rc[node.page] += 1
+                    incs[n_shared + j] += 1
+        self.active[slot] = _Active(req=req, n_pages=n_pages, row=row,
+                                    nodes=nodes)
+        return Admission(
+            slot=slot, req=req, n_pages=n_pages, n_shared=n_shared,
+            cow_src=None if cow_node is None else cow_node.page,
+            row=row, evict_pages=evict_pages, incs=incs,
+        )
 
     def record(self, slot: int, tokens) -> None:
         st = self.active[slot]
@@ -144,9 +320,16 @@ class Scheduler:
         st.produced += len(tokens)
 
     def finish(self, slot: int) -> _Active:
-        """Release the slot and its page reservation; returns the record."""
+        """Release the slot and the row's refcounts; pages whose count
+        drops to zero return to the free stack (in row order — matching
+        the device subset-push program). Returns the record."""
         st = self.active.pop(slot)
-        self.free_pages += st.n_pages
+        self._inflight.discard(st.req.uid)
+        if self.prefix_cache is not None:
+            self.prefix_cache.release(st.nodes)
+        self.pool.page_rc[st.row] -= 1
+        assert (self.pool.page_rc[st.row] >= 0).all()
+        self.pool.push([p for p in st.row if self.pool.page_rc[p] == 0])
         self.free_slots.append(slot)
         self.free_slots.sort(reverse=True)
         return st

@@ -261,80 +261,58 @@ def _paged_kw(eng):
 
 
 def _assert_pool_invariants(eng, sched):
-    """Device free-list stack vs host scheduler accounting: conservation,
-    disjointness, and agreement — after every admit/chunk/release."""
+    """Device free-list stack vs host accounting, *counted with
+    refcounts*: after every admit/append/release/evict transition, the
+    free stack (``free_list[top:]``) and the live block-table pages plus
+    cache-held pages partition the pool — ``rc[p]`` equals the number of
+    live rows containing ``p`` plus one if the prefix cache holds it, the
+    free stack is exactly ``{p : rc[p] == 0}`` with no duplicates (no
+    double-free, no leak), and device state mirrors the host pool state
+    bit for bit."""
     state = jax.device_get({k: eng.cache[k] for k in
-                            ("free_list", "free_top", "block_table")})
+                            ("free_list", "free_top", "block_table",
+                             "page_refcounts")})
     nb = eng.paged.num_blocks
     top = int(state["free_top"])
-    held = sum(a.n_pages for a in sched.active.values())
-    assert top == held  # stack pointer == total reserved pages
-    assert sched.free_pages == nb - top
+    expect_rc = np.zeros(nb, np.int64)
+    for slot, a in sched.active.items():
+        row = state["block_table"][slot][:a.n_pages]
+        assert ((0 <= row) & (row < nb)).all()  # live tables: real pages
+        assert len(set(row.tolist())) == row.size  # row never repeats a page
+        np.testing.assert_array_equal(np.sort(row), np.sort(a.row))
+        np.add.at(expect_rc, row, 1)
+    if eng.prefix_cache is not None:
+        for node in eng.prefix_cache.nodes.values():
+            expect_rc[node.page] += 1
+    # refcount conservation: device rc == host mirror rc == recount
+    np.testing.assert_array_equal(state["page_refcounts"], expect_rc)
+    np.testing.assert_array_equal(state["page_refcounts"],
+                                  eng.pool_state.page_rc)
+    # free stack == the rc-zero pages, exactly once each
     free = state["free_list"][top:].tolist()
     assert len(set(free)) == len(free)
-    live = []
-    for slot, a in sched.active.items():
-        row = state["block_table"][slot][:a.n_pages].tolist()
-        assert all(0 <= p < nb for p in row)  # live tables hold real pages
-        live.extend(row)
-    # no page may ever appear in two live block tables, nor in a live
-    # table and the free stack at once; together they cover the pool
-    assert len(live) == len(set(live))
-    assert set(free).isdisjoint(live)
-    assert set(free) | set(live) == set(range(nb))
+    assert set(free) == set(np.flatnonzero(expect_rc == 0).tolist())
+    assert top == int((expect_rc > 0).sum())
+    # host mirror lockstep (the scheduler hands *physical* pages around)
+    assert eng.pool_state.free_top == top
+    np.testing.assert_array_equal(state["free_list"], eng.pool_state.free_list)
+    assert sched.free_pages == nb - top
 
 
 def _serve_checked(eng, reqs, late_reqs=()):
-    """Mirror ``PagedEngine.serve`` while asserting pool invariants after
-    every transition and injecting mid-flight arrivals; also asserts that
-    an admission stall is always explained by slot or page exhaustion."""
-    sched = eng.submit_all(reqs)
+    """``PagedEngine.serve`` with pool invariants asserted after every
+    transition (``_probe``) and mid-flight arrivals injected after decode
+    chunks (``_late``)."""
     late = list(late_reqs)
-    kw = _paged_kw(eng)
-    results = {}
 
-    def finish(slot):
-        st = sched.finish(slot)
-        eng.cache = eng._release(eng.cache, jnp.int32(slot), st.n_pages)
-        results[st.req.uid] = np.concatenate(
-            [st.req.prompt, np.asarray(st.tokens, np.int32)])
+    def probe(engine, sched):
+        _assert_pool_invariants(engine, sched)
 
-    while sched.has_work:
-        adm = sched.try_admit()
-        while adm is not None:
-            slot, req, n_pages = adm
-            eng.cache, tok0 = eng._admit(
-                eng.params, eng.cache,
-                jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(slot),
-                jnp.int32(req.uid), n_pages, kw["backend"], kw["attn_impl"],
-                eng.datapath_fingerprint)
-            sched.record(slot, [int(jax.device_get(tok0))])
-            _assert_pool_invariants(eng, sched)
-            if sched.remaining(slot) == 0:
-                finish(slot)
-                _assert_pool_invariants(eng, sched)
-            adm = sched.try_admit()
-        if sched.queue and sched.free_slots:
-            head = sched.queue[0]
-            need = sched.pages_for(head.prompt.size, head.max_new)
-            assert need > sched.free_pages  # exhaustion stall, explained
+    def inject(sched, chunk_idx):
         if late:
             sched.submit(late.pop())
-            continue
-        if not sched.active:
-            continue
-        k = min(eng.paged.chunk_max, sched.min_remaining())
-        eng.cache, buf = eng._chunk(
-            eng.params, eng.cache, jnp.int32(k), kw["backend"],
-            kw["attn_impl"], eng.datapath_fingerprint, eng.attn_spec)
-        buf = np.asarray(jax.device_get(buf))
-        for slot in list(sched.active):
-            sched.record(slot, buf[slot, :k].tolist()[: sched.remaining(slot)])
-            if sched.remaining(slot) == 0:
-                finish(slot)
-        _assert_pool_invariants(eng, sched)
-    assert not sched.active and not sched.queue
-    return results
+
+    return eng.serve(reqs, _probe=probe, _late=inject)
 
 
 @pytest.mark.parametrize("seed,kv_dtype", [(0, "act"), (1, "int8"),
@@ -361,8 +339,161 @@ def test_randomized_trace_free_list_property(setup, seed, kv_dtype):
         (late if uid >= 3 else reqs).append(req)
     results = _serve_checked(eng, reqs, late)
     assert int(jax.device_get(eng.cache["free_top"])) == 0  # all pages back
+    assert eng.release_traces == 1  # dynamic count: one trace, any n_pages
     for req in reqs + late:
         assert results[req.uid].size == req.prompt.size + req.max_new
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: shared prompt blocks, CoW tails, refcounted release
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", ["act", "int8"])
+def test_prefix_cache_greedy_identity_warm_vs_cold(trained_dense, kv_dtype):
+    """Acceptance golden: a shared-system-prompt mix served through the
+    prefix cache is token-for-token identical to the cold engine — float
+    and int8 KV alike, covering all three admit variants (cold insert,
+    shared-prefix suffix prefill, fully cached with a CoW tail) plus a
+    second serve on the persistent warm engine whose popped tail pages are
+    recycled from the first."""
+    cfg, params = trained_dense
+    rng = np.random.default_rng(5)
+    system = rng.integers(0, cfg.vocab, size=16).astype(np.int32)  # 2 blocks
+    reqs = [
+        Request(uid=0, max_new=6,
+                prompt=np.concatenate(
+                    [system, rng.integers(0, cfg.vocab, size=5)]
+                ).astype(np.int32)),
+        Request(uid=1, prompt=system.copy(), max_new=6),  # fully cached
+        Request(uid=2, max_new=6,
+                prompt=np.concatenate(
+                    [system, rng.integers(0, cfg.vocab, size=3)]
+                ).astype(np.int32)),
+        Request(uid=3, max_new=6,  # unrelated: stays a cold admission
+                prompt=rng.integers(0, cfg.vocab, size=12).astype(np.int32)),
+    ]
+    cold = _paged(cfg, params, kv_dtype=kv_dtype).serve(reqs)
+    eng = _paged(cfg, params, kv_dtype=kv_dtype, prefix_cache=True)
+    warm = _serve_checked(eng, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(warm[r.uid], cold[r.uid])
+    # the mix exercised every admit variant and actually hit the cache
+    assert eng.admit_traces >= 1 and eng.suffix_traces >= 1
+    assert eng.cached_traces == 1
+    stats = eng.prefix_cache.stats()
+    assert stats["hits"] > 0 and 0 < stats["hit_rate"] <= 1
+    # second serve on the warm engine: the cache persists across serve()
+    # calls and the fresh pops land on recycled pages
+    warm2 = _serve_checked(eng, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(warm2[r.uid], cold[r.uid])
+
+
+@pytest.mark.parametrize("kv_dtype", ["act", "int8"])
+def test_prefix_cache_eviction_recycles_shared_pages(trained_dense, kv_dtype):
+    """LRU eviction under pool pressure: three distinct system prompts
+    compete for a 6-page pool, so admissions must evict cold cache entries
+    and land on recycled *previously-shared* pages — including mid-flight
+    arrivals injected after decode chunks. Outputs stay identical to the
+    cold engine, and one release trace serves finishes and evictions
+    alike."""
+    cfg, params = trained_dense
+    rng = np.random.default_rng(6)
+    systems = [rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+               for _ in range(3)]
+    reqs = []
+    for uid in range(7):
+        tail = rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(0, 4))).astype(np.int32)
+        reqs.append(Request(
+            uid=uid, prompt=np.concatenate([systems[uid % 3], tail]),
+            max_new=int(rng.integers(1, 6))))
+    kw = dict(num_blocks=6, max_concurrency=2, max_pages_per_seq=3,
+              chunk_max=3, kv_dtype=kv_dtype)
+    cold = _paged(cfg, params, **kw).serve(reqs)
+    eng = _paged(cfg, params, prefix_cache=True, **kw)
+    evictions = []
+    orig_evict = eng.prefix_cache.evict
+    eng.prefix_cache.evict = lambda plan: (evictions.append(len(plan)),
+                                           orig_evict(plan))[1]
+    warm = _serve_checked(eng, reqs[:4], late_reqs=reqs[4:])
+    for r in reqs:
+        np.testing.assert_array_equal(warm[r.uid], cold[r.uid])
+    assert evictions, "pool pressure must actually evict cache entries"
+    assert eng.release_traces == 1  # finishes + evictions share one trace
+
+
+@pytest.mark.parametrize("seed,kv_dtype", [(3, "act"), (4, "int8")])
+def test_prefix_cache_randomized_churn_property(setup, seed, kv_dtype):
+    """Randomized shared-prefix traffic through the real engine with the
+    cache on: the refcounted pool partition (free stack + live rows +
+    cached pages, counted with multiplicity) holds after every transition,
+    host and device stay in bit-for-bit lockstep, and at quiescence the
+    cache is the pool's only page holder."""
+    cfg, params, _ = setup
+    r = random.Random(seed)
+    eng = _paged(cfg, params, prefix_cache=True, kv_dtype=kv_dtype,
+                 num_blocks=6, max_concurrency=2, max_pages_per_seq=3,
+                 chunk_max=3)
+    blocks = [np.asarray(r.choices(range(cfg.vocab), k=8), np.int32)
+              for _ in range(3)]
+    reqs = []
+    for uid in range(6):
+        body = np.concatenate(
+            [blocks[i] for i in r.choices(range(3), k=r.choice([1, 2]))])
+        tail = np.asarray(r.choices(range(cfg.vocab), k=r.choice([0, 3])),
+                          np.int32)
+        reqs.append(Request(uid=uid, prompt=np.concatenate([body, tail]),
+                            max_new=r.choice([1, 4])))
+    results = _serve_checked(eng, reqs[:3], late_reqs=reqs[3:])
+    for req in reqs:
+        assert results[req.uid].size == req.prompt.size + req.max_new
+    assert (int(jax.device_get(eng.cache["free_top"]))
+            == eng.prefix_cache.pages_held)
+
+
+@pytest.mark.parametrize("kv_dtype", ["act", "int8"])
+def test_fully_cached_admit_is_structurally_flop_free(setup, kv_dtype):
+    """Acceptance: admitting a fully cached prompt runs ZERO prefill FLOPs
+    — the cached-admit program takes no model params and its jaxpr holds
+    no dot_general/conv primitive (recursively), for float and int8 pools;
+    and the serving path actually routes a repeated block-aligned prompt
+    through that program."""
+    cfg, params, _ = setup
+    eng = _paged(cfg, params, prefix_cache=True, kv_dtype=kv_dtype)
+    prims = eng.cached_admit_primitives()
+    assert prims  # non-trivial program: gathers/scatters at least
+    assert not (prims & eng._FLOP_PRIMITIVES)
+    eng.assert_cached_admit_flop_free()
+    prompt = np.random.default_rng(8).integers(
+        0, cfg.vocab, size=8).astype(np.int32)
+    eng.serve([Request(uid=0, prompt=prompt, max_new=4)])
+    assert eng.cached_traces == 0
+    eng.serve([Request(uid=1, prompt=prompt.copy(), max_new=4)])
+    assert eng.cached_traces == 1 and eng.suffix_traces == 0
+
+
+def test_duplicate_inflight_uid_rejected(setup):
+    """Two in-flight requests with one uid would silently clobber each
+    other in the results dict — submit fails loudly instead. A finished
+    uid is reusable in a later serve."""
+    cfg, params, _ = setup
+    eng = _paged(cfg, params)
+    prompt = np.arange(8, dtype=np.int32)
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.serve([Request(uid=7, prompt=prompt, max_new=2),
+                   Request(uid=7, prompt=prompt, max_new=2)])
+    eng.serve([Request(uid=7, prompt=prompt, max_new=2)])
+    out = eng.serve([Request(uid=7, prompt=prompt, max_new=2)])
+    assert out[7].size == 10
+
+
+def test_prefix_cache_requires_attention_only_pattern():
+    """Recurrent mixers keep dense per-slot state that cannot be shared —
+    the engine refuses prefix_cache=True for hybrid patterns at init."""
+    cfg = get_config("tiny-hybrid")
+    params = init_model(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        _paged(cfg, params, prefix_cache=True)
 
 
 def test_hybrid_family_paged_decode():

@@ -103,6 +103,35 @@ def test_submit_rejects_never_admissible_requests():
         Request(uid=0, prompt=np.zeros(0, np.int32), max_new=1)
 
 
+def test_submit_rejects_duplicate_inflight_uid():
+    """serve() keys results by uid — a duplicate in-flight uid would
+    silently clobber one request's output, so submit fails loudly whether
+    the first holder is still queued or already active; the uid frees
+    again at finish."""
+    sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
+                      max_pages_per_seq=4)
+    sched.submit(_req(0))
+    with pytest.raises(ValueError, match="already in flight"):
+        sched.submit(_req(0))  # duplicate of a *queued* request
+    slot, _, _ = sched.try_admit()
+    with pytest.raises(ValueError, match="already in flight"):
+        sched.submit(_req(0))  # duplicate of an *active* request
+    sched.finish(slot)
+    sched.submit(_req(0))  # finished: the uid is reusable
+
+
+def test_blocks_for_budget_below_one_page_raises():
+    """A budget below one page can never admit anything — the error names
+    the per-page byte cost so the misconfiguration is actionable."""
+    from repro.configs import get_config
+
+    cfg = get_config("tiny-lm-xs")
+    per_page = kv_page_bytes(cfg, 16, "act")
+    with pytest.raises(ValueError, match=f"costs {per_page} B"):
+        blocks_for_budget(per_page - 1, cfg, 16, "act")
+    assert blocks_for_budget(per_page, cfg, 16, "act") == 1
+
+
 def test_record_remaining_and_min_remaining():
     sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
                       max_pages_per_seq=4)
@@ -267,3 +296,100 @@ def test_randomized_churn_conserves_pages_and_slots(seed):
         _check_sched_invariants(sched)
     assert not sched.has_work
     assert sched.free_pages == sched.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# Randomized sharing property: refcounted pool partition under churn
+# ---------------------------------------------------------------------------
+def _check_sharing_invariants(sched: Scheduler):
+    """With a prefix cache attached, the exclusive-ownership partition
+    generalizes to a *refcounted* one: ``page_rc[p]`` must equal the
+    number of live block-table rows containing ``p`` plus one if the
+    cache holds ``p``, and the free stack ``free_list[top:]`` must be
+    exactly the rc-zero pages, once each (no double-free, no leak)."""
+    pool, nb = sched.pool, sched.num_blocks
+    rc = np.zeros(nb, np.int64)
+    for a in sched.active.values():
+        assert len(set(a.row.tolist())) == a.row.size  # rows never repeat
+        np.add.at(rc, a.row, 1)
+    readers: dict[bytes, int] = {}
+    for a in sched.active.values():
+        for node in a.nodes:
+            readers[node.key] = readers.get(node.key, 0) + 1
+    if sched.prefix_cache is not None:
+        for key, node in sched.prefix_cache.nodes.items():
+            rc[node.page] += 1
+            assert node.readers == readers.get(key, 0)
+    np.testing.assert_array_equal(pool.page_rc, rc)  # rc conservation
+    free = pool.free_list[pool.free_top:].tolist()
+    assert len(set(free)) == len(free)
+    assert set(free) == set(np.flatnonzero(rc == 0).tolist())
+    assert len(sched.free_slots) + len(sched.active) == sched.max_concurrency
+
+
+@property_test
+def test_randomized_sharing_conserves_refcounts(seed):
+    """Random shared-prefix traffic (prompts drawn from a small block
+    vocabulary so digests collide) through admit/record/finish churn with
+    a live prefix cache: the refcounted partition holds after every
+    transition, a stalled admission mutates nothing (cache included), and
+    draining leaves the cache as the only page holder."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    r = random.Random(seed)
+    bs = r.choice([4, 8])
+    nb = r.randint(6, 12)
+    sched = Scheduler(max_concurrency=r.randint(1, 3), num_blocks=nb,
+                      block_size=bs, max_pages_per_seq=4,
+                      prefix_cache=PrefixCache(nb, bs))
+    blocks = [np.asarray([r.randrange(64) for _ in range(bs)], np.int32)
+              for _ in range(3)]
+    uid = 0
+
+    def submit_some(n):
+        nonlocal uid
+        for _ in range(n):
+            body = np.concatenate(
+                [blocks[r.randrange(3)] for _ in range(r.randint(1, 2))])
+            tail = np.asarray([r.randrange(64)
+                               for _ in range(r.randrange(bs))], np.int32)
+            prompt = np.concatenate([body, tail])
+            max_new = r.randint(1, bs)
+            if sched.pages_for(prompt.size, max_new) > min(4, nb):
+                continue
+            sched.submit(Request(uid=uid, prompt=prompt, max_new=max_new))
+            uid += 1
+
+    submit_some(r.randint(1, 5))
+    for _ in range(200):
+        if not sched.has_work:
+            break
+        action = r.random()
+        if action < 0.45:
+            before = (sched.free_pages, len(sched.free_slots),
+                      len(sched.queue), sched.prefix_cache.pages_held)
+            if sched.try_admit() is None:
+                # a stall must not have moved pages, slots, queue entries
+                # or cache nodes (all-or-nothing eviction planning)
+                assert before == (sched.free_pages, len(sched.free_slots),
+                                  len(sched.queue),
+                                  sched.prefix_cache.pages_held)
+        elif action < 0.75 and sched.active:
+            slot = r.choice(list(sched.active))
+            sched.record(slot, [1] * r.randint(1, sched.remaining(slot)))
+            if sched.remaining(slot) == 0:
+                sched.finish(slot)
+        elif action < 0.9:
+            submit_some(1)  # mid-flight arrival
+        elif sched.active:
+            sched.finish(r.choice(list(sched.active)))  # early EOS
+        _check_sharing_invariants(sched)
+    for _ in range(200):
+        if not sched.has_work:
+            break
+        if sched.try_admit() is None and sched.active:
+            sched.finish(next(iter(sched.active)))
+        _check_sharing_invariants(sched)
+    assert not sched.has_work
+    # quiescent: every page is either free or held by the cache alone
+    assert sched.free_pages == nb - sched.prefix_cache.pages_held
