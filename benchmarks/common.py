@@ -103,6 +103,51 @@ def baseline_float_ppl(cfg, params, evalb=None):
     return float_ppl(params, cfg, evalb or eval_batches(cfg))
 
 
+def poisson_trace(n: int, rate: float, seed: int, *, prompt_lens,
+                  max_news, priorities=(0,), vocab: int = 128,
+                  uid_base: int = 0):
+    """Seeded Poisson arrival trace shared by ``bench_serving.py`` and the
+    scheduler property tests — byte-for-byte reproducible (one
+    ``PCG64``-seeded Generator drives arrivals, lengths, priorities and
+    prompt tokens; no wall clock, no global state), so CI and local runs
+    replay the identical workload.
+
+    Returns ``(requests, arrivals)``: ``n`` request dicts
+    ``{uid, prompt, max_new, priority}`` in arrival order and their
+    cumulative arrival times (seconds, exponential gaps at ``rate``
+    req/s). Returned as plain dicts so the tests can wrap them in
+    ``Request`` while the bench reuses one trace across engines."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n):
+        s0 = int(rng.choice(prompt_lens))
+        reqs.append({
+            "uid": uid_base + i,
+            "prompt": rng.integers(0, vocab, size=s0).astype(np.int32),
+            "max_new": int(rng.choice(max_news)),
+            "priority": int(rng.choice(priorities)),
+        })
+    return reqs, arrivals.tolist()
+
+
+def trace_digest(reqs, arrivals) -> str:
+    """Stable digest of a :func:`poisson_trace` (pinned in the tests: the
+    generator must stay byte-for-byte reproducible or the committed
+    latency baselines silently measure a different workload)."""
+    import hashlib
+
+    h = hashlib.blake2b(digest_size=16)
+    for r, t in zip(reqs, arrivals):
+        h.update(np.int64(r["uid"]).tobytes())
+        h.update(np.asarray(r["prompt"], np.int32).tobytes())
+        h.update(np.int64(r["max_new"]).tobytes())
+        h.update(np.int64(r["priority"]).tobytes())
+        h.update(np.float64(t).tobytes())
+    return h.hexdigest()
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 

@@ -8,11 +8,15 @@ committed baselines and fail on a >25% perf regression.
 them aside before the bench run overwrites the working tree copies).
 Every numeric leaf whose key names a perf metric is compared:
 
-* ``us``-style keys (``us_kernel``, ``us_per_tok_paged``, ...): lower is
-  better — fail when current > baseline * (1 + threshold);
 * ``toks``-style keys, ``speedup`` and ``rate`` (e.g. the serving
-  bench's ``prefix_cache.hit_rate``): higher is better — fail when
-  current < baseline * (1 - threshold).
+  bench's ``prefix_cache.hit_rate`` or ``ttft_p99_speedup_vs_fifo``):
+  higher is better — fail when current < baseline * (1 - threshold).
+  Checked *first*: a speedup computed over a latency metric
+  (``ttft_p99_speedup_vs_fifo``) must classify by what the number *is*
+  (a ratio, higher-better), not by what it was computed from;
+* ``us``-style keys (``us_kernel``, ``us_per_tok_paged``, ...) and the
+  serving latency percentiles (``ttft_*`` / ``itl_*`` p50/p99): lower
+  is better — fail when current > baseline * (1 + threshold).
 
 Non-perf leaves (shapes, error norms, config echoes) are ignored. The
 threshold defaults to 0.25 and can be widened for noisy runners via
@@ -37,10 +41,12 @@ import sys
 def _is_perf_key(key: str) -> str | None:
     """Classify a metric key: "lower" / "higher" better, or None (skip)."""
     parts = key.lower().replace("/", "_").split("_")
-    if "us" in parts:
-        return "lower"
+    # higher-better first: `ttft_p99_speedup_vs_fifo` is a speedup (a
+    # ratio of latencies, higher-better), not a latency
     if "toks" in parts or "speedup" in parts or "rate" in parts:
         return "higher"
+    if "us" in parts or "ttft" in parts or "itl" in parts:
+        return "lower"
     return None
 
 

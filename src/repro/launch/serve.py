@@ -17,7 +17,12 @@ host reference loop instead of the fused on-device generation loop.
 (``repro.serving.PagedEngine``) instead of the fixed-slot engine:
 ``--block-size`` sets the KV page granularity, ``--max-concurrency`` the
 engine slot count, ``--num-blocks`` the shared page-pool size (defaults to
-enough pages for a full-length batch at ``--max-concurrency``). See
+enough pages for a full-length batch at ``--max-concurrency``).
+``--admit-window`` / ``--admit-batch`` / ``--prefill-chunk`` /
+``--watermark LOW HIGH`` switch the engine into the throughput scheduler
+(windowed priority admission, batched cold prefill, chunked long-prompt
+prefill, watermark reservation with preempt-and-requeue) — token streams
+stay bit-identical to the default FIFO loop. See
 docs/serving_scheduler.md.
 """
 
@@ -88,6 +93,23 @@ def main(argv=None):
                          "(--paged, attention-only patterns): repeated "
                          "prefixes prefill only their uncached suffix; "
                          "pages are refcounted with LRU eviction")
+    ap.add_argument("--admit-window", type=int, default=1,
+                    help="queued requests one admission pass may examine "
+                         "(--paged; >1 lets urgent classes jump the line)")
+    ap.add_argument("--admit-batch", type=int, default=1,
+                    help="max cold arrivals co-admitted through one padded "
+                         "multi-row prefill program (--paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill long prompts in page-aligned chunks of "
+                         "at most this many tokens, interleaved with decode "
+                         "(--paged; must be a multiple of --block-size)")
+    ap.add_argument("--watermark", type=int, nargs=2, default=None,
+                    metavar=("LOW", "HIGH"),
+                    help="free-page watermarks (--paged): admit against a "
+                         "LOW-page reserve instead of each request's worst "
+                         "case; decode growth preempts-and-requeues on "
+                         "exhaustion, and after a preemption fresh arrivals "
+                         "wait for HIGH free pages (hysteresis)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -118,6 +140,13 @@ def main(argv=None):
                            or args.prefix_cache):
         raise SystemExit("--kv-dtype/--kv-hbm-mb/--prefix-cache apply to the "
                          "paged engine only (add --paged)")
+    sched_flags = (args.admit_window != 1 or args.admit_batch != 1
+                   or args.prefill_chunk is not None
+                   or args.watermark is not None)
+    if not args.paged and sched_flags:
+        raise SystemExit("--admit-window/--admit-batch/--prefill-chunk/"
+                         "--watermark apply to the paged engine only "
+                         "(add --paged)")
     if args.paged:
         if args.host_loop:
             raise SystemExit("--host-loop applies to the fixed-slot engine only")
@@ -137,22 +166,38 @@ def main(argv=None):
                     f"pages < the {pages_per_seq} one request needs")
         else:
             num_blocks = args.num_blocks or args.max_concurrency * pages_per_seq
-        engine = PagedEngine(
-            params, cfg,
-            PagedConfig(block_size=args.block_size, num_blocks=num_blocks,
-                        max_concurrency=args.max_concurrency,
-                        kv_dtype=args.kv_dtype,
-                        prefix_cache=args.prefix_cache),
-            sampler,
-        )
+        from repro.serving import SchedulerPolicy
+
+        try:
+            policy = SchedulerPolicy(
+                admit_window=args.admit_window, batch_max=args.admit_batch,
+                prefill_chunk=args.prefill_chunk,
+                watermark=tuple(args.watermark) if args.watermark else None)
+        except ValueError as e:
+            raise SystemExit(f"scheduler policy: {e}") from None
+        try:
+            engine = PagedEngine(
+                params, cfg,
+                PagedConfig(block_size=args.block_size, num_blocks=num_blocks,
+                            max_concurrency=args.max_concurrency,
+                            kv_dtype=args.kv_dtype,
+                            prefix_cache=args.prefix_cache, sched=policy),
+                sampler,
+            )
+        except ValueError as e:
+            raise SystemExit(f"paged engine: {e}") from None
         pool_mb = kv_pool_bytes(cfg, num_blocks, args.block_size,
                                 args.kv_dtype) / 2**20
         attn_dp = (f" attn_datapath=[{engine.attn_spec.describe()}]"
                    if engine.attn_spec else "")
         pc = " prefix_cache=on" if args.prefix_cache else ""
+        pol = ("" if policy.is_legacy else
+               f" policy=(window={policy.admit_window} "
+               f"batch={policy.batch_max} chunk={policy.prefill_chunk} "
+               f"watermark={policy.watermark})")
         print(f"[serve] paged engine: block_size={args.block_size} "
               f"num_blocks={num_blocks} slots={args.max_concurrency} "
-              f"kv_dtype={args.kv_dtype} pool={pool_mb:.2f}MB{pc}{attn_dp}")
+              f"kv_dtype={args.kv_dtype} pool={pool_mb:.2f}MB{pc}{pol}{attn_dp}")
         gen = engine.generate
     else:
         engine = GenerationEngine(params, cfg, sampler)

@@ -1,7 +1,8 @@
 from .engine import GenerationEngine, SamplerConfig
+from .metrics import ServeMetrics
 from .paged_engine import PagedConfig, PagedEngine
 from .prefix_cache import PrefixCache
-from .scheduler import PoolState, Request, Scheduler
+from .scheduler import PoolState, Request, Scheduler, SchedulerPolicy
 
 __all__ = [
     "GenerationEngine",
@@ -12,4 +13,6 @@ __all__ = [
     "Request",
     "SamplerConfig",
     "Scheduler",
+    "SchedulerPolicy",
+    "ServeMetrics",
 ]

@@ -43,6 +43,8 @@ bit-identical to the fixed-slot engine (golden-pinned in
 
 from __future__ import annotations
 
+import time
+from collections import deque
 from dataclasses import dataclass
 from functools import partial
 
@@ -69,8 +71,14 @@ from repro.quant.spec import (
     validate_datapath,
 )
 from repro.serving.engine import SamplerConfig, _sample
+from repro.serving.metrics import ServeMetrics
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.scheduler import PoolState, Request, Scheduler
+from repro.serving.scheduler import (
+    PoolState,
+    Request,
+    Scheduler,
+    SchedulerPolicy,
+)
 
 
 @dataclass(frozen=True)
@@ -103,6 +111,12 @@ class PagedConfig:
     #: pass). Requires an attention-only pattern: recurrent mixers keep
     #: dense per-slot state that is not paged and cannot be shared.
     prefix_cache: bool = False
+    #: admission/decode policy (repro.serving.scheduler.SchedulerPolicy).
+    #: The default is legacy FIFO — bit-compatible with prior releases
+    #: and the baseline the latency bench compares against. Any
+    #: non-default field (windowed/batched admission, chunked prefill,
+    #: watermark + preemption) switches serve() to the throughput loop.
+    sched: SchedulerPolicy = SchedulerPolicy()
 
 
 def _fold_keys(seed: int, uids, steps):
@@ -139,16 +153,43 @@ class PagedEngine:
             max_concurrency=paged.max_concurrency, max_pages_per_seq=max_pages,
             chunk_max=paged.chunk_max, attn_impl=paged.attn_impl,
             kv_dtype=paged.kv_dtype, prefix_cache=paged.prefix_cache,
+            sched=paged.sched,
         )
-        if paged.prefix_cache:
-            recurrent = sorted({s.mixer for s in cfg.pattern
-                                if s.mixer not in ("attn", "none")})
-            if recurrent:
+        recurrent = sorted({s.mixer for s in cfg.pattern
+                            if s.mixer not in ("attn", "none")})
+        if paged.prefix_cache and recurrent:
+            raise ValueError(
+                f"prefix_cache=True needs an attention-only pattern: "
+                f"{recurrent} mixers keep dense per-slot state that is "
+                f"not paged and cannot be shared across requests"
+            )
+        pol = paged.sched
+        if pol.batch_max > 1 or pol.prefill_chunk is not None:
+            # batched rows compete for MoE expert capacity (per-row
+            # routing is not independent of co-batched traffic), and
+            # recurrent mixers step state through pad tokens — both break
+            # the per-request bit-identity guarantee, so the policy
+            # refuses them rather than silently drifting
+            has_moe = any(s.ffn == "moe" for s in cfg.pattern)
+            if recurrent or has_moe:
+                what = "batched admission" if pol.batch_max > 1 else \
+                    "chunked prefill"
                 raise ValueError(
-                    f"prefix_cache=True needs an attention-only pattern: "
-                    f"{recurrent} mixers keep dense per-slot state that is "
-                    f"not paged and cannot be shared across requests"
+                    f"{what} needs an attention-only, MoE-free pattern "
+                    f"(recurrent mixers {recurrent or 'none'}, moe ffn "
+                    f"{has_moe}): padded multi-row / chunked prefill would "
+                    f"change routing or stepwise state and break greedy "
+                    f"bit-identity with the FIFO engine"
                 )
+        if pol.prefill_chunk is not None and (
+                pol.prefill_chunk % paged.block_size != 0):
+            raise ValueError(
+                f"prefill_chunk {pol.prefill_chunk} must be a multiple of "
+                f"block_size {paged.block_size} (chunks scatter whole pages)")
+        if pol.watermark is not None and pol.watermark[1] > paged.num_blocks:
+            raise ValueError(
+                f"watermark high {pol.watermark[1]} > num_blocks "
+                f"{paged.num_blocks} — admission could never resume")
         self.prefix_cache = (
             PrefixCache(paged.num_blocks, paged.block_size)
             if paged.prefix_cache else None
@@ -177,6 +218,12 @@ class PagedEngine:
         self.cached_traces = 0
         self.chunk_traces = 0
         self.release_traces = 0
+        self.batch_traces = 0
+        self.stub_traces = 0
+        self.prefill_chunk_traces = 0
+        self.grow_traces = 0
+        #: host-observed preemption count across serve() calls
+        self.preemptions = 0
         self._uid_gen = 0
 
         # the cache pytree is DONATED to every program: it crosses the jit
@@ -223,11 +270,47 @@ class PagedEngine:
         def _release(cache, slot, pages, n):
             return self._release_impl(cache, slot, pages, n)
 
+        @partial(jax.jit, static_argnames=("n_rows", "n_prompt_pages",
+                                           "backend", "attn_impl",
+                                           "datapath"),
+                 donate_argnames=("cache",))
+        def _admit_batch(params, cache, tokens, s0s, slots, uids, rows,
+                         scatter_idx, incs, total_pop, n_rows,
+                         n_prompt_pages, backend, attn_impl, datapath):
+            with use_packed_backend(backend):
+                return self._admit_batch_impl(params, cache, tokens, s0s,
+                                              slots, uids, rows, scatter_idx,
+                                              incs, total_pop, n_prompt_pages)
+
+        @partial(jax.jit, donate_argnames=("cache",))
+        def _admit_stub(cache, row, slot, uid, incs, n_pages):
+            return self._admit_stub_impl(cache, row, slot, uid, incs, n_pages)
+
+        @partial(jax.jit, donate_argnames=("cache",))
+        def _grow(cache, slot, row, add, n_new):
+            return self._grow_impl(cache, slot, row, add, n_new)
+
+        @partial(jax.jit, static_argnames=("n_prior", "n_chunk_pages",
+                                           "final", "backend", "attn_impl",
+                                           "datapath"),
+                 donate_argnames=("cache",))
+        def _prefill_chunk(params, cache, tokens, slot, uid, s0, incs,
+                           n_prior, n_chunk_pages, final, backend, attn_impl,
+                           datapath):
+            with use_packed_backend(backend):
+                return self._prefill_chunk_impl(params, cache, tokens, slot,
+                                                uid, s0, incs, n_prior,
+                                                n_chunk_pages, final)
+
         self._admit = _admit
         self._admit_suffix = _admit_suffix
         self._admit_cached = _admit_cached
         self._chunk = _chunk
         self._release = _release
+        self._admit_batch = _admit_batch
+        self._admit_stub = _admit_stub
+        self._grow = _grow
+        self._prefill_chunk = _prefill_chunk
 
     # ------------------------------------------------------------------
     # Device programs (traced bodies)
@@ -316,6 +399,74 @@ class PagedEngine:
         new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
         return new, nxt[0]
 
+    def _gather_prefix_kv(self, cache, pages, prefix_len: int):
+        """Gather the KV held in ``pages`` — dequantized, for int8 pools
+        (page-exact: codes x per-(page, head) scale) — as dense
+        ``(R, 1, prefix_len, nkv, hd)`` prefix tensors for a suffix or
+        chunked prefill. Returns a tuple aligned with ``cfg.pattern``
+        (non-attention entries empty — the engine gates recurrent
+        patterns off every path that calls this)."""
+
+        def gather(p, scales=None):
+            g = p[:, pages]  # (R, n_pages, bs, nkv, hd)
+            if scales is not None:  # int8 codes -> float (page-exact)
+                g = g.astype(jnp.float32) * (
+                    scales[:, pages][..., None, :, None])
+            r, _, _, nkv, hd = g.shape
+            return g.reshape(r, 1, prefix_len, nkv, hd)
+
+        prefix_kv = []
+        for i, spec in enumerate(self.cfg.pattern):
+            if spec.mixer != "attn":
+                prefix_kv.append({})
+                continue
+            c = cache["pools"][i]
+            if "k_scales" in c:
+                prefix_kv.append(
+                    {"k": gather(c["k_pages"], c["k_scales"]),
+                     "v": gather(c["v_pages"], c["v_scales"])})
+            else:
+                prefix_kv.append({"k": gather(c["k_pages"]),
+                                  "v": gather(c["v_pages"])})
+        return tuple(prefix_kv)
+
+    def _scatter_dense_pages(self, cache, dense, pages, n_pages: int):
+        """Scatter a B=1 prefill's dense KV into ``pages`` (quantize-on-
+        scatter for int8 pools: codes + per-(page, head) scales stamped
+        together). Non-attention pools pass through untouched ("none"
+        mixers only — the engine gates recurrent patterns)."""
+        bs = self.paged.block_size
+        pools = []
+        for i, spec in enumerate(self.cfg.pattern):
+            c = cache["pools"][i]
+            if spec.mixer != "attn":
+                pools.append(c)
+                continue
+            d = dense[i]
+
+            def to_pages(a):
+                r, _, _, nkv, hd = a.shape
+                return a.reshape(r, n_pages, bs, nkv, hd)
+
+            if "k_scales" in c:
+                from repro.kernels.paged_attention import quantize_kv_pages
+
+                kc, ks = quantize_kv_pages(to_pages(d["k"]))
+                vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                pools.append({
+                    "k_pages": c["k_pages"].at[:, pages].set(kc),
+                    "v_pages": c["v_pages"].at[:, pages].set(vc),
+                    "k_scales": c["k_scales"].at[:, pages].set(ks),
+                    "v_scales": c["v_scales"].at[:, pages].set(vs),
+                })
+            else:
+                kp = c["k_pages"].at[:, pages].set(
+                    to_pages(d["k"]).astype(c["k_pages"].dtype))
+                vp = c["v_pages"].at[:, pages].set(
+                    to_pages(d["v"]).astype(c["v_pages"].dtype))
+                pools.append({"k_pages": kp, "v_pages": vp})
+        return tuple(pools)
+
     def _admit_suffix_impl(self, params, cache, suffix, shared_pages, slot,
                            uid, incs, n_pages: int, n_shared: int):
         """Shared-prefix admit: the request's first ``n_shared`` logical
@@ -342,60 +493,12 @@ class PagedEngine:
         table = jax.lax.dynamic_update_slice(
             cache["block_table"], row[None], (slot, jnp.int32(0)))
 
-        def gather_prefix(pages, scales=None):
-            g = pages[:, shared_pages]  # (R, n_shared, bs, nkv, hd)
-            if scales is not None:  # int8 codes -> float (page-exact)
-                g = g.astype(jnp.float32) * (
-                    scales[:, shared_pages][..., None, :, None])
-            r, _, _, nkv, hd = g.shape
-            return g.reshape(r, 1, prefix_len, nkv, hd)
-
-        prefix_kv = []
-        for i, spec in enumerate(cfg.pattern):
-            if spec.mixer != "attn":
-                prefix_kv.append({})
-                continue
-            c = cache["pools"][i]
-            if "k_scales" in c:
-                prefix_kv.append(
-                    {"k": gather_prefix(c["k_pages"], c["k_scales"]),
-                     "v": gather_prefix(c["v_pages"], c["v_scales"])})
-            else:
-                prefix_kv.append({"k": gather_prefix(c["k_pages"]),
-                                  "v": gather_prefix(c["v_pages"])})
-
+        prefix_kv = self._gather_prefix_kv(cache, shared_pages, prefix_len)
         logits, dense = prefill(params, {"tokens": suffix}, cfg, prefill_len,
-                                prefix_kv=tuple(prefix_kv),
-                                pos_offset=prefix_len)
-        suffix_pages = popped[:n_suffix_pages]
-        pools = []
-        for i, spec in enumerate(cfg.pattern):
-            c = cache["pools"][i]
-            d = dense[i]
-            if spec.mixer == "attn":
-                def to_pages(a):
-                    r, _, _, nkv, hd = a.shape
-                    return a.reshape(r, n_suffix_pages, bs, nkv, hd)
-
-                if "k_scales" in c:
-                    from repro.kernels.paged_attention import quantize_kv_pages
-
-                    kc, ks = quantize_kv_pages(to_pages(d["k"]))
-                    vc, vs = quantize_kv_pages(to_pages(d["v"]))
-                    pools.append({
-                        "k_pages": c["k_pages"].at[:, suffix_pages].set(kc),
-                        "v_pages": c["v_pages"].at[:, suffix_pages].set(vc),
-                        "k_scales": c["k_scales"].at[:, suffix_pages].set(ks),
-                        "v_scales": c["v_scales"].at[:, suffix_pages].set(vs),
-                    })
-                else:
-                    kp = c["k_pages"].at[:, suffix_pages].set(
-                        to_pages(d["k"]).astype(c["k_pages"].dtype))
-                    vp = c["v_pages"].at[:, suffix_pages].set(
-                        to_pages(d["v"]).astype(c["v_pages"].dtype))
-                    pools.append({"k_pages": kp, "v_pages": vp})
-            else:  # "none" mixers only — engine gates recurrent patterns
-                pools.append(c)
+                                prefix_kv=prefix_kv, pos_offset=prefix_len)
+        pools = self._scatter_dense_pages(cache, dense,
+                                          popped[:n_suffix_pages],
+                                          n_suffix_pages)
 
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.key(self.sampler.seed), uid),
@@ -522,15 +625,174 @@ class PagedEngine:
         new["active"] = cache["active"].at[slot].set(False, mode="drop")
         return new
 
+    def _admit_batch_impl(self, params, cache, tokens, s0s, slots, uids,
+                          rows, scatter_idx, incs, total_pop,
+                          n_prompt_pages: int):
+        """Co-admit ``n`` cold requests in ONE padded multi-row prefill.
+        ``tokens`` is ``(n, n_prompt_pages * bs)`` zero-padded; per-row KV
+        at positions ``>= s0s[r]`` is zero-masked before the page scatter
+        so every page (codes *and* int8 scales — pad zeros cannot raise a
+        page max) is bit-identical to the B=1 admit's, and each row's
+        first token is sampled from its own last-prompt-position logits
+        with the same ``fold_in(uid, 0)`` key. Rows/pages are
+        host-computed (the host free-list mirror pops in device order);
+        the device just stamps them and advances ``free_top``. One trace
+        per (n_rows, n_prompt_pages) bucket."""
+        self.batch_traces += 1
+        cfg, paged = self.cfg, self.paged
+        bs = paged.block_size
+        n, prefill_len = tokens.shape
+        assert prefill_len == n_prompt_pages * bs
+
+        logits, dense = prefill(params, {"tokens": tokens}, cfg, prefill_len)
+        # (n, L): True at real prompt positions, False at pad positions
+        pos_valid = jnp.arange(prefill_len)[None, :] < s0s[:, None]
+        idx_flat = scatter_idx.reshape(-1)  # (n * P,) sentinel-masked
+        pools = []
+        for i, spec in enumerate(cfg.pattern):
+            c = cache["pools"][i]
+            if spec.mixer != "attn":  # "none" only — engine gates batching
+                pools.append(c)
+                continue
+            d = dense[i]
+
+            def to_pages(a):
+                # zero-mask pad positions (matches the B=1 jnp.pad zeros),
+                # then (R, n, L, nkv, hd) -> (R, n*P, bs, nkv, hd)
+                a = jnp.where(pos_valid[None, :, :, None, None], a, 0)
+                r, _, _, nkv, hd = a.shape
+                return a.reshape(r, n * n_prompt_pages, bs, nkv, hd)
+
+            if "k_scales" in c:
+                from repro.kernels.paged_attention import quantize_kv_pages
+
+                kc, ks = quantize_kv_pages(to_pages(d["k"]))
+                vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                pools.append({
+                    "k_pages": c["k_pages"].at[:, idx_flat].set(
+                        kc, mode="drop"),
+                    "v_pages": c["v_pages"].at[:, idx_flat].set(
+                        vc, mode="drop"),
+                    "k_scales": c["k_scales"].at[:, idx_flat].set(
+                        ks, mode="drop"),
+                    "v_scales": c["v_scales"].at[:, idx_flat].set(
+                        vs, mode="drop"),
+                })
+            else:
+                kp = c["k_pages"].at[:, idx_flat].set(
+                    to_pages(d["k"]).astype(c["k_pages"].dtype), mode="drop")
+                vp = c["v_pages"].at[:, idx_flat].set(
+                    to_pages(d["v"]).astype(c["v_pages"].dtype), mode="drop")
+                pools.append({"k_pages": kp, "v_pages": vp})
+
+        # each row's logits at its own last prompt position
+        l_last = jnp.take_along_axis(
+            logits, (s0s - 1)[:, None, None], axis=1)[:, 0]  # (n, V)
+        keys = _fold_keys(self.sampler.seed, uids, jnp.zeros_like(uids))
+        nxt = _sample_rows(l_last, self.sampler.temperature, keys)  # (n,)
+
+        new = dict(cache)
+        new["pools"] = tuple(pools)
+        new["block_table"] = cache["block_table"].at[slots].set(rows)
+        new["free_top"] = cache["free_top"] + total_pop
+        new["page_refcounts"] = cache["page_refcounts"].at[
+            rows.reshape(-1)].add(incs.reshape(-1), mode="drop")
+        new["seq_lens"] = cache["seq_lens"].at[slots].set(s0s)
+        new["active"] = cache["active"].at[slots].set(True)
+        new["uids"] = cache["uids"].at[slots].set(uids)
+        new["steps"] = cache["steps"].at[slots].set(1)
+        new["last_tok"] = cache["last_tok"].at[slots].set(nxt)
+        return new, nxt
+
+    def _admit_stub_impl(self, cache, row, slot, uid, incs, n_pages):
+        """Claim a slot + its full page row for a chunked prefill without
+        touching the model: ``active = False`` (decode chunks skip the
+        slot), ``seq_lens = steps = 0``. FLOP-free by construction;
+        ``n_pages`` is dynamic — one trace serves every row size."""
+        self.stub_traces += 1
+        new = dict(cache)
+        new["block_table"] = cache["block_table"].at[slot].set(row)
+        new["free_top"] = cache["free_top"] + n_pages
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            incs, mode="drop")
+        new["seq_lens"] = cache["seq_lens"].at[slot].set(0)
+        new["active"] = cache["active"].at[slot].set(False)
+        new["uids"] = cache["uids"].at[slot].set(uid)
+        new["steps"] = cache["steps"].at[slot].set(0)
+        new["last_tok"] = cache["last_tok"].at[slot].set(0)
+        return new
+
+    def _grow_impl(self, cache, slot, row, add, n_new):
+        """Watermark growth: stamp the slot's extended (host-computed) row,
+        bump refcounts on exactly the new pages (``add`` is 1 there, 0
+        elsewhere) and advance ``free_top``. Dynamic ``n_new`` — one trace
+        serves every growth size."""
+        self.grow_traces += 1
+        new = dict(cache)
+        new["block_table"] = cache["block_table"].at[slot].set(row)
+        new["free_top"] = cache["free_top"] + n_new
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            add, mode="drop")
+        return new
+
+    def _prefill_chunk_impl(self, params, cache, tokens, slot, uid, s0,
+                            incs, n_prior: int, n_chunk_pages: int,
+                            final: bool):
+        """One page-aligned prefill chunk for a stub-admitted slot: gather
+        the slot's first ``n_prior`` pages as dense prefix KV (the PR 6
+        ``pos_offset`` suffix machinery), prefill this chunk's tokens at
+        offset ``n_prior * bs`` and scatter them into the row's next
+        ``n_chunk_pages`` pages. The ``final`` chunk samples the first
+        token with the cold admit's exact ``fold_in(uid, 0)`` key and
+        flips the slot live (``seq_lens = s0``, ``steps = 1``); earlier
+        chunks leave the slot inactive so interleaved decode chunks skip
+        it. One trace per (chunk_len, n_prior, final) bucket."""
+        self.prefill_chunk_traces += 1
+        cfg, paged = self.cfg, self.paged
+        bs = paged.block_size
+        _, t = tokens.shape  # (1, T) — this chunk's prompt tokens
+        prefix_len = n_prior * bs
+        prefill_len = n_chunk_pages * bs
+
+        row = cache["block_table"][slot]  # (W,) — stamped at stub admit
+        prefix_kv = (self._gather_prefix_kv(cache, row[:n_prior], prefix_len)
+                     if n_prior else None)
+        logits, dense = prefill(params, {"tokens": tokens}, cfg, prefill_len,
+                                prefix_kv=prefix_kv, pos_offset=prefix_len)
+        pools = self._scatter_dense_pages(
+            cache, dense, row[n_prior:n_prior + n_chunk_pages], n_chunk_pages)
+
+        new = dict(cache)
+        new["pools"] = tuple(pools)
+        if not final:
+            return new
+
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.sampler.seed), uid),
+            jnp.int32(0))
+        nxt = _sample(logits[:, -1], self.sampler.temperature, key)  # (1,)
+        # deferred prefix-cache registration lands with the final chunk
+        new["page_refcounts"] = cache["page_refcounts"].at[row].add(
+            incs, mode="drop")
+        new["seq_lens"] = cache["seq_lens"].at[slot].set(s0)
+        new["active"] = cache["active"].at[slot].set(True)
+        new["steps"] = cache["steps"].at[slot].set(1)
+        new["last_tok"] = cache["last_tok"].at[slot].set(nxt[0])
+        return new, nxt[0]
+
     # ------------------------------------------------------------------
     # Host loop
     # ------------------------------------------------------------------
-    def submit_all(self, requests) -> Scheduler:
+    def _make_scheduler(self) -> Scheduler:
         paged = self.paged
-        sched = Scheduler(paged.max_concurrency, paged.num_blocks,
-                          paged.block_size, paged.max_pages_per_seq,
-                          prefix_cache=self.prefix_cache,
-                          pool_state=self.pool_state)
+        return Scheduler(paged.max_concurrency, paged.num_blocks,
+                         paged.block_size, paged.max_pages_per_seq,
+                         prefix_cache=self.prefix_cache,
+                         pool_state=self.pool_state,
+                         policy=paged.sched)
+
+    def submit_all(self, requests) -> Scheduler:
+        sched = self._make_scheduler()
         for r in requests:
             sched.submit(r)
         return sched
@@ -555,6 +817,13 @@ class PagedEngine:
                 jnp.int32(adm.evict_pages.size))
         req = adm.req
         incs = jnp.asarray(adm.incs)
+        if adm.chunked:
+            # stub admit: claim the slot + full row FLOP-free; the prompt
+            # prefills later, one page-aligned chunk per scheduler pass
+            self.cache = self._admit_stub(
+                self.cache, self._pad_row(adm.row), jnp.int32(adm.slot),
+                jnp.int32(req.uid), incs, jnp.int32(adm.n_pages))
+            return None
         shared = jnp.asarray(np.asarray(adm.shared_pages, np.int32))
         if adm.cow_src is not None:
             self.cache = self._admit_cached(
@@ -578,12 +847,88 @@ class PagedEngine:
                 self.datapath_fingerprint)
         return int(jax.device_get(tok0))
 
-    def serve(self, requests, *, _probe=None, _late=None) -> dict[int, np.ndarray]:
+    def _do_admit_batch(self, group, backend, attn_impl) -> np.ndarray:
+        """Run one batched-admission group (>= 2 cold requests) through a
+        single padded multi-row prefill program. Returns the first sampled
+        token per group member, in group order."""
+        paged = self.paged
+        bs, W = paged.block_size, paged.max_pages_per_seq
+        n = len(group)
+        s0s = np.asarray([a.req.prompt.size for a in group], np.int32)
+        P = max(-(-int(s) // bs) for s in s0s)
+        tokens = np.zeros((n, P * bs), np.int32)
+        rows = np.full((n, W), paged.num_blocks, np.int32)
+        scat = np.full((n, P), paged.num_blocks, np.int32)
+        incs = np.zeros((n, W), np.int32)
+        total_pop = 0
+        for j, a in enumerate(group):
+            tokens[j, :s0s[j]] = a.req.prompt
+            rows[j, :a.n_pages] = a.row
+            scat[j, :-(-int(s0s[j]) // bs)] = a.row[:-(-int(s0s[j]) // bs)]
+            incs[j] = a.incs
+            total_pop += a.n_pages  # cold: every row page freshly popped
+        slots = np.asarray([a.slot for a in group], np.int32)
+        uids = np.asarray([a.req.uid for a in group], np.int32)
+        self.cache, toks = self._admit_batch(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(s0s),
+            jnp.asarray(slots), jnp.asarray(uids), jnp.asarray(rows),
+            jnp.asarray(scat), jnp.asarray(incs), jnp.int32(total_pop),
+            n, P, backend, attn_impl, self.datapath_fingerprint)
+        return np.asarray(jax.device_get(toks))
+
+    def _do_prefill_chunk(self, slot, sched, backend, attn_impl):
+        """Advance one stub-admitted slot by one page-aligned prefill
+        chunk. Returns the request's first sampled token when this chunk
+        completed the prompt, else None."""
+        tokens, n_prior, final, incs = sched.take_prefill_chunk(slot)
+        st = sched.active[slot]
+        n_chunk_pages = -(-tokens.size // self.paged.block_size)
+        out = self._prefill_chunk(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32)[None],
+            jnp.int32(slot), jnp.int32(st.req.uid),
+            jnp.int32(st.req.prompt.size), jnp.asarray(incs),
+            n_prior, n_chunk_pages, final, backend, attn_impl,
+            self.datapath_fingerprint)
+        if final:
+            self.cache, tok0 = out
+            return int(jax.device_get(tok0))
+        self.cache = out
+        return None
+
+    @staticmethod
+    def _arrival_feed(requests, arrivals):
+        """Sort an arrival-time trace into a (time, request) deque —
+        ``None`` when the whole list is submitted up front."""
+        if arrivals is None:
+            return None
+        if len(arrivals) != len(requests):
+            raise ValueError(
+                f"arrivals has {len(arrivals)} entries for {len(requests)} "
+                f"requests")
+        order = sorted(range(len(requests)),
+                       key=lambda i: (float(arrivals[i]), i))
+        return deque((float(arrivals[i]), requests[i]) for i in order)
+
+    def serve(self, requests, *, arrivals=None, metrics=None,
+              _probe=None, _late=None) -> dict[int, np.ndarray]:
         """Run a request list to completion under continuous batching.
 
         Returns {uid: (S0_uid + n_generated,) int32} — generation is
         trimmed at the first EOS (when the sampler sets one), matching the
         fixed-slot engine's post-EOS padding semantics after re-padding.
+
+        ``arrivals`` (optional, seconds, aligned with ``requests``) paces
+        submission on the wall clock instead of submitting everything up
+        front; ``metrics`` (a :class:`~repro.serving.metrics.ServeMetrics`)
+        collects per-request TTFT / inter-token timestamps. Greedy results
+        are identical either way — timing changes *when* work runs, never
+        what any request's token stream is.
+
+        The serve loop is picked by ``PagedConfig.sched``: the default
+        legacy-FIFO policy runs the original head-of-line loop
+        (bit-compatible, trace-shape-compatible); any other policy runs
+        the throughput loop (windowed/batched admission, chunked prefill,
+        watermark growth + preempt-and-requeue).
 
         ``_probe(engine, sched)`` (tests) runs after every admit/chunk/
         release transition; ``_late(sched, pass_idx)`` runs once per
@@ -591,12 +936,41 @@ class PagedEngine:
         submit mid-flight arrivals — even when the pass drained every
         active request at admission, so injected work is never stranded.
         """
-        sched = self.submit_all(requests)
+        if self.paged.sched.is_legacy:
+            return self._serve_legacy(requests, arrivals, metrics,
+                                      _probe, _late)
+        return self._serve_throughput(requests, arrivals, metrics,
+                                      _probe, _late)
+
+    def _serve_legacy(self, requests, arrivals, metrics, _probe, _late):
+        sched = self._make_scheduler()
+        pending = self._arrival_feed(requests, arrivals)
+        if pending is None:
+            for r in requests:
+                sched.submit(r)
+                if metrics is not None:
+                    metrics.submitted(r.uid, r.priority, 0.0)
         backend = packed_backend()
         attn_impl = resolve_paged_attn_impl(self.paged.attn_impl)
         eos = self.sampler.eos_id
         results: dict[int, np.ndarray] = {}
         chunk_idx = 0
+        t0 = time.perf_counter()
+
+        def now():
+            return time.perf_counter() - t0
+
+        def submit_due():
+            while pending and pending[0][0] <= now():
+                t, r = pending.popleft()
+                sched.submit(r)
+                if metrics is not None:
+                    metrics.submitted(r.uid, r.priority, t)
+
+        def note(slot, toks):
+            sched.record(slot, toks)
+            if metrics is not None and toks:
+                metrics.tokens(sched.active[slot].req.uid, len(toks), now())
 
         def finish(slot):
             st = sched.finish(slot)
@@ -608,12 +982,17 @@ class PagedEngine:
             if _probe is not None:
                 _probe(self, sched)
 
-        while sched.has_work:
+        while sched.has_work or pending:
+            if pending:
+                submit_due()
+                if not sched.has_work:
+                    time.sleep(max(0.0, pending[0][0] - now()))
+                    continue
             adm = sched.try_admit()
             while adm is not None:
                 tok0 = self._do_admit(adm, backend, attn_impl)
                 if tok0 is not None:
-                    sched.record(adm.slot, [tok0])
+                    note(adm.slot, [tok0])
                 if _probe is not None:
                     _probe(self, sched)
                 if tok0 is not None and (
@@ -632,7 +1011,7 @@ class PagedEngine:
                     toks = buf[slot, :k].tolist()[: sched.remaining(slot)]
                     if eos is not None and eos in toks:
                         toks = toks[: toks.index(eos) + 1]
-                    sched.record(slot, toks)
+                    note(slot, toks)
                     if sched.remaining(slot) == 0 or (
                             eos is not None and toks and toks[-1] == eos):
                         finish(slot)
@@ -641,6 +1020,173 @@ class PagedEngine:
             if _late is not None:
                 _late(sched, chunk_idx)
             chunk_idx += 1
+        return results
+
+    def _serve_throughput(self, requests, arrivals, metrics, _probe, _late):
+        """Throughput-mode serve loop. One pass = (1) one page-aligned
+        prefill chunk per already-prefilling slot — in-flight prompts are
+        older than anything queued, so they advance ahead of fresh
+        admissions and a burst of arrivals cannot starve a long prompt's
+        final chunk; (2) an admission pass — windowed, priority-ordered,
+        cold arrivals co-admitted through the batched prefill program
+        (slots stubbed here get their first chunk at the end of the same
+        pass); (3) a planned decode chunk — cache eviction / preemption /
+        watermark growth committed in plan order, then ``k`` fused steps.
+        Token streams are bit-identical to the legacy loop: admission
+        variants write identical pages and the per-request
+        ``fold_in(uid, step)`` sampling stream is order-free."""
+        sched = self._make_scheduler()
+        pending = self._arrival_feed(requests, arrivals)
+        if pending is None:
+            for r in requests:
+                sched.submit(r)
+                if metrics is not None:
+                    metrics.submitted(r.uid, r.priority, 0.0)
+        backend = packed_backend()
+        attn_impl = resolve_paged_attn_impl(self.paged.attn_impl)
+        eos = self.sampler.eos_id
+        results: dict[int, np.ndarray] = {}
+        pass_idx = 0
+        t0 = time.perf_counter()
+
+        def now():
+            return time.perf_counter() - t0
+
+        def submit_due():
+            while pending and pending[0][0] <= now():
+                t, r = pending.popleft()
+                sched.submit(r)
+                if metrics is not None:
+                    metrics.submitted(r.uid, r.priority, t)
+
+        def note(slot, toks):
+            sched.record(slot, toks)
+            if metrics is not None and toks:
+                metrics.tokens(sched.active[slot].req.uid, len(toks), now())
+
+        def finish(slot):
+            st = sched.finish(slot)
+            self.cache = self._release(self.cache, jnp.int32(slot),
+                                       self._pad_row(st.row),
+                                       jnp.int32(st.n_pages))
+            results[st.req.uid] = np.concatenate(
+                [st.req.prompt, np.asarray(st.tokens, np.int32)])
+            if _probe is not None:
+                _probe(self, sched)
+
+        def maybe_finish(slot):
+            st = sched.active.get(slot)
+            if st is None or st.prefilling:
+                return
+            if sched.remaining(slot) == 0 or (
+                    eos is not None and st.tokens and st.tokens[-1] == eos):
+                finish(slot)
+
+        while sched.has_work or pending:
+            if pending:
+                submit_due()
+                if not sched.has_work:
+                    time.sleep(max(0.0, pending[0][0] - now()))
+                    continue
+            progressed = False
+
+            def take_chunk(slot):
+                tok0 = self._do_prefill_chunk(slot, sched, backend, attn_impl)
+                if _probe is not None:
+                    _probe(self, sched)
+                if tok0 is not None:
+                    note(slot, [tok0])
+                    maybe_finish(slot)
+
+            # In-flight prefills advance *before* new admissions: a
+            # prefilling slot is older than anything still queued, and a
+            # burst of batched admits must not starve its next chunk (the
+            # final chunk is the request's first token).
+            chunked_first = sched.prefilling_slots()
+            for slot in chunked_first:
+                progressed = True
+                take_chunk(slot)
+            # ``admit_pass`` commits every group host-side up front; the
+            # device only catches up as each group's program runs, so
+            # probes and releases (a finish's device push must not
+            # interleave with this pass's remaining device pops — the
+            # free-list replay order is the lockstep contract) wait until
+            # the whole pass has executed.
+            admitted = []
+            for group in sched.admit_pass():
+                progressed = True
+                if len(group) == 1:
+                    adm = group[0]
+                    tok0 = self._do_admit(adm, backend, attn_impl)
+                    if tok0 is not None:
+                        note(adm.slot, [tok0])
+                else:
+                    toks = self._do_admit_batch(group, backend, attn_impl)
+                    for adm, t in zip(group, toks):
+                        note(adm.slot, [int(t)])
+                admitted.extend(group)
+            if admitted:
+                if _probe is not None:
+                    _probe(self, sched)
+                for adm in admitted:
+                    maybe_finish(adm.slot)
+            for slot in sched.prefilling_slots():
+                if slot in chunked_first:
+                    continue  # one chunk per slot per pass
+                progressed = True
+                take_chunk(slot)
+            plan = sched.plan_chunk(self.paged.chunk_max)
+            if plan is not None:
+                for v in plan.victims:
+                    progressed = True  # freed pages: replanned next pass
+                    st = sched.preempt(v)
+                    self.preemptions += 1
+                    self.cache = self._release(self.cache, jnp.int32(v),
+                                               self._pad_row(st.row),
+                                               jnp.int32(st.n_pages))
+                    if metrics is not None:
+                        metrics.preempted(st.req.uid)
+                    if _probe is not None:
+                        _probe(self, sched)
+                if plan.evict_nodes:
+                    pages = sched._commit_evict(plan.evict_nodes)
+                    self.cache = self._release(
+                        self.cache, jnp.int32(self.paged.max_concurrency),
+                        self._pad_row(pages), jnp.int32(pages.size))
+                    if _probe is not None:
+                        _probe(self, sched)
+                for slot, n_new in plan.grow:
+                    pages, held = sched.commit_grow(slot, n_new)
+                    add = np.zeros(self.paged.max_pages_per_seq, np.int32)
+                    add[held:held + n_new] = 1
+                    self.cache = self._grow(
+                        self.cache, jnp.int32(slot),
+                        self._pad_row(sched.active[slot].row),
+                        jnp.asarray(add), jnp.int32(n_new))
+                    if _probe is not None:
+                        _probe(self, sched)
+                if plan.slots:
+                    progressed = True
+                    self.cache, buf = self._chunk(
+                        self.params, self.cache, jnp.int32(plan.k), backend,
+                        attn_impl, self.datapath_fingerprint, self.attn_spec)
+                    buf = np.asarray(jax.device_get(buf))
+                    sched.advance_decode(plan.k)
+                    if _probe is not None:
+                        _probe(self, sched)
+                    for slot in plan.slots:
+                        toks = buf[slot, :plan.k].tolist()[
+                            : sched.remaining(slot)]
+                        if eos is not None and eos in toks:
+                            toks = toks[: toks.index(eos) + 1]
+                        note(slot, toks)
+                        maybe_finish(slot)
+            if not progressed and not sched.active and sched.queue \
+                    and not pending:
+                raise RuntimeError("queued requests can never be admitted")
+            if _late is not None:
+                _late(sched, pass_idx)
+            pass_idx += 1
         return results
 
     # ------------------------------------------------------------------

@@ -155,19 +155,31 @@ class PrefixCache:
         self._tick += 1
         node.tick = self._tick
 
-    def insert(self, prompt, row: np.ndarray, start_block: int) -> list[_Node]:
+    def insert(self, prompt, row: np.ndarray, start_block: int,
+               skip_existing: bool = False) -> list[_Node]:
         """Register the prompt's full blocks ``start_block ..`` (freshly
         prefilled into physical pages ``row[start_block + i]``) as cached,
         with the inserting request as first reader. Returns the new nodes
-        (the caller releases their readers at finish)."""
+        (the caller releases their readers at finish).
+
+        ``skip_existing`` tolerates blocks another request cached between
+        planning and insertion (the chunked-prefill deferred insert: the
+        inserter matched nothing at admit because its own blocks were not
+        yet written, but an identical concurrent prompt may have won the
+        race) — existing nodes are left untouched, the inserter's row
+        simply keeps its private duplicate pages for those blocks."""
         digests = block_digests(prompt, self.block_size)
         self._tick += 1
         created = []
         for i in range(start_block, len(digests)):
             key = digests[i]
-            assert key not in self.nodes, "insert over an existing node"
+            if key in self.nodes:
+                assert skip_existing, "insert over an existing node"
+                continue
             parent = digests[i - 1] if i else None
             if parent is not None:
+                # the parent is always resident: either matched/skipped
+                # (in the map already) or created earlier in this loop
                 self.nodes[parent].n_children += 1
             node = _Node(key=key, parent=parent, page=int(row[i]),
                          readers=1, tick=self._tick)

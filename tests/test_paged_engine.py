@@ -511,3 +511,119 @@ def test_hybrid_family_paged_decode():
     for b in range(2):
         want = GenerationEngine(params, cfg, GREEDY).generate(prompts[b:b + 1], 8)
         np.testing.assert_array_equal(out[b], want[0])
+
+
+# ---------------------------------------------------------------------------
+# Throughput policy: batched admission, chunked prefill, preempt-and-requeue
+# ---------------------------------------------------------------------------
+from repro.serving import SchedulerPolicy  # noqa: E402
+
+THROUGHPUT = SchedulerPolicy(admit_window=4, batch_max=3, prefill_chunk=16)
+
+
+def test_throughput_policy_greedy_bit_identical_to_fifo(setup):
+    """The tentpole identity: the throughput serve loop — windowed batched
+    admission, FLOP-free stub admits, chunked prefill interleaved with
+    decode — produces byte-identical token streams to the legacy FIFO
+    loop for every request, while actually exercising the batched and
+    chunked device programs (trace counters prove the paths ran)."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=u, prompt=rng.integers(0, 128, size=s0).astype(np.int32),
+                    max_new=mn, priority=p)
+            for u, (s0, mn, p) in enumerate(
+                [(8, 6, 0), (8, 4, 1), (24, 6, 0), (8, 5, 0), (16, 4, 1),
+                 (8, 3, 0)])]
+    fifo = _paged(cfg, params, max_concurrency=4, num_blocks=24,
+                  max_pages_per_seq=4)
+    want = fifo.serve([Request(**r.__dict__) for r in reqs])
+    thr = _paged(cfg, params, max_concurrency=4, num_blocks=24,
+                 max_pages_per_seq=4, sched=THROUGHPUT)
+    got = _serve_checked(thr, [Request(**r.__dict__) for r in reqs])
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    assert thr.batch_traces >= 1          # padded multi-row prefill ran
+    assert thr.stub_traces >= 1           # FLOP-free chunked stub ran
+    assert thr.prefill_chunk_traces >= 1  # page-aligned chunks ran
+    assert int(jax.device_get(thr.cache["free_top"])) == 0
+
+
+@pytest.mark.parametrize("kv_dtype", ["act", "int8"])
+def test_throughput_preemption_bit_identical(setup, kv_dtype):
+    """Watermark admission over-commits the pool; decode growth then
+    preempts the lowest-priority youngest victim, releases its pages, and
+    requeues it — and the restarted request's final tokens are still
+    bit-identical to an uninterrupted FIFO run (the per-request
+    ``fold_in(uid, step)`` sampling stream replays from step 0), float
+    and int8 KV pages alike."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(9)
+    reqs = [Request(uid=u, prompt=rng.integers(0, 128, size=8).astype(np.int32),
+                    max_new=24, priority=p)
+            for u, p in enumerate([0, 1, 1])]
+    fifo = _paged(cfg, params, max_concurrency=3, num_blocks=16,
+                  max_pages_per_seq=4, kv_dtype=kv_dtype)
+    want = fifo.serve([Request(**r.__dict__) for r in reqs])
+    thr = _paged(cfg, params, max_concurrency=3, num_blocks=6,
+                 max_pages_per_seq=4, kv_dtype=kv_dtype,
+                 sched=SchedulerPolicy(admit_window=2, watermark=(1, 4)))
+    got = _serve_checked(thr, [Request(**r.__dict__) for r in reqs])
+    assert thr.preemptions >= 1, "pool pressure never forced a preemption"
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    assert int(jax.device_get(thr.cache["free_top"])) == 0
+
+
+def test_throughput_prefix_cache_identity(trained_dense):
+    """Prefix-cache admits (suffix prefill, CoW fully-cached) coexist
+    with batched and chunked admission in one trace: cache-hit requests
+    keep their specialized n=1 programs, cold ones batch, the long cold
+    prompt chunks with its cache insert deferred to the final chunk — and
+    everything stays bit-identical to the cold FIFO engine."""
+    cfg, params = trained_dense
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, 128, size=16).astype(np.int32)
+    mk = lambda uid, tail, mn, p=0: Request(
+        uid=uid, prompt=np.concatenate([sys_prompt,
+                                        rng.integers(0, 128, size=tail
+                                                     ).astype(np.int32)])
+        if tail else sys_prompt.copy(), max_new=mn, priority=p)
+    reqs = [mk(0, 8, 6), mk(1, 8, 4), mk(2, 0, 4),
+            Request(uid=3, prompt=rng.integers(0, 128, size=24
+                                               ).astype(np.int32), max_new=5),
+            mk(4, 4, 4, p=1)]
+    fifo = _paged(cfg, params, max_concurrency=3, num_blocks=24,
+                  max_pages_per_seq=4)
+    want = fifo.serve([Request(**r.__dict__) for r in reqs])
+    thr = _paged(cfg, params, max_concurrency=3, num_blocks=24,
+                 max_pages_per_seq=4, prefix_cache=True, sched=THROUGHPUT)
+    got = _serve_checked(thr, [Request(**r.__dict__) for r in reqs])
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    assert thr.suffix_traces + thr.cached_traces >= 1  # cache paths ran
+    assert thr.prefill_chunk_traces >= 1
+
+
+def test_throughput_policy_pattern_gates():
+    """Batched/chunked admission requires an attention-only, MoE-free
+    pattern (routing and stepwise state break bit-identity); chunk sizes
+    must scatter whole pages; the watermark must be reachable."""
+    from repro.configs import get_smoke
+
+    moe_cfg = get_smoke("granite-moe-3b-a800m").scaled(vocab=128)
+    moe_params = init_model(jax.random.key(0), moe_cfg)
+    with pytest.raises(ValueError, match="MoE-free"):
+        _paged(moe_cfg, moe_params, sched=SchedulerPolicy(batch_max=2))
+    hyb_cfg = get_config("tiny-hybrid")
+    hyb_params = init_model(jax.random.key(0), hyb_cfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        _paged(hyb_cfg, hyb_params,
+               sched=SchedulerPolicy(prefill_chunk=8))
+    cfg = get_smoke("smollm-360m").scaled(n_layers=2, vocab=128)
+    params = init_model(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="multiple of"):
+        _paged(cfg, params, sched=SchedulerPolicy(prefill_chunk=12))
+    with pytest.raises(ValueError, match="admission could never resume"):
+        _paged(cfg, params, num_blocks=4,
+               sched=SchedulerPolicy(watermark=(1, 8)))

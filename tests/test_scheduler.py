@@ -65,11 +65,11 @@ def test_admission_is_fifo_and_respects_slots():
         sched.submit(_req(uid))
     a = sched.try_admit()
     b = sched.try_admit()
-    assert a[1].uid == 0 and b[1].uid == 1
+    assert a.req.uid == 0 and b.req.uid == 1
     assert sched.try_admit() is None  # no free slot
-    sched.finish(a[0])
+    sched.finish(a.slot)
     c = sched.try_admit()
-    assert c[1].uid == 2 and c[0] == a[0]  # freed slot reused
+    assert c.req.uid == 2 and c.slot == a.slot  # freed slot reused
 
 
 def test_admission_stalls_on_page_exhaustion():
@@ -79,11 +79,11 @@ def test_admission_stalls_on_page_exhaustion():
                       max_pages_per_seq=4)
     sched.submit(_req(0, s0=8, max_new=9))   # 2 pages
     sched.submit(_req(1, s0=8, max_new=9))   # 2 pages -> only 1 left
-    slot0, _, n0 = sched.try_admit()
-    assert n0 == 2 and sched.free_pages == 1
+    adm0 = sched.try_admit()
+    assert adm0.n_pages == 2 and sched.free_pages == 1
     assert sched.try_admit() is None          # stalls despite free slots
     assert len(sched.queue) == 1 and sched.free_pages == 1
-    sched.finish(slot0)
+    sched.finish(adm0.slot)
     assert sched.free_pages == 3
     assert sched.try_admit() is not None      # admitted after the free
 
@@ -113,7 +113,7 @@ def test_submit_rejects_duplicate_inflight_uid():
     sched.submit(_req(0))
     with pytest.raises(ValueError, match="already in flight"):
         sched.submit(_req(0))  # duplicate of a *queued* request
-    slot, _, _ = sched.try_admit()
+    slot = sched.try_admit().slot
     with pytest.raises(ValueError, match="already in flight"):
         sched.submit(_req(0))  # duplicate of an *active* request
     sched.finish(slot)
@@ -137,8 +137,8 @@ def test_record_remaining_and_min_remaining():
                       max_pages_per_seq=4)
     sched.submit(_req(0, max_new=8))
     sched.submit(_req(1, max_new=3))
-    s0, _, _ = sched.try_admit()
-    s1, _, _ = sched.try_admit()
+    s0 = sched.try_admit().slot
+    s1 = sched.try_admit().slot
     sched.record(s0, [1])
     sched.record(s1, [2])
     assert sched.remaining(s0) == 7 and sched.remaining(s1) == 2
@@ -160,7 +160,7 @@ def test_page_accounting_balances_after_churn():
         adm = sched.try_admit()
         if adm is None:
             break
-        admitted.append(adm[0])
+        admitted.append(adm.slot)
     assert len(admitted) == 2
     for slot in admitted:
         sched.finish(slot)
@@ -268,10 +268,9 @@ def test_randomized_churn_conserves_pages_and_slots(seed):
                 assert before == (sched.free_pages, len(sched.free_slots),
                                   len(sched.queue))
             else:
-                slot, req, n_pages = adm
-                admitted_order.append(req.uid)
-                assert n_pages == sched.pages_for(req.prompt.size,
-                                                  req.max_new)
+                admitted_order.append(adm.req.uid)
+                assert adm.n_pages == sched.pages_for(adm.req.prompt.size,
+                                                      adm.req.max_new)
         elif action < 0.75 and sched.active:
             slot = r.choice(list(sched.active))
             sched.record(slot, [1] * r.randint(1, sched.remaining(slot)))
@@ -393,3 +392,255 @@ def test_randomized_sharing_conserves_refcounts(seed):
     assert not sched.has_work
     # quiescent: every page is either free or held by the cache alone
     assert sched.free_pages == nb - sched.prefix_cache.pages_held
+
+
+# ---------------------------------------------------------------------------
+# Throughput policy: batched admission, chunked prefill, watermark preemption
+# ---------------------------------------------------------------------------
+from repro.serving.scheduler import SchedulerPolicy  # noqa: E402
+
+
+def _preq(uid, s0=8, max_new=8, priority=0):
+    return Request(uid=uid, prompt=np.zeros(s0, np.int32), max_new=max_new,
+                   priority=priority)
+
+
+def test_policy_validation_and_legacy_default():
+    assert SchedulerPolicy().is_legacy
+    assert not SchedulerPolicy(admit_window=2).is_legacy
+    with pytest.raises(ValueError, match="admit_window"):
+        SchedulerPolicy(admit_window=0)
+    with pytest.raises(ValueError, match="batch_max"):
+        SchedulerPolicy(batch_max=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SchedulerPolicy(prefill_chunk=0)
+    with pytest.raises(ValueError, match="watermark"):
+        SchedulerPolicy(watermark=(4, 2))
+
+
+def test_admit_pass_groups_cold_arrivals():
+    """Five cold arrivals, batch_max=3: one admission pass commits all
+    five (slots allow) as groups [3, 2] in FIFO order, each admission
+    carrying its own pages."""
+    sched = Scheduler(max_concurrency=5, num_blocks=16, block_size=8,
+                      max_pages_per_seq=4,
+                      policy=SchedulerPolicy(admit_window=5, batch_max=3))
+    for uid in range(5):
+        sched.submit(_preq(uid))
+    groups = sched.admit_pass()
+    assert [len(g) for g in groups] == [3, 2]
+    uids = [a.req.uid for g in groups for a in g]
+    assert uids == [0, 1, 2, 3, 4]
+    rows = np.concatenate([a.row for g in groups for a in g])
+    assert len(set(rows.tolist())) == rows.size  # disjoint pages
+    _check_sched_invariants(sched)
+
+
+def test_admit_pass_prefers_low_priority_class_within_window():
+    """Window sorting is by (priority, FIFO): an urgent request two
+    positions back jumps a same-window lower class, but FIFO order is
+    kept inside each class."""
+    sched = Scheduler(max_concurrency=4, num_blocks=32, block_size=8,
+                      max_pages_per_seq=4,
+                      policy=SchedulerPolicy(admit_window=3, batch_max=4))
+    sched.submit(_preq(0, priority=1))
+    sched.submit(_preq(1, priority=1))
+    sched.submit(_preq(2, priority=0))
+    sched.submit(_preq(3, priority=0))
+    uids = [a.req.uid for g in sched.admit_pass() for a in g]
+    assert uids == [2, 0, 3, 1] or uids == [2, 3, 0, 1]
+
+
+def test_chunked_prefill_state_machine():
+    """A 24-token prompt with prefill_chunk=8 stub-admits FLOP-free and
+    advances one page-aligned chunk at a time; only the final chunk flips
+    the slot to decoding."""
+    pol = SchedulerPolicy(admit_window=1, batch_max=1, prefill_chunk=8)
+    sched = Scheduler(max_concurrency=2, num_blocks=8, block_size=8,
+                      max_pages_per_seq=4, policy=pol)
+    sched.submit(_preq(0, s0=24, max_new=8))
+    (adm,), = sched.admit_pass()
+    assert adm.chunked and sched.active[adm.slot].prefilling
+    assert sched.active[adm.slot].seq == 0
+    assert sched.plan_chunk(4) is None  # nothing decoding yet
+    seen = []
+    while sched.prefilling_slots():
+        tokens, n_prior, final, _ = sched.take_prefill_chunk(adm.slot)
+        seen.append((tokens.size, n_prior, final))
+    assert seen == [(8, 0, False), (8, 1, False), (8, 2, True)]
+    st = sched.active[adm.slot]
+    assert not st.prefilling and st.seq == 24
+    sched.record(adm.slot, [7])  # the final chunk's sampled token
+    assert sched.remaining(adm.slot) == 7
+    _check_sched_invariants(sched)
+
+
+def test_preemption_picks_lowest_class_youngest_and_requeues_front():
+    """Pool pressure with watermark admission: the victim is the
+    lowest-priority class (ties: youngest admit tick), its pages free
+    exactly, and the request rejoins the queue *front* protected from
+    re-victimization until it produces a token."""
+    pol = SchedulerPolicy(admit_window=1, batch_max=1, watermark=(1, 4))
+    sched = Scheduler(max_concurrency=3, num_blocks=7, block_size=8,
+                      max_pages_per_seq=4, policy=pol)
+    sched.submit(_preq(0, s0=8, max_new=17, priority=0))  # worst case 3 pages
+    sched.submit(_preq(1, s0=8, max_new=17, priority=1))
+    sched.submit(_preq(2, s0=8, max_new=17, priority=1))
+    slots = [g[0].slot for g in sched.admit_pass()]
+    assert len(slots) == 3  # watermark admits under worst-case pool
+    for s in slots:
+        sched.record(s, [1])
+    free0 = sched.free_pages
+    # march decode until the plan must preempt
+    victims = []
+    for _ in range(40):
+        plan = sched.plan_chunk(2)
+        if plan is None:
+            break
+        for v in plan.victims:
+            victims.append(sched.active[v].req.uid)
+            sched.preempt(v)
+        for slot, n_new in plan.grow:
+            sched.commit_grow(slot, n_new)
+        if not plan.slots:
+            continue
+        sched.advance_decode(plan.k)
+        for s in plan.slots:
+            sched.record(s, [1] * plan.k)
+            if sched.remaining(s) == 0:
+                sched.finish(s)
+        _check_sched_invariants(sched)
+    assert victims, "pressure never forced a preemption"
+    # uid 0 is class 0 (urgent): never victimized while class-1 slots run
+    assert 0 not in victims
+    assert sched.queue and sched.queue[0].uid == victims[-1]
+    assert sched.preemptions == len(victims)
+    del free0
+
+
+@property_test
+def test_throughput_churn_conserves_and_never_livelocks(seed):
+    """Poisson arrivals (the bench's shared trace generator) with random
+    priorities driven through the full throughput loop — windowed batched
+    admission, chunked prefill, watermark growth, preempt-and-requeue —
+    checking after every transition: page/slot conservation, stall
+    purity, the no-livelock guard (a preempted uid is never re-victimized
+    before producing a token), and that every request eventually
+    completes with exactly ``max_new`` tokens."""
+    from benchmarks.common import poisson_trace
+
+    r = random.Random(seed)
+    bs = 8
+    nb = r.randint(6, 14)
+    conc = r.randint(2, 4)
+    pol = SchedulerPolicy(
+        admit_window=r.randint(1, 4),
+        batch_max=r.randint(1, 3),
+        prefill_chunk=bs if r.random() < 0.5 else None,
+        watermark=(1, min(4, nb)) if r.random() < 0.6 else None,
+    )
+    sched = Scheduler(max_concurrency=conc, num_blocks=nb, block_size=bs,
+                      max_pages_per_seq=4, policy=pol)
+    raw, arrivals = poisson_trace(
+        r.randint(4, 10), 1000.0, seed,
+        prompt_lens=[4, 8, 16, 24], max_news=[2, 5, 9],
+        priorities=(0, 1), vocab=64)
+    feed = [rq for rq in raw
+            if sched.pages_for(len(rq["prompt"]), rq["max_new"]) <= 4]
+    done: dict[int, int] = {}
+    last_preempt_produced: dict[int, bool] = {}
+
+    def check():
+        _check_sched_invariants(sched)
+
+    passes = 0
+    while feed or sched.has_work:
+        passes += 1
+        assert passes < 500, "scheduler livelocked"
+        # arrivals drip in a couple per pass (sim time = pass count)
+        for _ in range(min(len(feed), r.randint(1, 2))):
+            sched.submit(Request(**feed.pop(0)))
+        # (1) in-flight prefills first (mirrors the engine pass order)
+        for slot in sched.prefilling_slots():
+            _, _, final, _ = sched.take_prefill_chunk(slot)
+            if final:
+                sched.record(slot, [1])
+                last_preempt_produced[sched.active[slot].req.uid] = True
+            check()
+        # (2) admission pass
+        before = (sched.free_pages, len(sched.free_slots), len(sched.queue))
+        groups = sched.admit_pass()
+        if not groups and sched.queue and sched.free_slots:
+            assert before == (sched.free_pages, len(sched.free_slots),
+                              len(sched.queue))  # stall purity
+        for g in groups:
+            for adm in g:
+                if not adm.chunked:
+                    sched.record(adm.slot, [1])  # prefill's sampled token
+                    last_preempt_produced[adm.req.uid] = True
+                    if sched.remaining(adm.slot) == 0:
+                        st = sched.finish(adm.slot)
+                        done[st.req.uid] = len(st.tokens)
+            check()
+        # (3) decode chunk with escalation
+        plan = sched.plan_chunk(chunk_max=r.choice([1, 2, 4]))
+        if plan is None:
+            continue
+        for v in plan.victims:
+            st = sched.active[v]
+            uid = st.req.uid
+            # livelock guard: a re-victimized uid produced since last time
+            if uid in last_preempt_produced:
+                assert last_preempt_produced[uid], (
+                    f"uid {uid} re-victimized before producing a token")
+            sched.preempt(v)
+            last_preempt_produced[uid] = False
+            check()
+        if plan.evict_nodes:
+            sched._commit_evict(plan.evict_nodes)
+            check()
+        for slot, n_new in plan.grow:
+            sched.commit_grow(slot, n_new)
+            check()
+        if plan.slots:
+            sched.advance_decode(plan.k)
+            for s in plan.slots:
+                sched.record(s, [1] * plan.k)
+                last_preempt_produced[sched.active[s].req.uid] = True
+                if sched.remaining(s) == 0:
+                    st = sched.finish(s)
+                    done[st.req.uid] = len(st.tokens)
+            check()
+    assert set(done) == {rq["uid"] for rq in raw
+                         if sched.pages_for(len(rq["prompt"]),
+                                            rq["max_new"]) <= 4}
+    for rq in raw:
+        if rq["uid"] in done:
+            assert done[rq["uid"]] == rq["max_new"]
+    assert sched.free_pages == nb  # every page returned
+
+
+def test_poisson_trace_is_reproducible_and_pinned():
+    """The bench and the tests share one seeded arrival-trace generator;
+    the digests of the two committed latency-grid workloads are pinned so
+    a generator change cannot silently re-baseline the gate."""
+    from benchmarks.common import poisson_trace, trace_digest
+
+    fast = poisson_trace(8, 2000.0, 13, prompt_lens=[8, 8, 8, 16, 16, 48],
+                         max_news=[4, 8, 8, 16], priorities=(0, 0, 1),
+                         vocab=128)
+    again = poisson_trace(8, 2000.0, 13, prompt_lens=[8, 8, 8, 16, 16, 48],
+                          max_news=[4, 8, 8, 16], priorities=(0, 0, 1),
+                          vocab=128)
+    assert trace_digest(*fast) == trace_digest(*again)
+    assert trace_digest(*fast) == "1f8566a34d637b1415d71368851f2e5a"
+    full = poisson_trace(24, 2000.0, 62,
+                         prompt_lens=[16, 16, 16, 32, 32, 96],
+                         max_news=[8, 16, 16, 32], priorities=(0, 0, 1),
+                         vocab=128)
+    assert trace_digest(*full) == "4d4c01b0aa0855a5ee286f144a06b18b"
+    # arrival times are strictly increasing and the long prompt leads
+    # both grids (the head-of-line-blocking arrangement the bench gates)
+    assert all(b > a for a, b in zip(fast[1], fast[1][1:]))
+    assert fast[0][0]["prompt"].size == 48
+    assert full[0][0]["prompt"].size == 96
