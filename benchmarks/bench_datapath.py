@@ -109,6 +109,13 @@ def run():
     csv_row("datapath/act_quant", us_stat,
             f"dynamic_us={us_dyn:.1f};static_us={us_stat:.1f}")
 
+    # uniform-vs-searched mixed-precision frontier: lives in the datapath
+    # bench (not the pareto table) so the CI subset — decode, datapath,
+    # serving — gates it on every PR via scripts/bench_compare.py
+    from .bench_pareto import mixed_frontier
+
+    results["mixed_frontier"] = mixed_frontier()
+
     write_bench_json("BENCH_datapath.json", results)
     return results
 

@@ -12,6 +12,14 @@ The frontier reports the best perplexity per accumulator width.
 from __future__ import annotations
 
 from repro.core import PTQConfig
+from repro.quant import calibrate_and_quantize
+from repro.quant.observe import (
+    apply_plan,
+    collect_observations,
+    plan_accumulator_bits,
+    search_plan,
+)
+from repro.quant.pipeline import quantized_ppl
 
 from .common import (
     FAST,
@@ -96,5 +104,59 @@ def run(algorithms=("gpfq", "optq")):
     return rows
 
 
+def mixed_frontier(p_uniform: int = 20):
+    """Uniform-vs-searched accumulator/quality frontier point.
+
+    Calibrates the uniform AXE baseline at a *conservative* register
+    (constrained GPFQ at a tight register shapes codes to fill it —
+    the per-site slack below ``p_uniform`` is what the search reclaims),
+    then runs the headroom-driven per-site search and the
+    certificate-exact re-spec. Because P_I-only moves serve the *same*
+    codes, the searched point dominates the uniform one by construction:
+    strictly fewer global accumulator bits at bit-identical perplexity.
+
+    The ``*_rate`` keys feed scripts/bench_compare.py (higher-better):
+    ``frontier_dominates_rate`` collapses the dominance invariant to
+    1.0/0.0 so any future regression (empty plan, lost certificate,
+    perplexity drift) trips the gate outright rather than hiding inside
+    the tolerance band.
+    """
+    cfg, params = trained_params(ARCH)
+    calib = calib_batches(cfg)
+    evalb = eval_batches(cfg)
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=p_uniform, tile=None,
+                    algorithm="gpfq", constrain=True)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    report = collect_observations(qm)
+    plan = search_plan(report)
+    qm2 = apply_plan(qm, plan)
+
+    uniform_bits = report.accumulator_bits()
+    searched_bits = plan_accumulator_bits(plan, report)
+    ppl_u = quantized_ppl(qm, evalb)
+    ppl_s = quantized_ppl(qm2, evalb)
+    dominates = searched_bits < uniform_bits and ppl_s <= ppl_u and qm2.certified
+    res = {
+        "arch": ARCH,
+        "p_uniform": p_uniform,
+        "uniform_acc_bits": uniform_bits,
+        "searched_acc_bits": searched_bits,
+        "acc_budget_savings_rate": uniform_bits / max(searched_bits, 1),
+        "ppl_uniform": ppl_u,
+        "ppl_searched": ppl_s,
+        "ppl_guard_rate": ppl_u / ppl_s,
+        "frontier_dominates_rate": 1.0 if dominates else 0.0,
+        "n_planned_sites": len(plan),
+        "binding_site": report.binding_site(),
+    }
+    csv_row(
+        f"pareto_mixed/{ARCH}/P{p_uniform}", 0.0,
+        f"uniform_bits={uniform_bits};searched_bits={searched_bits};"
+        f"ppl_u={ppl_u:.2f};ppl_s={ppl_s:.2f};dominates={dominates}",
+    )
+    return res
+
+
 if __name__ == "__main__":
     run()
+    mixed_frontier()

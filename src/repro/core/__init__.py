@@ -58,6 +58,7 @@ from .overflow import (
     StackedCertReport,
     certify,
     certify_stacked,
+    min_feasible_p_bits,
     simulate_accumulation,
     worst_case_inputs,
 )
@@ -88,7 +89,7 @@ __all__ = [
     "AxeConfig", "GreedyResult", "gpfq", "gpfq_memory_efficient", "me_stats",
     "hessian_proxy", "inverse_cholesky", "optq",
     "CertReport", "StackedCertReport", "certify", "certify_stacked",
-    "simulate_accumulation", "worst_case_inputs",
+    "min_feasible_p_bits", "simulate_accumulation", "worst_case_inputs",
     "ActQuantParams", "ROUND_NEAREST", "ROUND_ZERO", "calibrate_act_quant",
     "dequantize_act", "fake_quantize_act", "quantize_act", "quantize_int",
     "quantize_weights_rtn", "weight_scales",

@@ -66,6 +66,25 @@ class ActObserver:
     def act_quant(self, alphabet: Alphabet) -> ActQuantParams:
         return calibrate_act_quant(self.lo, self.hi, alphabet)
 
+    def snapshot(self) -> dict:
+        """Plain-data summary of everything this observer saw — what the
+        calibration-time observer layer (repro.quant.observe) records per
+        site. ``lo``/``hi`` are the percentile-calibrated quantizer range;
+        ``min_seen``/``max_seen`` the true extremes (their gap to lo/hi is
+        the expected static-quantizer clip mass the serving saturation
+        counters then measure for real)."""
+        seen = self.n_batches > 0
+        return {
+            "k": self.k,
+            "percentile": self.percentile,
+            "n_batches": self.n_batches,
+            "lo": self.lo,
+            "hi": self.hi,
+            "min_seen": self.min_seen if seen else 0.0,
+            "max_seen": self.max_seen if seen else 0.0,
+            "absmax": float(self.dim_absmax.max()) if seen else 0.0,
+        }
+
 
 @dataclass
 class LayerStats:

@@ -144,6 +144,48 @@ def certify_stacked(
     )
 
 
+def min_feasible_p_bits(
+    report: CertReport | StackedCertReport,
+    k: int | None = None,
+    margin_bits: float = 0.0,
+) -> int:
+    """Smallest inner accumulator width the *already-certified* codes fit.
+
+    The analytic certificate records the exact worst-case partial sums of a
+    site's integer codes against its activation alphabet (Eq. 6) — those
+    extrema are properties of the codes alone, so any P_I whose register
+    holds them is certified for the *same* codes with no re-solve and no
+    accuracy change. This is the certificate-exact floor the
+    mixed-precision search (:mod:`repro.quant.observe.search`) spends:
+    ``headroom_bits`` says how far below the configured P_I the site
+    peaks; this converts that margin into the tightest integer width.
+
+    ``k`` (the site's reduction depth) lets the multi-stage check also
+    re-derive P_O via Eq. 22 at each candidate — tightening P_I tightens
+    P_O, and the *outer* worst case must still fit. ``margin_bits`` adds
+    a log2 safety factor on the recorded peaks (0 = exact). Never returns
+    more than the certified ``p_bits``; stacked reports take the max over
+    experts (one datapath serves the stack).
+    """
+    if isinstance(report, StackedCertReport):
+        return max(min_feasible_p_bits(r, k, margin_bits) for r in report.reports)
+    grow = 2.0**margin_bits
+    hi, lo = report.worst_hi * grow, report.worst_lo * grow
+    o_hi, o_lo = report.outer_hi * grow, report.outer_lo * grow
+    tile = report.tile
+    for p in range(2, report.p_bits):
+        lo_lim, hi_lim = accumulator_range(p)
+        if hi > hi_lim or lo < lo_lim:
+            continue
+        if tile is not None and k is not None and tile < k:
+            po = outer_accumulator_bits(p, k, tile)
+            o_lo_lim, o_hi_lim = accumulator_range(po)
+            if o_hi > o_hi_lim or o_lo < o_lo_lim:
+                continue
+        return p
+    return report.p_bits
+
+
 def simulate_accumulation(
     q_int: jax.Array,
     x_int: jax.Array,

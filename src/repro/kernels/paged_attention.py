@@ -89,6 +89,21 @@ def quantize_kv_pages(pages, kv_bits: int = 8):
     return codes.astype(jnp.int8), scales
 
 
+def quantize_kv_pages_static(pages, scales):
+    """Quantize float KV pages under *calibrated static* per-kv-head scales
+    (``scales``: broadcastable to the pages' (..., nkv) page-scale shape —
+    see ``repro.quant.observe.kv``). Unlike :func:`quantize_kv_pages` no
+    per-page max reduction runs: the scale is a constant, codes hard-clip
+    at the int8 container limit (out-of-calibration drift saturates — the
+    serving saturation counters measure it), and the returned scales leaf
+    is just the broadcast stamp, so pool consumers are unchanged."""
+    qmax = 127
+    xf = pages.astype(jnp.float32)
+    stamp = jnp.broadcast_to(scales, (*pages.shape[:-3], pages.shape[-2]))
+    codes = jnp.clip(jnp.rint(xf / stamp[..., None, :, None]), -qmax, qmax)
+    return codes.astype(jnp.int8), stamp.astype(jnp.float32)
+
+
 def dequantize_kv_pages(codes, scales):
     """Inverse of :func:`quantize_kv_pages` (always f32 — the score math's
     dtype, so reference and dense-slab paths see identical values)."""

@@ -1,0 +1,190 @@
+"""Mixed-precision search launcher: calibrate -> observe -> search -> export.
+
+    PYTHONPATH=src python -m repro.launch.search --arch tiny-lm-s \
+        --ckpt-dir /tmp/run1 --p-bits 20 --out /tmp/run1_mixed
+
+The closed loop (docs/mixed_precision.md):
+
+1. **Calibrate** a uniform AXE baseline at the conservative ``--p-bits``
+   register (the slack the search reclaims lives here).
+2. **Observe**: join each site's overflow certificate with its calibration
+   activation observer (:func:`repro.quant.observe.collect_observations`).
+3. **Search**: assign per-site ``(w_bits, P_I)`` under a global
+   accumulator budget (:func:`repro.quant.observe.search_plan`).
+   P_I-only tightening is certificate-exact — same integer codes, smaller
+   registers, re-issued certificates, *bit-identical* perplexity — so the
+   searched artifact dominates the uniform one by construction.
+   ``--promote-w8 N`` additionally promotes the N most register-binding
+   sites to 8-bit weights (a code change: triggers re-calibration).
+4. **KV** (``--kv-static``): calibrate static per-(repeat, kv-head) page
+   scales from prefill ranges and fold per-head bit demotion into them
+   (:mod:`repro.quant.observe.kv`) — the paged engine then drops
+   requantize-on-append.
+5. **Export** the v2 artifact plus ``plan.json`` — served by
+   ``repro.launch.serve --artifact DIR --plan DIR/plan.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.checkpoint import CheckpointManager, save_pytree
+from repro.configs import get_config, get_smoke
+from repro.core import PTQConfig
+from repro.data import DataConfig, TokenBatcher
+from repro.models.transformer import init_model
+from repro.quant import calibrate_and_quantize
+from repro.quant.observe import (
+    apply_plan,
+    collect_observations,
+    observe_kv_ranges,
+    plan_accumulator_bits,
+    search_kv_bits,
+    search_plan,
+)
+from repro.quant.pipeline import float_ppl, quantized_ppl
+from repro.quant.serve_packed import (
+    export_quantized_artifact,
+    serving_params_from_quantized,
+)
+
+#: plan.meta key fields serializing the uniform base spec — enough to
+#: rebuild the DatapathSpec identity (key()) for unplanned sites at serve
+#: time (repro.launch.serve --plan)
+BASE_SPEC_FIELDS = ("w_bits", "act_bits", "act_signed", "tile", "p_inner",
+                    "static_act")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--algorithm", default="gpfq",
+                    choices=("gpfq", "optq", "rtn", "ep_init"))
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--act-bits", type=int, default=8)
+    ap.add_argument("--p-bits", type=int, default=20,
+                    help="uniform baseline inner register (conservative on "
+                         "purpose: per-site slack below it is what the "
+                         "search reclaims)")
+    ap.add_argument("--tile", type=int, default=128)
+    ap.add_argument("--acc-budget-bits", type=int, default=None,
+                    help="global sum(P_I * repeats) budget; default = the "
+                         "certificate floor + margins (tightest feasible)")
+    ap.add_argument("--margin-bits", type=int, default=0,
+                    help="operating margin added to every site's "
+                         "certificate floor before distributing slack")
+    ap.add_argument("--promote-w8", type=int, default=0,
+                    help="promote the N most register-binding sites to "
+                         "8-bit weights (changes codes: re-calibrates)")
+    ap.add_argument("--kv-static", action="store_true",
+                    help="calibrate static per-(repeat, kv-head) KV page "
+                         "scales (drops requantize-on-append at serving)")
+    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--kv-low-bits", type=int, default=None,
+                    help="demote low-range kv heads to this many bits "
+                         "(folded into the static scale)")
+    ap.add_argument("--kv-low-frac", type=float, default=0.25)
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--calib-batch-size", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    data = TokenBatcher(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.calib_batch_size, seed=args.seed)
+    )
+    params = init_model(jax.random.key(args.seed), cfg)
+    if args.ckpt_dir:
+        restored = CheckpointManager(args.ckpt_dir).restore_latest(
+            {"params": params})
+        if restored is None:
+            raise SystemExit(f"no checkpoint under {args.ckpt_dir}")
+        _, tree, _ = restored
+        params = tree["params"] if "params" in tree else tree
+
+    ptq = PTQConfig(
+        w_bits=args.w_bits, act_bits=args.act_bits, p_bits=args.p_bits,
+        tile=args.tile, algorithm=args.algorithm, constrain=True,
+    )
+    calib = [data.batch(10_000 + i) for i in range(args.calib_batches)]
+    evalb = list(data.eval_batches(args.eval_batches))
+
+    # 1. uniform baseline
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    cert_u = qm.cert_summary()
+    ppl_u = quantized_ppl(qm, evalb)
+
+    # 2-3. observe + search
+    report = collect_observations(qm)
+    plan = search_plan(report, acc_budget_bits=args.acc_budget_bits,
+                       margin_bits=args.margin_bits,
+                       promote_w8=args.promote_w8)
+    base = dataclasses.replace(ptq.to_datapath_spec(cfg.d_model),
+                               static_act=True)
+    plan.meta["base_spec"] = {k: getattr(base, k) for k in BASE_SPEC_FIELDS}
+
+    if args.promote_w8:
+        # w_bits moves change the codes: the plan must drive a fresh
+        # constrained solve, not a re-spec of the existing codes
+        qm2 = calibrate_and_quantize(params, cfg, calib, ptq, plan=plan)
+    else:
+        # P_I-only: certificate-exact re-spec, bit-identical outputs
+        qm2 = apply_plan(qm, plan)
+    cert_s = qm2.cert_summary()
+    ppl_s = quantized_ppl(qm2, evalb)
+
+    # 4. optional calibrated static KV scales (observed on the *serving*
+    # tree — the equalization-folded datapath prefill actually runs)
+    if args.kv_static:
+        sp = serving_params_from_quantized(qm2)
+        ranges = observe_kv_ranges(sp, cfg, calib)
+        plan.kv = search_kv_bits(ranges, kv_bits=args.kv_bits,
+                                 low_bits=args.kv_low_bits,
+                                 low_frac=args.kv_low_frac)
+
+    searched_bits = plan_accumulator_bits(plan, report)
+    report_out = {
+        "arch": cfg.name,
+        "uniform": {
+            "p_bits": args.p_bits,
+            "accumulator_bits": report.accumulator_bits(),
+            "ppl": ppl_u,
+            "cert": cert_u,
+        },
+        "searched": {
+            "accumulator_bits": searched_bits,
+            "ppl": ppl_s,
+            "cert": cert_s,
+            "plan_sites": {k: v.p_inner for k, v in plan.sites.items()},
+            "promoted_w8": plan.meta.get("promoted_w8", []),
+            "kv_static": bool(plan.kv),
+        },
+        "savings_rate": report.accumulator_bits() / max(searched_bits, 1),
+        "observe": report.summary(),
+    }
+    print(json.dumps(report_out, indent=2, default=float))
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        artifact, meta = export_quantized_artifact(qm2)
+        save_pytree(artifact, os.path.join(args.out, "quantized"),
+                    {**meta, "plan": "plan.json"})
+        plan.save(os.path.join(args.out, "plan.json"))
+        print(f"[search] artifact v{meta['artifact_version']} "
+              f"({len(artifact)} leaves) + plan.json -> {args.out}")
+    return report_out
+
+
+if __name__ == "__main__":
+    main()

@@ -110,6 +110,18 @@ def main(argv=None):
                          "case; decode growth preempts-and-requeues on "
                          "exhaustion, and after a preemption fresh arrivals "
                          "wait for HIGH free pages (hysteresis)")
+    ap.add_argument("--plan", type=str, default=None,
+                    help="mixed-precision plan.json (repro.launch.search "
+                         "--out): validates the artifact's per-site "
+                         "datapaths against the plan and, with --paged "
+                         "--kv-dtype int8, threads the plan's calibrated "
+                         "static KV page scales into the engine")
+    ap.add_argument("--observe", action="store_true",
+                    help="attach serving saturation counters (--paged): "
+                         "static-quantizer clip counts + per-site/per-head "
+                         "accumulator watermarks, reported after "
+                         "generation; the decode jaxpr gains only debug "
+                         "callbacks (structurally asserted)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -130,6 +142,25 @@ def main(argv=None):
         params = pack_decode_params(params, cfg)
         print("[serve] packed int4 serving params (RTN fallback, dynamic act)")
 
+    plan = None
+    if args.plan:
+        from repro.quant.observe import MixedPrecisionPlan
+        from repro.quant.serve_packed import plan_expected_specs
+        from repro.quant.spec import DatapathSpec, validate_datapath
+
+        if not args.artifact:
+            raise SystemExit("--plan validates a calibrated artifact's "
+                             "per-site datapaths (add --artifact DIR)")
+        plan = MixedPrecisionPlan.load(args.plan)
+        base_d = plan.meta.get("base_spec")
+        if base_d is None:
+            raise SystemExit(f"{args.plan} carries no base_spec meta — "
+                             f"re-export with repro.launch.search")
+        n = validate_datapath(
+            params, plan_expected_specs(cfg, plan, DatapathSpec(**base_d)))
+        print(f"[serve] plan validated: {n} per-site datapaths match "
+              f"({len(plan.sites)} searched, kv={'static' if plan.kv else 'dynamic'})")
+
     data = TokenBatcher(
         DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
                    global_batch=args.batch, seed=args.seed)
@@ -146,6 +177,9 @@ def main(argv=None):
     if not args.paged and sched_flags:
         raise SystemExit("--admit-window/--admit-batch/--prefill-chunk/"
                          "--watermark apply to the paged engine only "
+                         "(add --paged)")
+    if args.observe and not args.paged:
+        raise SystemExit("--observe applies to the paged engine only "
                          "(add --paged)")
     if args.paged:
         if args.host_loop:
@@ -183,6 +217,8 @@ def main(argv=None):
                             kv_dtype=args.kv_dtype,
                             prefix_cache=args.prefix_cache, sched=policy),
                 sampler,
+                observe=args.observe,
+                kv_scales=plan.kv if plan is not None else None,
             )
         except ValueError as e:
             raise SystemExit(f"paged engine: {e}") from None
@@ -217,6 +253,22 @@ def main(argv=None):
     print(f"[serve] batch={args.batch} new_tokens={n_new} {loop} "
           f"{dt:.2f}s  {args.batch * n_new / dt:.1f} tok/s")
     print("[serve] sample:", out[0, -min(16, out.shape[1]):].tolist())
+    if args.observe:
+        import json as _json
+
+        engine.assert_observation_transparent()
+        rep = engine.saturation_report()
+        worst = None
+        for name, sec in rep["sites"].items():
+            h = sec.get("headroom_bits_observed")
+            if h is not None and (worst is None or h < worst[1]):
+                worst = (name, h)
+        print(f"[serve] observed {len(rep['sites'])} sites; "
+              f"binding watermark: "
+              f"{worst[0] if worst else '-'}"
+              f"{f' ({worst[1]:.2f} headroom bits)' if worst else ''}")
+        print("[serve] saturation report:",
+              _json.dumps(rep, indent=2, default=float))
     return out
 
 

@@ -65,6 +65,79 @@ def use_packed_backend(mode: str):
         _packed_state.override = prev
 
 
+# ---------------------------------------------------------------------------
+# Serving-side observation (saturation counters)
+# ---------------------------------------------------------------------------
+# Off-hot-path observer seam: when BOTH an observer is attached
+# (attach_observer) AND a site scope is active (site_scope — the paged
+# decode body sets one per pattern slot), pmm reports each packed site's
+# static-quantizer clip count and activation-code extrema to the observer
+# through jax.debug.callback. With no observer attached (the default) the
+# checks are plain-Python None tests at trace time: the serving jaxpr is
+# byte-identical — asserted by PagedEngine.assert_observation_transparent.
+# Prefill/admit traces never set a scope, so they stay clean even while
+# observing (the counters are a *decode* telemetry channel).
+_observe_state = threading.local()
+
+
+def active_observer():
+    """The attached SaturationCounters-like observer, or None."""
+    return getattr(_observe_state, "observer", None)
+
+
+@contextmanager
+def attach_observer(obs):
+    """Attach a serving observer (repro.quant.observe.SaturationCounters)
+    for the enclosed traces/executions."""
+    prev = getattr(_observe_state, "observer", None)
+    _observe_state.observer = obs
+    try:
+        yield
+    finally:
+        _observe_state.observer = prev
+
+
+@contextmanager
+def site_scope(label: str):
+    """Name the current component ("slot0/mixer") so packed sites report
+    under slot-granular labels matching the mixed-precision plan keys."""
+    prev = getattr(_observe_state, "scope", None)
+    _observe_state.scope = label
+    try:
+        yield
+    finally:
+        _observe_state.scope = prev
+
+
+def _record_site_observation(obs, label: str, x, leaf) -> None:
+    """Emit one site's observation into the traced graph: static-quantizer
+    pre-clip count + code extrema, delivered host-side via debug.callback
+    (nothing heavier — watermark math runs at report time)."""
+    from functools import partial
+
+    spec = leaf_spec(leaf)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if spec.static_act and "act_scale" in leaf:
+        from repro.core.alphabet import act_alphabet
+
+        alpha = act_alphabet(spec.act_bits, signed=spec.act_signed)
+        scale = leaf["act_scale"].astype(jnp.float32).reshape(())
+        zp = leaf["act_zp"].astype(jnp.float32).reshape(())
+        raw = jnp.rint(x2 / scale) + zp
+        n_clip = jnp.sum(((raw < alpha.qmin) | (raw > alpha.qmax)).astype(jnp.int32))
+        codes = jnp.clip(raw, alpha.qmin, alpha.qmax)
+    else:
+        from repro.kernels.ops import quantize_activations
+
+        codes, _, _ = quantize_activations(x2)
+        codes = codes.astype(jnp.float32)
+        n_clip = jnp.zeros((), jnp.int32)
+    jax.debug.callback(
+        partial(obs.record, label, int(x2.size)),
+        n_clip, jnp.min(codes), jnp.max(codes),
+    )
+
+
 def is_packed(v) -> bool:
     return isinstance(v, dict) and "packed" in v
 
@@ -197,6 +270,10 @@ def pmm(params, name, x):
     datapath at once."""
     v = params[name]
     if is_packed(v):
+        obs = active_observer()
+        scope = getattr(_observe_state, "scope", None)
+        if obs is not None and scope is not None:
+            _record_site_observation(obs, f"{scope}.{name}", x, v)
         return packed_linear(x, v)
     if is_dequant_site(v):
         y = x @ v["w"]
@@ -449,9 +526,36 @@ def _append_kv_page_quant(pages, scales, page, off, x, kv_bits: int = 8):
     return pages, scales
 
 
+def _append_kv_page_static(pages, scales, page, off, x, scale_static):
+    """Append into an int8 page pool under *calibrated static* per-kv-head
+    scales (``scale_static``: (nkv,) f32 — see repro.quant.observe.kv).
+
+    The requantize-on-append machinery of :func:`_append_kv_page_quant` is
+    gone: no scale growth, no in-place rescale of existing codes, every
+    code rounded exactly once. The page's scale leaf is stamped with the
+    static value so gather/dequant consumers (and the quantized attention
+    kernel) read the pool identically to the dynamic path. Codes hard-clip
+    at the int8 container limit: out-of-calibration drift saturates (the
+    serving saturation counters measure it) instead of overflowing, so the
+    8-bit :class:`~repro.quant.spec.AttnDatapathSpec` bound still holds.
+    Inactive rows use the same ``page >= num_blocks`` drop sentinel.
+    """
+    nb = pages.shape[0]
+    qmax = 127  # int8 container limit (alphabet may be coarser via scale)
+    tok_codes = jnp.clip(
+        jnp.rint(x.astype(jnp.float32) / scale_static[None, :, None]),
+        -qmax, qmax,
+    )  # (B, nkv, hd)
+    pages = pages.at[page, off].set(tok_codes.astype(pages.dtype), mode="drop")
+    stamp = jnp.broadcast_to(scale_static[None, :], (x.shape[0], x.shape[1]))
+    scales = scales.at[page].set(stamp, mode="drop")
+    return pages, scales
+
+
 def paged_attention_decode(params, x, cfg: ModelConfig, pool,
                            block_table, seq_lens, active, *,
-                           impl: str = "ref", attn_spec=None):
+                           impl: str = "ref", attn_spec=None,
+                           static_kv_scales=None):
     """Single-token decode against a *paged* KV cache.
 
     x: (B, 1, d) — B is the engine's slot count. ``pool`` is the layer's
@@ -471,6 +575,10 @@ def paged_attention_decode(params, x, cfg: ModelConfig, pool,
     them. ``attn_spec`` is the optional
     :class:`~repro.quant.spec.AttnDatapathSpec` request forwarded to the
     quantized kernel for validation against the pool layout.
+    ``static_kv_scales``: optional ``{"k": (nkv,), "v": (nkv,)}`` f32 —
+    calibrated static page scales from a mixed-precision plan; appends
+    then take the :func:`_append_kv_page_static` path (no requantize-on-
+    append). Only valid for quantized pools.
 
     Returns (y, new_pool).
     """
@@ -501,10 +609,18 @@ def paged_attention_decode(params, x, cfg: ModelConfig, pool,
     page = jnp.where(active, block_table[jnp.arange(B), seq_lens // bs], nb)
     off = seq_lens % bs
     if quantized:
-        k_pages, k_scales = _append_kv_page_quant(
-            k_pages, pool["k_scales"], page, off, k[:, 0])
-        v_pages, v_scales = _append_kv_page_quant(
-            v_pages, pool["v_scales"], page, off, v[:, 0])
+        if static_kv_scales is not None:
+            k_pages, k_scales = _append_kv_page_static(
+                k_pages, pool["k_scales"], page, off, k[:, 0],
+                static_kv_scales["k"])
+            v_pages, v_scales = _append_kv_page_static(
+                v_pages, pool["v_scales"], page, off, v[:, 0],
+                static_kv_scales["v"])
+        else:
+            k_pages, k_scales = _append_kv_page_quant(
+                k_pages, pool["k_scales"], page, off, k[:, 0])
+            v_pages, v_scales = _append_kv_page_quant(
+                v_pages, pool["v_scales"], page, off, v[:, 0])
         new_pool = {"k_pages": k_pages, "v_pages": v_pages,
                     "k_scales": k_scales, "v_scales": v_scales}
         scale_kw = {"k_scales": k_scales, "v_scales": v_scales}

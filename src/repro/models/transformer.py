@@ -295,7 +295,8 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_blocks: int,
 
 
 def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
-                      attn_impl: str = "ref", attn_spec=None):
+                      attn_impl: str = "ref", attn_spec=None,
+                      kv_scales=None):
     """One decode step over the paged cache. tokens: (num_slots, 1) int32.
 
     Unlike :func:`decode_step`'s single scalar ``index``, every slot
@@ -303,9 +304,18 @@ def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
     lengths are the point of paging); idle slots (``active`` False) compute
     but write nothing and do not advance. ``attn_spec`` is the optional
     :class:`~repro.quant.spec.AttnDatapathSpec` request, forwarded when
-    the pools hold int8 quantized pages. Returns (logits, new_cache).
+    the pools hold int8 quantized pages. ``kv_scales``: optional tuple
+    aligned with ``cfg.pattern`` of calibrated static KV page scales
+    (attention slots: ``{"k": (R, nkv), "v": (R, nkv)}`` f32; others:
+    ``{}``) — joined to the scan xs only when present, so the default
+    jaxpr is unchanged. Returns (logits, new_cache).
+
+    Each pattern slot's component runs under a ``site_scope`` label
+    ("slot0/mixer"), so an attached serving observer receives slot-granular
+    site reports matching mixed-precision plan keys (repeats fold into the
+    scan and aggregate under one label).
     """
-    from repro.models.layers import paged_attention_decode
+    from repro.models.layers import paged_attention_decode, site_scope
 
     x = embed(params["embedding"], tokens, cfg)
     table = cache["block_table"]
@@ -313,35 +323,46 @@ def decode_step_paged(params, tokens, cache, cfg: ModelConfig, *,
     active = cache["active"]
 
     def body(x, xs):
-        layer_params, slot_caches = xs
+        if kv_scales is not None:
+            layer_params, slot_caches, slot_kv = xs
+        else:
+            (layer_params, slot_caches), slot_kv = xs, None
         new_caches = []
         for i, spec in enumerate(cfg.pattern):
             p = layer_params[i]
             c_in = slot_caches[i]
             if spec.mixer == "attn":
                 h = norm(p["norm1"], x, cfg.norm)
-                y, c_out = paged_attention_decode(
-                    p["mixer"], h, cfg, c_in, table, lens, active,
-                    impl=attn_impl, attn_spec=attn_spec,
-                )
+                sks = slot_kv[i] if slot_kv is not None and slot_kv[i] else None
+                with site_scope(f"slot{i}/mixer"):
+                    y, c_out = paged_attention_decode(
+                        p["mixer"], h, cfg, c_in, table, lens, active,
+                        impl=attn_impl, attn_spec=attn_spec,
+                        static_kv_scales=sks,
+                    )
                 x = x + y
             elif spec.mixer != "none":
                 h = norm(p["norm1"], x, cfg.norm)
-                y, c_out = _mixer_decode(p, spec, cfg, h, c_in, 0)
+                with site_scope(f"slot{i}/mixer"):
+                    y, c_out = _mixer_decode(p, spec, cfg, h, c_in, 0)
                 x = x + y
             else:
                 c_out = c_in
             if spec.ffn != "none":
                 h = norm(p["norm2"], x, cfg.norm)
-                if spec.ffn == "moe":
-                    y, _ = moe(p["ffn"], h, cfg)
-                else:
-                    y = mlp(p["ffn"], h, cfg)
+                with site_scope(f"slot{i}/ffn"):
+                    if spec.ffn == "moe":
+                        y, _ = moe(p["ffn"], h, cfg)
+                    else:
+                        y = mlp(p["ffn"], h, cfg)
                 x = x + y
             new_caches.append(c_out)
         return x, tuple(new_caches)
 
-    x, pools = jax.lax.scan(body, x, (params["layers"], cache["pools"]))
+    xs = (params["layers"], cache["pools"])
+    if kv_scales is not None:
+        xs = (*xs, tuple(kv_scales))
+    x, pools = jax.lax.scan(body, x, xs)
     x = norm(params["final_norm"], x, cfg.norm)
     logits = lm_logits(params["embedding"], x, cfg)
     new_cache = dict(cache)

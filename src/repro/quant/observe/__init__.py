@@ -1,0 +1,46 @@
+"""repro.quant.observe — observers + headroom-driven mixed-precision search.
+
+The closed loop this package implements (ROADMAP item 3):
+
+  calibrate (uniform)  ->  observe            ->  search          ->  re-spec / re-calibrate
+  per-site certs           per-site act ranges    per-site (w, P_I)   tightened artifact,
+  (headroom_bits)          + cert headroom        + per-head KV bits   same Eq. 3 guarantee
+
+* :mod:`records`    — :class:`SiteObservation` / :class:`ObserverReport`
+  (calibration-time observer layer, fed by ``LayerStats``'s ``ActObserver``
+  through the pipeline taps) and the :class:`MixedPrecisionPlan` schema.
+* :mod:`search`     — :func:`search_plan` (headroom -> per-site ``(w_bits,
+  P_I)`` under a global accumulator budget) and :func:`apply_plan`
+  (certificate-exact re-spec of an already-quantized model: same integer
+  codes, tighter registers, re-issued certificates — zero accuracy change).
+* :mod:`saturation` — :class:`SaturationCounters`, the serving-side
+  off-hot-path observer (static-quantizer clip counts, per-site /
+  per-KV-head accumulator watermarks); see
+  ``repro.models.layers.attach_observer``.
+* :mod:`kv`         — :func:`observe_kv_ranges` (calibrated static KV page
+  scales, dropping requantize-on-append) and per-head KV bit assignment.
+"""
+
+from .records import (
+    MixedPrecisionPlan,
+    ObserverReport,
+    SiteObservation,
+    collect_observations,
+)
+from .search import apply_plan, plan_accumulator_bits, search_plan
+from .saturation import SaturationCounters
+from .kv import observe_kv_ranges, plan_kv_scales, search_kv_bits
+
+__all__ = [
+    "MixedPrecisionPlan",
+    "ObserverReport",
+    "SiteObservation",
+    "SaturationCounters",
+    "apply_plan",
+    "collect_observations",
+    "observe_kv_ranges",
+    "plan_accumulator_bits",
+    "plan_kv_scales",
+    "search_kv_bits",
+    "search_plan",
+]

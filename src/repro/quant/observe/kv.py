@@ -1,0 +1,113 @@
+"""Calibrated static KV page scales + per-head KV bit assignment.
+
+The dynamic int8 KV path (``repro.models.layers._append_kv_page_quant``)
+re-derives each page's scale *on every appended token*: the scale grows
+monotonically and the page's existing codes are rescaled in place — one
+extra rounding per growth event, plus the rescale arithmetic on the decode
+hot path. When calibration can bound each head's K/V magnitude, a **static
+per-(repeat, kv-head) scale** wins: appends become a single
+quantize-and-store (requantize-on-append dropped), codes are rounded
+exactly once, and the scale is known at plan time, so the searched
+:class:`~repro.quant.observe.records.MixedPrecisionPlan` can carry it.
+
+Per-head **bits** ride the same mechanism: a head demoted to ``b < 8``
+bits keeps the int8 container but gets its scale computed against
+``2**(b-1) - 1`` — a coarser step whose codes stay within the demoted
+alphabet for in-calibration inputs, while out-of-calibration drift still
+hard-clips at the int8 limit, so the 8-bit
+:class:`~repro.quant.spec.AttnDatapathSpec` register bound remains a sound
+upper bound for the kernel (no per-head kernel specialization needed).
+The demotion buys accumulator watermark, observable through
+:class:`~repro.quant.observe.saturation.SaturationCounters`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def observe_kv_ranges(params, cfg, batches, max_len: int | None = None) -> dict:
+    """Per-(repeat, kv-head) K/V abs-max over calibration prefills.
+
+    ``params`` may be float or packed serving params (``prefill`` routes
+    matmuls through ``pmm`` either way). Returns ``{"slots": {slot_index:
+    {"k_absmax": (R, nkv) ndarray, "v_absmax": ...}}}`` covering every
+    attention slot of ``cfg.pattern``. The ranges are post-RoPE — exactly
+    what the page pools store.
+    """
+    import jax
+
+    from repro.models.transformer import prefill
+
+    slots: dict[int, dict] = {
+        i: {"k_absmax": None, "v_absmax": None}
+        for i, spec in enumerate(cfg.pattern)
+        if spec.mixer == "attn"
+    }
+    for batch in batches:
+        S = batch["tokens"].shape[1]
+        _, cache = prefill(params, batch, cfg, max_len or S)
+        for i, rec in slots.items():
+            for side in ("k", "v"):
+                arr = np.asarray(jax.device_get(cache[i][side]), np.float32)
+                # (R, B, L, nkv, hd) -> (R, nkv); zero padding cannot inflate
+                amax = np.abs(arr).max(axis=(1, 2, 4))
+                key = f"{side}_absmax"
+                rec[key] = amax if rec[key] is None else np.maximum(rec[key], amax)
+    return {"slots": slots}
+
+
+def search_kv_bits(
+    ranges: dict,
+    *,
+    kv_bits: int = 8,
+    low_bits: int | None = None,
+    low_frac: float = 0.25,
+) -> dict:
+    """Assign per-head KV bits and static scales from observed ranges.
+
+    Every head defaults to ``kv_bits``. When ``low_bits`` is given, heads
+    whose abs-max falls below ``low_frac`` of the slot's largest head are
+    demoted to ``low_bits`` (small dynamic range -> coarser step costs the
+    least). Returns the plan's JSON-able ``kv`` section::
+
+        {"kv_bits_default": 8,
+         "slots": {"0": {"k_scale": [[...]], "v_scale": [[...]],
+                          "k_bits": [[...]], "v_bits": [[...]]}}}
+
+    Scales are ``absmax / (2**(bits-1) - 1)`` with a 1e-8 floor (matching
+    the dynamic path's floor, so empty heads stay harmless).
+    """
+    out: dict = {"kv_bits_default": kv_bits, "slots": {}}
+    for slot, rec in ranges["slots"].items():
+        sec = {}
+        for side in ("k", "v"):
+            amax = np.asarray(rec[f"{side}_absmax"], np.float64)
+            bits = np.full(amax.shape, kv_bits, np.int64)
+            if low_bits is not None:
+                ref = amax.max(axis=-1, keepdims=True)
+                bits = np.where(amax < low_frac * ref, low_bits, bits)
+            qmax = 2.0 ** (bits - 1) - 1.0
+            scale = np.maximum(amax / qmax, 1e-8)
+            sec[f"{side}_scale"] = scale.tolist()
+            sec[f"{side}_bits"] = bits.tolist()
+        out["slots"][str(slot)] = sec
+    return out
+
+
+def plan_kv_scales(kv_section: dict | None):
+    """Materialize a plan's ``kv`` section as per-slot device arrays:
+    ``{slot_index: {"k": (R, nkv) f32, "v": (R, nkv) f32}}`` — the shape
+    the paged engine threads into ``decode_step_paged(kv_scales=...)``.
+    Returns None when the section is absent (dynamic KV quantization)."""
+    import jax.numpy as jnp
+
+    if not kv_section:
+        return None
+    return {
+        int(slot): {
+            "k": jnp.asarray(sec["k_scale"], jnp.float32),
+            "v": jnp.asarray(sec["v_scale"], jnp.float32),
+        }
+        for slot, sec in kv_section["slots"].items()
+    }

@@ -1,0 +1,259 @@
+"""Headroom-driven mixed-precision search + certificate-exact re-spec.
+
+The key soundness fact (see :func:`repro.core.min_feasible_p_bits`): the
+analytic certificate's worst-case partial sums are properties of the
+integer codes alone. Any smaller inner register that still holds them is
+certified for the *same* codes — no re-solve, no accuracy change. So the
+search decomposes:
+
+* **P_I tightening** is free in proxy loss. :func:`apply_plan` re-specs an
+  already-quantized model in place (same codes, tighter registers,
+  re-issued certificates), which is why the Pareto gate can demand a
+  strictly tighter global accumulator budget at *bit-identical* perplexity.
+* **w_bits moves** change the codes and require re-calibration
+  (``calibrate_and_quantize(plan=...)``); the search emits them only when
+  asked (``demote_w_bits`` / ``promote_w8``) and :func:`apply_plan`
+  refuses plans whose w_bits disagree with the model it is given.
+
+Objective: minimize proxy loss subject to ``sum_i P_I(i) * repeats(i) <=
+acc_budget_bits``. With P-only moves proxy loss is constant, so the
+problem reduces to feasibility + slack distribution: every site starts at
+its certificate floor, and remaining budget is handed back one bit at a
+time to the sites with the *least* projected headroom (the binding sites
+— exactly where operating margin buys the most robustness to activation
+drift, which the serving saturation counters then monitor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (
+    QuantizedLinear,
+    accumulator_range,
+    certify,
+    certify_stacked,
+    sweep_config,
+)
+from repro.quant.spec import DatapathMismatchError, DatapathSpec
+
+from .records import MixedPrecisionPlan, ObserverReport, SiteObservation
+
+
+def _projected_headroom(obs: SiteObservation, p: int) -> float:
+    """Certificate headroom this site would report at inner width ``p``
+    (exact: headroom is measured against log2 of the register limit)."""
+    if obs.headroom_bits is None:
+        return float("inf")
+    import math
+
+    _, hi_now = accumulator_range(obs.p_inner)
+    _, hi_new = accumulator_range(p)
+    return obs.headroom_bits - (math.log2(hi_now) - math.log2(hi_new))
+
+
+def plan_accumulator_bits(plan: MixedPrecisionPlan, report: ObserverReport) -> int:
+    """Global accumulator budget of ``plan`` over ``report``'s sites:
+    sum of inner register widths across physical instances (sites the plan
+    does not touch keep their observed width)."""
+    total = 0
+    for s in report:
+        spec = plan.get(s.name)
+        total += (spec.p_inner if spec is not None else s.p_inner) * s.n_repeats
+    return total
+
+
+def search_plan(
+    report: ObserverReport,
+    *,
+    acc_budget_bits: int | None = None,
+    margin_bits: int = 0,
+    promote_w8: int = 0,
+) -> MixedPrecisionPlan:
+    """Assign per-site ``(w_bits, P_I)`` to meet a global accumulator
+    budget at minimum proxy loss.
+
+    ``acc_budget_bits``: target for ``sum P_I * repeats`` over all sites
+    (None = the certificate-exact floor, i.e. maximum tightening).
+    Infeasible budgets (below the floor + margin) raise ``ValueError`` —
+    meeting them would require changing codes, which is a re-calibration
+    decision, not a silent one.
+
+    ``margin_bits``: whole bits of operating margin added to every site's
+    floor before spending (guards against calibration-set drift; the
+    saturation counters measure the realized margin in serving).
+
+    ``promote_w8``: promote the N *most binding* sites (least headroom) to
+    ``w_bits=8`` with an unconstrained 32-bit register — they leave the
+    integer accumulator budget entirely (the serving engine routes w8
+    leaves through the dequant path). These entries change codes, so the
+    resulting plan must go through ``calibrate_and_quantize(plan=...)``.
+    """
+    movable: list[SiteObservation] = []
+    promoted: list[SiteObservation] = []
+    candidates = sorted(
+        (s for s in report if s.headroom_bits is not None),
+        key=lambda s: s.headroom_bits,
+    )
+    promoted = candidates[: max(promote_w8, 0)]
+    promoted_names = {s.name for s in promoted}
+    movable = [
+        s
+        for s in report
+        if s.headroom_bits is not None and s.name not in promoted_names
+    ]
+
+    floors = {s.name: min(s.p_floor + margin_bits, s.p_inner) for s in movable}
+    floor_total = sum(floors[s.name] * s.n_repeats for s in movable)
+    uniform_total = sum(s.p_inner * s.n_repeats for s in movable)
+    budget = floor_total if acc_budget_bits is None else acc_budget_bits
+    if budget < floor_total:
+        raise ValueError(
+            f"accumulator budget {budget} is below the certificate-exact "
+            f"floor {floor_total} (+{margin_bits}b margin); tightening "
+            f"further requires re-quantizing codes (try promote_w8 or a "
+            f"smaller w_bits sweep)"
+        )
+
+    assigned = dict(floors)
+    # hand slack back one bit at a time to the binding site
+    slack = min(budget, uniform_total) - floor_total
+    while slack > 0:
+        grantable = [
+            s for s in movable
+            if assigned[s.name] < s.p_inner and s.n_repeats <= slack
+        ]
+        if not grantable:
+            break
+        worst = min(grantable, key=lambda s: _projected_headroom(s, assigned[s.name]))
+        assigned[worst.name] += 1
+        slack -= worst.n_repeats
+
+    sites: dict[str, DatapathSpec] = {}
+    for s in movable:
+        p = assigned[s.name]
+        if p == s.p_inner:
+            continue  # nothing to change: omit, site keeps its spec
+        sites[s.name] = dataclasses.replace(
+            s.spec,
+            p_inner=p,
+            p_outer=_outer_bits(p, s.k, s.spec.tile),
+        )
+    for s in promoted:
+        sites[s.name] = dataclasses.replace(
+            s.spec,
+            w_bits=8,
+            tile=None,
+            p_inner=32,
+            p_outer=32,
+            static_act=False,
+            act_scale=None,
+            act_zp=0,
+        )
+
+    searched_total = sum(
+        (sites[s.name].p_inner if s.name in sites else s.p_inner) * s.n_repeats
+        for s in movable
+    )
+    return MixedPrecisionPlan(
+        sites=sites,
+        meta={
+            "objective": "min proxy loss s.t. sum(P_I * repeats) <= budget",
+            "acc_budget_bits": budget,
+            "uniform_bits": uniform_total,
+            "floor_bits": floor_total,
+            "searched_bits": searched_total,
+            "margin_bits": margin_bits,
+            "binding_site": report.binding_site(),
+            "promoted_w8": sorted(promoted_names),
+        },
+    )
+
+
+def _outer_bits(p_inner: int, k: int, tile: int | None) -> int:
+    from repro.core import outer_accumulator_bits
+
+    if tile is None or tile >= k:
+        return p_inner
+    return outer_accumulator_bits(p_inner, k, tile)
+
+
+def apply_plan(qm, plan: MixedPrecisionPlan):
+    """Certificate-exact re-spec: serve ``qm``'s existing codes under the
+    plan's tighter registers.
+
+    Returns a new :class:`~repro.quant.pipeline.QuantizedModel` sharing
+    ``qm``'s arrays — same ``q_int`` codes, same scales, same activation
+    quantizers, so its forward (and perplexity) is bit-identical — with
+    per-site specs/configs replaced and certificates *re-issued* at the new
+    width. A plan entry that the codes do not actually fit raises
+    ``ValueError`` (cannot happen for plans derived from this model's own
+    report); entries changing anything but ``(p_inner, p_outer)`` raise
+    :class:`DatapathMismatchError` and need ``calibrate_and_quantize
+    (plan=...)`` instead. Plan keys naming no site raise too.
+    """
+    from repro.quant.pipeline import QuantizedBlock, QuantizedModel
+
+    period = qm.cfg.period
+    consumed = set()
+    new_blocks = []
+    for i, b in enumerate(qm.blocks):
+        nb = QuantizedBlock(spec=b.spec, norm1=b.norm1, norm2=b.norm2)
+        for comp_name in ("mixer", "ffn"):
+            comp = getattr(b, comp_name)
+            if comp is None:
+                continue
+            new_linears = {}
+            for name, ql in comp.linears.items():
+                key = f"slot{i % period}/{comp_name}.{name}"
+                spec = plan.get(key)
+                if spec is not None:
+                    consumed.add(key)
+                    ql = _respec_linear(ql, spec, context=key)
+                new_linears[name] = ql
+            setattr(nb, comp_name, dataclasses.replace(comp, linears=new_linears))
+        new_blocks.append(nb)
+
+    unknown = sorted(set(plan) - consumed)
+    if unknown:
+        raise DatapathMismatchError(
+            f"plan names unknown sites {unknown}; model enumerates "
+            f"{sorted(consumed)}"
+        )
+    return QuantizedModel(
+        cfg=qm.cfg,
+        ptq=qm.ptq,
+        embedding=qm.embedding,
+        final_norm=qm.final_norm,
+        blocks=new_blocks,
+    )
+
+
+def _respec_linear(ql: QuantizedLinear, spec: DatapathSpec, context: str) -> QuantizedLinear:
+    old = ql.spec
+    if old is not None:
+        same_codes = (old.w_bits, old.act_bits, old.act_signed, old.tile) == (
+            spec.w_bits, spec.act_bits, spec.act_signed, spec.tile,
+        )
+        if not same_codes:
+            raise DatapathMismatchError(
+                f"plan entry for {context} changes the code alphabet "
+                f"({old.describe()} -> {spec.describe()}); re-specing only "
+                f"covers (P_I, P_O) — run calibrate_and_quantize(plan=...) "
+                f"for w/act/tile moves"
+            )
+    cfg = sweep_config(ql.cfg, p_bits=spec.p_inner, constrain=spec.p_inner < 32)
+    do_cert = certify_stacked if ql.stacked else certify
+    cert = do_cert(ql.q_int, cfg.act_alphabet, spec.p_inner, spec.tile)
+    if not bool(cert):
+        raise ValueError(
+            f"plan entry for {context} requests P_I={spec.p_inner} but the "
+            f"site's codes do not fit (certificate failed); the plan was "
+            f"not derived from this model's observations"
+        )
+    new_spec = dataclasses.replace(
+        old if old is not None else spec,
+        p_inner=spec.p_inner,
+        p_outer=spec.p_outer,
+    )
+    return dataclasses.replace(ql, cert=cert, cfg=cfg, spec=new_spec)

@@ -39,12 +39,14 @@ from repro.core import (
     QuantizedLinear,
     quantize_linear,
     smoothquant_scales,
+    sweep_config,
 )
 from repro.core.quantizers import fake_quantize_act
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.layers import embed, lm_logits, norm
 
 from .families import SiteSpec, TapContext, check_supported, get_adapter
+from .spec import DatapathMismatchError
 
 
 @dataclass
@@ -156,18 +158,23 @@ class QuantizedModel:
         ``ok`` is explicit no-vacuous-truth semantics: a model with *no*
         certificates (e.g. ``constrain=False``) reports ``ok: False`` and
         ``min_headroom_bits: None`` — absence of a certificate is not a
-        guarantee.
+        guarantee. ``min_headroom_site`` names the arg-min (binding) site,
+        so search/debug output can say *where* the budget binds, not just
+        by how much.
         """
         worst = None
+        worst_site = None
         n = 0
-        for _, ql in self.quantized_linears():
+        for name, ql in self.quantized_linears():
             if ql.cert is not None:
                 h = ql.cert.headroom_bits
-                worst = h if worst is None else min(worst, h)
+                if worst is None or h < worst:
+                    worst, worst_site = h, name
                 n += 1
         return {
             "n_certified": n,
             "min_headroom_bits": worst,
+            "min_headroom_site": worst_site,
             "ok": n > 0 and self.certified,
         }
 
@@ -211,8 +218,40 @@ def _apply_quantized(ql: QuantizedLinear, x: jax.Array, use_bias: bool) -> jax.A
     return y
 
 
-def _calibrate_component(adapter, p, nrm, x_a, x_q, cfg, ptq, positions, equalize):
+def _site_ptq(ptq: PTQConfig, site: SiteSpec, override) -> PTQConfig:
+    """Per-site PTQConfig: mixed-precision plan entry wins, then the site's
+    static ``SiteSpec.datapath`` override, then the model-wide config.
+
+    ``override`` is a :class:`~repro.quant.spec.DatapathSpec` (or None).
+    ``constrain`` follows the spec: a >= 32-bit inner register means the
+    site runs the unconstrained solver (matching ``to_datapath_spec``'s
+    inverse mapping), so plan -> calibrate -> ``datapath_specs()`` round-
+    trips on the spec ``key()``.
+    """
+    dp = override if override is not None else site.datapath
+    if dp is None:
+        return ptq
+    constrained = dp.p_inner is not None and dp.p_inner < 32
+    return sweep_config(
+        ptq,
+        w_bits=dp.w_bits,
+        act_bits=dp.act_bits,
+        act_signed=dp.act_signed,
+        p_bits=dp.p_inner if constrained else ptq.p_bits,
+        tile=dp.tile if constrained else ptq.tile,
+        constrain=constrained,
+    )
+
+
+def _calibrate_component(
+    adapter, p, nrm, x_a, x_q, cfg, ptq, positions, equalize,
+    plan=None, site_prefix="",
+):
     """Norm -> optional SmoothQuant fold -> tapped dual-stream forward.
+
+    ``plan``: optional {"slot0/mixer.wq": DatapathSpec} mixed-precision
+    overrides; ``site_prefix`` ("slot0/mixer.") qualifies this component's
+    site names against it.
 
     Returns ((y_a, y_q) component outputs, QuantizedComponent, updated norm).
     """
@@ -250,7 +289,9 @@ def _calibrate_component(adapter, p, nrm, x_a, x_q, cfg, ptq, positions, equaliz
             stats.update(_flat(sa), _flat(sq))
             stats_cache.append((sa, sq, stats))
         w = _weight_at(p, spec.path)
-        ql = quantize_linear(w, stats, ptq)
+        override = plan.get(site_prefix + name) if plan else None
+        ql = quantize_linear(w, stats, _site_ptq(ptq, spec, override))
+        ql.aux["observer"] = stats.observer
         linears[name] = ql
         x_a_in, x_q_in = xp
         return (x_a_in @ w, _apply_quantized(ql, x_q_in, spec.use_bias))
@@ -273,8 +314,17 @@ def calibrate_and_quantize(
     batches: list[dict],
     ptq: PTQConfig,
     equalize: bool = True,
+    plan=None,
 ) -> QuantizedModel:
-    """Run the full PTQ pipeline. ``batches``: list of {"tokens": (B, S)}."""
+    """Run the full PTQ pipeline. ``batches``: list of {"tokens": (B, S)}.
+
+    ``plan``: optional slot-granular mixed-precision overrides,
+    {"slot{s}/{mixer|ffn}.{site}": DatapathSpec} (slot = layer % period —
+    repeats of a slot share one packed leaf, so they must share one
+    datapath; see :mod:`repro.quant.observe`). Keys naming no quantized
+    site raise :class:`~repro.quant.spec.DatapathMismatchError` — a typo'd
+    plan must not silently calibrate uniform.
+    """
     check_supported(cfg)
     tokens = jnp.concatenate([b["tokens"] for b in batches], axis=0)
     B, S = tokens.shape
@@ -290,12 +340,14 @@ def calibrate_and_quantize(
     for layer in range(cfg.n_layers):
         p = _layer_params(params, cfg, layer)
         spec = cfg.pattern[layer % cfg.period]
+        slot = layer % cfg.period
         block = QuantizedBlock(spec=spec)
         if spec.mixer != "none":
             adapter = get_adapter("mixer", spec.mixer)
             (y_a, y_q), comp, nrm = _calibrate_component(
                 adapter, dict(p["mixer"]), dict(p["norm1"]),
                 x_a, x_q, cfg, ptq, positions, equalize,
+                plan=plan, site_prefix=f"slot{slot}/mixer.",
             )
             x_a = x_a + y_a
             x_q = x_q + y_q
@@ -306,12 +358,25 @@ def calibrate_and_quantize(
             (y_a, y_q), comp, nrm = _calibrate_component(
                 adapter, dict(p["ffn"]), dict(p["norm2"]),
                 x_a, x_q, cfg, ptq, positions, equalize,
+                plan=plan, site_prefix=f"slot{slot}/ffn.",
             )
             x_a = x_a + y_a
             x_q = x_q + y_q
             block.norm2 = nrm
             block.ffn = comp
         qm.blocks.append(block)
+    if plan:
+        known = {
+            f"slot{i % cfg.period}/{name}"
+            for i, b in enumerate(qm.blocks)
+            for name, _ in b.quantized_linears()
+        }
+        unknown = sorted(k for k in plan if k not in known)
+        if unknown:
+            raise DatapathMismatchError(
+                f"mixed-precision plan names unknown sites {unknown}; "
+                f"model enumerates {sorted(known)}"
+            )
     return qm
 
 

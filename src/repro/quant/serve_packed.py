@@ -60,6 +60,7 @@ __all__ = [
     "packable_sites",
     "packed_params_from_artifact",
     "packed_weight_bytes",
+    "plan_expected_specs",
     "serving_params_from_quantized",
     "upgrade_packed_params",
 ]
@@ -315,6 +316,7 @@ def export_quantized_artifact(qm) -> tuple[dict, dict]:
     meta dict carrying the schema version. Codes are stored raw int8
     (packing happens at load, where the serving layout is known)."""
     artifact: dict[str, np.ndarray] = {}
+    site_specs = []
     for name, ql in qm.quantized_linears():
         artifact[f"{name}/q"] = np.asarray(ql.q_int, np.int8)
         artifact[f"{name}/scale"] = np.asarray(ql.scale, np.float32)
@@ -324,6 +326,8 @@ def export_quantized_artifact(qm) -> tuple[dict, dict]:
             ql.q_int.shape[-2], ql.act
         )
         artifact[f"{name}/spec"] = spec.to_array()
+        site_specs.append(spec)
+    site_keys = {s.key() for s in site_specs}
     for i, b in enumerate(qm.blocks):
         for norm_name in ("norm1", "norm2"):
             nrm = getattr(b, norm_name)
@@ -340,6 +344,14 @@ def export_quantized_artifact(qm) -> tuple[dict, dict]:
         "artifact_version": ARTIFACT_VERSION,
         "arch": qm.cfg.name,
         "n_layers": qm.cfg.n_layers,
+        # heterogeneous per-site datapaths: the loader switches to strict
+        # site accounting (a dropped site would silently change which
+        # datapath serves — satellite of the mixed-precision search)
+        "mixed_precision": len(site_keys) > 1,
+        "datapath": (
+            site_specs[0].describe() if len(site_keys) == 1
+            else f"mixed: {len(site_keys)} site datapaths"
+        ) if site_specs else "empty",
     }
     return artifact, meta
 
@@ -364,7 +376,8 @@ def load_flat_artifact(directory: str) -> tuple[dict, dict]:
 
 
 def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
-                                meta: dict | None = None):
+                                meta: dict | None = None,
+                                strict: bool | None = None):
     """Rebuild the packed serving tree from a saved AXE artifact.
 
     ``params`` supplies the high-precision leaves the artifact does not
@@ -373,6 +386,12 @@ def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
     artifact schema version loudly — a mismatched or unversioned artifact
     raises :class:`~repro.quant.spec.DatapathMismatchError` instead of
     being served with guessed semantics.
+
+    ``strict`` (default: the artifact meta's ``mixed_precision`` flag)
+    refuses *partial* coverage: a site the model enumerates but the
+    artifact does not carry raises instead of silently staying float.
+    Quantized artifact keys that match **no** enumerated site always
+    raise — the artifact and the model disagree about what the model is.
     """
     if meta is not None:
         v = meta.get("artifact_version")
@@ -392,7 +411,11 @@ def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
                     f"weights instead of the certified codes"
                 )
     check_supported(cfg)
+    if strict is None:
+        strict = bool(meta and meta.get("mixed_precision"))
     n_sites_loaded = 0
+    consumed: set[str] = set()
+    missing: list[str] = []
     new_layers = []
     for s, pattern_spec in enumerate(cfg.pattern):
         slot = dict(params["layers"][s])
@@ -418,8 +441,17 @@ def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
                 ])
             for site in get_adapter(kind, fam).enumerate_sites(cfg):
                 names = [f"layer{i}/{kind}.{site.name}" for i in layer_ids]
-                if f"{names[0]}/q" not in flat:
-                    continue  # site absent from this artifact: keep float
+                present = [n for n in names if f"{n}/q" in flat]
+                consumed.update(f"{n}/q" for n in present)
+                if len(present) != len(names):
+                    # all-or-nothing per slot: a partially covered slot can
+                    # never stack one leaf, and silent float fallback is
+                    # exactly what strict loading forbids
+                    if present or strict:
+                        missing.append(
+                            f"slot{s}/{kind}.{site.name} (have "
+                            f"{len(present)}/{len(names)} repeats)")
+                    continue
                 recs = [
                     {
                         "q": flat[f"{n}/q"],
@@ -433,6 +465,21 @@ def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
                 n_sites_loaded += 1
             slot[kind] = out
         new_layers.append(slot)
+    if missing:
+        raise DatapathMismatchError(
+            f"artifact does not cover {len(missing)} site(s) the model "
+            f"enumerates: {missing} — refusing the silent float fallback "
+            f"(strict={strict}; pass strict=False only for deliberately "
+            f"partial uniform artifacts)"
+        )
+    unknown = sorted(
+        k for k in flat if k.endswith("/q") and k not in consumed)
+    if unknown:
+        raise DatapathMismatchError(
+            f"artifact carries quantized sites this model does not "
+            f"enumerate: {unknown} — the artifact and the serving config "
+            f"disagree about the model's site set"
+        )
     if n_sites_loaded == 0:
         raise DatapathMismatchError(
             "no quantized site in the artifact matched this model config — "
@@ -444,6 +491,39 @@ def packed_params_from_artifact(flat: dict, params, cfg: ModelConfig,
         "layers": tuple(new_layers),
         "final_norm": params["final_norm"],
     }
+
+
+def plan_expected_specs(cfg: ModelConfig, plan, base: DatapathSpec) -> dict:
+    """Total ``site-key -> DatapathSpec`` map for
+    :func:`repro.quant.spec.validate_datapath`: every *packed* site the
+    model enumerates, valued by the mixed-precision plan's override when
+    present, else the uniform ``base``. Sites that cannot ride the int4
+    container (w_bits > 4 — e.g. plan-promoted w8 sites — or an odd
+    reduction depth) serve dequantized float leaves, not packed ones, and
+    are excluded, mirroring ``_site_rec_leaf``. A plan key naming a site
+    the model does not enumerate raises here, before anything serves."""
+    expected: dict[str, DatapathSpec] = {}
+    known: set[str] = set()
+    plan = plan if plan is not None else {}
+    for s, pattern_spec in enumerate(cfg.pattern):
+        for kind, fam in (("mixer", pattern_spec.mixer),
+                          ("ffn", pattern_spec.ffn)):
+            if fam == "none":
+                continue
+            for site in get_adapter(kind, fam).enumerate_sites(cfg):
+                key = f"slot{s}/{kind}.{site.name}"
+                known.add(key)
+                spec = plan.get(key)
+                spec = base if spec is None else spec
+                if spec.w_bits > 4 or site.k % 2 != 0:
+                    continue
+                expected[key] = spec
+    unknown = sorted(set(plan) - known)
+    if unknown:
+        raise DatapathMismatchError(
+            f"mixed-precision plan names sites this model does not "
+            f"enumerate: {unknown}; model sites: {sorted(known)}")
+    return expected
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,7 @@ it without import cycles.
 from __future__ import annotations
 
 import hashlib
+import re
 from dataclasses import dataclass, replace
 
 import numpy as np
@@ -394,12 +395,34 @@ def tree_datapath_fingerprint(tree) -> str:
     return hashlib.sha1("|".join(hashes).encode()).hexdigest()[:16]
 
 
-def validate_datapath(tree, expected: DatapathSpec) -> int:
+def site_key_for_path(path: str) -> str | None:
+    """Canonical plan-site key for a packed-leaf walk path:
+    ``"params/layers[2]/mixer/wq" -> "slot2/mixer.wq"`` — the slot-granular
+    key space mixed-precision plans use (repeats of a slot share one packed
+    leaf, so the leaf index IS the slot). None when the path does not sit
+    under a ``layers`` tuple."""
+    m = re.search(r"/layers\[(\d+)\]/(.+)$", path)
+    if m is None:
+        return None
+    return f"slot{m.group(1)}/" + m.group(2).replace("/", ".")
+
+
+def validate_datapath(tree, expected) -> int:
     """Check every packed leaf in ``tree`` against ``expected`` (datapath
     identity only). Returns the number of packed leaves checked; raises
     :class:`DatapathMismatchError` on the first disagreement. Legacy leaves
-    (no spec) are a mismatch too — absence of a record is not a match."""
+    (no spec) are a mismatch too — absence of a record is not a match.
+
+    ``expected`` is either one :class:`DatapathSpec` (uniform artifact:
+    every packed leaf must match it) or a mapping of plan-site keys
+    (``"slot0/mixer.wq"``) to per-site specs — the mixed-precision case.
+    The mapping must be *total*: a packed leaf the mapping does not name,
+    or a mapping entry with no leaf in the tree, raises (a plan/model
+    disagreement must never silently fall back; build the total map with
+    :func:`repro.quant.serve_packed.plan_expected_specs`)."""
+    uniform = isinstance(expected, DatapathSpec)
     checked = 0
+    seen: set[str] = set()
 
     def walk(node, path):
         nonlocal checked
@@ -408,10 +431,21 @@ def validate_datapath(tree, expected: DatapathSpec) -> int:
             if spec is None:
                 raise DatapathMismatchError(
                     f"packed leaf at {path} carries no DatapathSpec (legacy "
-                    f"artifact) but {expected.describe()} was requested; run "
+                    f"artifact) but a datapath was requested; run "
                     f"repro.quant.serve_packed.ensure_datapath_spec first"
                 )
-            spec.require_matches(expected, context=path)
+            if uniform:
+                spec.require_matches(expected, context=path)
+            else:
+                key = site_key_for_path(path)
+                if key is None or key not in expected:
+                    raise DatapathMismatchError(
+                        f"packed leaf at {path} (site {key}) is not named "
+                        f"by the mixed-precision site map "
+                        f"{sorted(expected)} — refusing to serve an "
+                        f"unvalidated site")
+                spec.require_matches(expected[key], context=path)
+                seen.add(key)
             checked += 1
             return
         if isinstance(node, dict):
@@ -422,6 +456,13 @@ def validate_datapath(tree, expected: DatapathSpec) -> int:
                 walk(v, f"{path}[{i}]")
 
     walk(tree, "params")
+    if not uniform:
+        missing = set(expected) - seen
+        if missing:
+            raise DatapathMismatchError(
+                f"mixed-precision site map names sites with no packed leaf "
+                f"in the artifact: {sorted(missing)} — a missing site would "
+                f"silently serve float; refusing")
     return checked
 
 
@@ -434,6 +475,7 @@ __all__ = [
     "validate_attn_datapath",
     "is_packed_leaf",
     "leaf_datapath",
+    "site_key_for_path",
     "tree_datapath_fingerprint",
     "validate_datapath",
 ]

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from contextlib import nullcontext
 from dataclasses import dataclass
 from functools import partial
 
@@ -54,10 +55,12 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.layers import (
+    attach_observer,
     packed_backend,
     resolve_paged_attn_impl,
     use_packed_backend,
 )
+from repro.quant.observe import SaturationCounters, plan_kv_scales
 from repro.models.transformer import (
     decode_step_paged,
     init_paged_cache,
@@ -138,7 +141,7 @@ def _sample_rows(logits, temperature: float, keys):
 class PagedEngine:
     def __init__(self, params, cfg: ModelConfig, paged: PagedConfig = PagedConfig(),
                  sampler: SamplerConfig = SamplerConfig(), datapath=None,
-                 attn_datapath=None):
+                 attn_datapath=None, observe: bool = False, kv_scales=None):
         self.params = upgrade_packed_params(params)
         if datapath is not None:
             validate_datapath(self.params, datapath)
@@ -207,6 +210,47 @@ class PagedEngine:
         )
         if attn_datapath is not None:
             validate_attn_datapath(self.attn_spec, attn_datapath)
+        #: serving-side observer (repro.quant.observe.saturation): host
+        #: state fed through ``jax.debug.callback``. None (the default)
+        #: keeps every serving jaxpr callback-free — structurally
+        #: certified by :meth:`assert_observation_transparent`.
+        self.observer = SaturationCounters() if observe else None
+        #: calibrated static KV page scales from a mixed-precision plan's
+        #: ``kv`` section (repro.quant.observe.kv): {slot: {"k": (R, nkv)
+        #: f32, "v": ...}}. Appends and prefill scatters quantize against
+        #: these constants — no per-page max reduction, no
+        #: requantize-on-append on the decode hot path.
+        if kv_scales is not None and "slots" in kv_scales:
+            kv_scales = plan_kv_scales(kv_scales)
+        if kv_scales and paged.kv_dtype != "int8":
+            raise ValueError(
+                "static kv_scales need kv_dtype='int8' (float pools carry "
+                "no scale leaves)")
+        self.kv_scales = kv_scales or None
+        #: pattern-aligned tuple joined to decode_step_paged's scan xs
+        #: (empty dicts contribute no scan leaves; None = fully dynamic,
+        #: which leaves the decode jaxpr byte-identical to the baseline)
+        self._kv_scales_seq = None
+        if self.kv_scales:
+            for slot in self.kv_scales:
+                if not (0 <= slot < len(cfg.pattern)
+                        and cfg.pattern[slot].mixer == "attn"):
+                    raise ValueError(
+                        f"kv_scales names slot {slot}, which is not an "
+                        f"attention slot of the {len(cfg.pattern)}-slot "
+                        f"pattern")
+            self._kv_scales_seq = tuple(
+                {"k": jnp.asarray(self.kv_scales[i]["k"], jnp.float32),
+                 "v": jnp.asarray(self.kv_scales[i]["v"], jnp.float32)}
+                if i in self.kv_scales else {}
+                for i in range(len(cfg.pattern)))
+        # observation and static KV participate in trace identity: suffix
+        # the jit cache key so a plan-bearing engine never reuses a
+        # dynamic-scale trace (and vice versa)
+        if observe:
+            self.datapath_fingerprint += "+obs"
+        if self._kv_scales_seq is not None:
+            self.datapath_fingerprint += "+kv-static"
         self.cache = init_paged_cache(
             cfg, paged.max_concurrency, paged.num_blocks, paged.block_size,
             max_pages,
@@ -315,6 +359,25 @@ class PagedEngine:
     # ------------------------------------------------------------------
     # Device programs (traced bodies)
     # ------------------------------------------------------------------
+    def _quantize_pages(self, slot: int, k_pages, v_pages):
+        """Quantize dense KV pages for pool slot ``slot`` — against the
+        plan's calibrated static per-kv-head scales when the engine holds
+        them (constant stamp, no per-page max reduction), else the dynamic
+        per-(page, head) abs-max path. Returns (kc, ks, vc, vs)."""
+        from repro.kernels.paged_attention import (
+            quantize_kv_pages,
+            quantize_kv_pages_static,
+        )
+
+        sks = self._kv_scales_seq[slot] if self._kv_scales_seq else None
+        if sks:
+            kc, ks = quantize_kv_pages_static(k_pages, sks["k"][:, None, :])
+            vc, vs = quantize_kv_pages_static(v_pages, sks["v"][:, None, :])
+        else:
+            kc, ks = quantize_kv_pages(k_pages)
+            vc, vs = quantize_kv_pages(v_pages)
+        return kc, ks, vc, vs
+
     def _admit_impl(self, params, cache, prompt, slot, uid, incs,
                     n_pages: int):
         """Admit one request into ``slot``: allocate pages, prefill, splice
@@ -353,10 +416,8 @@ class PagedEngine:
                     # quantize-on-scatter: codes + per-(page, head) scales
                     # stamped together (padded tail positions are zeros and
                     # cannot raise a page's max)
-                    from repro.kernels.paged_attention import quantize_kv_pages
-
-                    kc, ks = quantize_kv_pages(to_pages(d["k"]))
-                    vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                    kc, ks, vc, vs = self._quantize_pages(i, to_pages(d["k"]),
+                                                          to_pages(d["v"]))
                     pools.append({
                         "k_pages": c["k_pages"].at[:, prompt_pages].set(kc),
                         "v_pages": c["v_pages"].at[:, prompt_pages].set(vc),
@@ -449,10 +510,8 @@ class PagedEngine:
                 return a.reshape(r, n_pages, bs, nkv, hd)
 
             if "k_scales" in c:
-                from repro.kernels.paged_attention import quantize_kv_pages
-
-                kc, ks = quantize_kv_pages(to_pages(d["k"]))
-                vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                kc, ks, vc, vs = self._quantize_pages(i, to_pages(d["k"]),
+                                                      to_pages(d["v"]))
                 pools.append({
                     "k_pages": c["k_pages"].at[:, pages].set(kc),
                     "v_pages": c["v_pages"].at[:, pages].set(vc),
@@ -582,7 +641,8 @@ class PagedEngine:
             t, cache, buf = st
             logits, cache = decode_step_paged(
                 params, cache["last_tok"][:, None], cache, cfg,
-                attn_impl=attn_impl, attn_spec=attn_spec)
+                attn_impl=attn_impl, attn_spec=attn_spec,
+                kv_scales=self._kv_scales_seq)
             keys = _fold_keys(samp.seed, cache["uids"], cache["steps"])
             nxt = _sample_rows(logits[:, -1], samp.temperature, keys)
             active = cache["active"]
@@ -664,10 +724,8 @@ class PagedEngine:
                 return a.reshape(r, n * n_prompt_pages, bs, nkv, hd)
 
             if "k_scales" in c:
-                from repro.kernels.paged_attention import quantize_kv_pages
-
-                kc, ks = quantize_kv_pages(to_pages(d["k"]))
-                vc, vs = quantize_kv_pages(to_pages(d["v"]))
+                kc, ks, vc, vs = self._quantize_pages(i, to_pages(d["k"]),
+                                                      to_pages(d["v"]))
                 pools.append({
                     "k_pages": c["k_pages"].at[:, idx_flat].set(
                         kc, mode="drop"),
@@ -936,11 +994,18 @@ class PagedEngine:
         submit mid-flight arrivals — even when the pass drained every
         active request at admission, so injected work is never stranded.
         """
-        if self.paged.sched.is_legacy:
-            return self._serve_legacy(requests, arrivals, metrics,
-                                      _probe, _late)
-        return self._serve_throughput(requests, arrivals, metrics,
-                                      _probe, _late)
+        # the observer must be attached when the decode chunk *traces*
+        # (the callback is baked into the jaxpr); it is engine-constant
+        # (observe=True at construction), so every trace under this
+        # engine's "+obs" fingerprint is consistently observing
+        ctx = (attach_observer(self.observer) if self.observer is not None
+               else nullcontext())
+        with ctx:
+            if self.paged.sched.is_legacy:
+                return self._serve_legacy(requests, arrivals, metrics,
+                                          _probe, _late)
+            return self._serve_throughput(requests, arrivals, metrics,
+                                          _probe, _late)
 
     def _serve_legacy(self, requests, arrivals, metrics, _probe, _late):
         sched = self._make_scheduler()
@@ -1233,6 +1298,70 @@ class PagedEngine:
         if hot:
             raise AssertionError(
                 f"fully-cached admit contains FLOP primitives {sorted(hot)}")
+
+    # ------------------------------------------------------------------
+    # Observation (repro.quant.observe) — structural transparency
+    # ------------------------------------------------------------------
+    def decode_chunk_jaxpr(self, observer=None):
+        """jaxpr of one decode chunk, traced fresh (the serving trace's
+        exact body under the resolved backend). Default: NO observer
+        attached — the baseline serving program. Pass a
+        :class:`~repro.quant.observe.SaturationCounters` to trace the
+        observing variant (adds ``debug_callback`` equations, nothing
+        else)."""
+        traces = self.chunk_traces  # make_jaxpr retraces; don't count it
+        attn_impl = resolve_paged_attn_impl(self.paged.attn_impl)
+        ctx = (attach_observer(observer) if observer is not None
+               else nullcontext())
+        with ctx, use_packed_backend(packed_backend()):
+            closed = jax.make_jaxpr(
+                partial(self._chunk_impl, attn_impl=attn_impl,
+                        attn_spec=self.attn_spec)
+            )(self.params, self.cache, jnp.int32(1))
+        self.chunk_traces = traces
+        return closed
+
+    def assert_observation_transparent(self) -> None:
+        """Observation must be free when off: the decode-chunk jaxpr with
+        no observer attached contains no callback equation (it is exactly
+        what an ``observe=False`` engine traces); with one attached, the
+        callbacks appear. Raises AssertionError otherwise."""
+        bare = str(self.decode_chunk_jaxpr())
+        if "debug_callback" in bare:
+            raise AssertionError(
+                "decode chunk contains debug_callback with no observer "
+                "attached — observation is not transparent")
+
+        def has_packed(node):
+            # the pmm hook only fires on packed integer leaves; a float
+            # engine legitimately records nothing
+            if isinstance(node, dict):
+                return "packed" in node or any(
+                    has_packed(v) for v in node.values())
+            if isinstance(node, (list, tuple)):
+                return any(has_packed(v) for v in node)
+            return False
+
+        if self.observer is not None and has_packed(self.params):
+            observed = str(self.decode_chunk_jaxpr(self.observer))
+            if "debug_callback" not in observed:
+                raise AssertionError(
+                    "observer attached but the decode chunk records "
+                    "nothing (no debug_callback in the jaxpr)")
+
+    def saturation_report(self) -> dict:
+        """ServeMetrics-style saturation/watermark report from the
+        serving observer (see ``repro.quant.observe.saturation``): per-site
+        static-quantizer clip counts, code extrema, accumulator watermarks
+        against the packed leaves, and per-KV-head attention watermarks
+        for int8 pools. Requires ``observe=True`` at construction."""
+        if self.observer is None:
+            raise ValueError(
+                "engine was built with observe=False — no counters to "
+                "report; rebuild with PagedEngine(..., observe=True)")
+        return self.observer.report(params=self.params,
+                                    pools=self.cache["pools"],
+                                    attn_spec=self.attn_spec)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """Fixed-slot-compatible entry: prompts (B, S0) -> (B, S0 + max_new).

@@ -1,0 +1,524 @@
+"""Observer subsystem + headroom-driven mixed-precision search.
+
+Covers the full loop: calibration observers -> per-site report ->
+certificate-exact P_I search (bit-identical perplexity at a strictly
+tighter global accumulator budget) -> v2 mixed-precision artifact
+(strict loading, per-site validate_datapath) -> paged serving with
+saturation counters (structurally transparent when disabled) and
+calibrated static KV page scales.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_pytree
+from repro.configs import get_config, get_smoke
+from repro.core import PTQConfig, accumulator_range, certify, min_feasible_p_bits
+from repro.data import DataConfig, TokenBatcher
+from repro.models.transformer import init_model
+from repro.quant import calibrate_and_quantize
+from repro.quant.observe import (
+    MixedPrecisionPlan,
+    SaturationCounters,
+    apply_plan,
+    collect_observations,
+    observe_kv_ranges,
+    plan_accumulator_bits,
+    search_kv_bits,
+    search_plan,
+)
+from repro.quant.pipeline import quantized_ppl
+from repro.quant.serve_packed import (
+    export_quantized_artifact,
+    load_flat_artifact,
+    pack_decode_params,
+    packed_params_from_artifact,
+    plan_expected_specs,
+    serving_params_from_quantized,
+)
+from repro.quant.spec import (
+    DatapathMismatchError,
+    DatapathSpec,
+    site_key_for_path,
+    validate_datapath,
+)
+from repro.serving import PagedConfig, PagedEngine, SamplerConfig
+
+GREEDY = SamplerConfig(temperature=0.0)
+
+#: conservative uniform register: the per-site slack below it is what the
+#: search reclaims (constrained GPFQ at a tight register shapes codes to
+#: *fill* it, leaving nothing to search — see docs/mixed_precision.md)
+P_UNIFORM = 20
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    cfg = get_config("tiny-lm-xs")
+    params = init_model(jax.random.key(0), cfg)
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=2))
+    calib = [data.batch(100 + i) for i in range(2)]
+    evalb = list(data.eval_batches(2))
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=P_UNIFORM, tile=64,
+                    algorithm="gpfq", constrain=True)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    report = collect_observations(qm)
+    plan = search_plan(report)
+    qm2 = apply_plan(qm, plan)
+    return cfg, params, calib, evalb, ptq, qm, report, plan, qm2
+
+
+def _paged(cfg, params, **kw):
+    pc = dict(block_size=8, num_blocks=16, max_concurrency=3,
+              max_pages_per_seq=4, chunk_max=4, attn_impl="ref")
+    engine_kw = {k: kw.pop(k) for k in ("observe", "kv_scales") if k in kw}
+    pc.update(kw)
+    return PagedEngine(params, cfg, PagedConfig(**pc), GREEDY, **engine_kw)
+
+
+# ---------------------------------------------------------------------------
+# Observer records
+# ---------------------------------------------------------------------------
+def test_min_feasible_p_bits_certificate_exact(calibrated):
+    """The floor is exact: the codes certify at p* and fail at p* - 1."""
+    *_, qm, report, _, _ = calibrated
+    checked = 0
+    for _, ql in qm.quantized_linears():
+        if ql.cert is None:
+            continue
+        k = int(ql.q_int.shape[-2])
+        p_star = min_feasible_p_bits(ql.cert, k)
+        assert p_star <= ql.spec.p_inner
+        assert bool(certify(ql.q_int, ql.cfg.act_alphabet, p_star, ql.spec.tile))
+        assert not bool(
+            certify(ql.q_int, ql.cfg.act_alphabet, p_star - 1, ql.spec.tile))
+        checked += 1
+        if checked >= 3:  # exactness is per-site; three sites suffice
+            break
+    assert checked == 3
+
+
+def test_report_joins_cert_and_activation_observer(calibrated):
+    cfg, *_, report, _, _ = calibrated
+    assert len(report.sites) == 7  # one slot, 7 sites (wq wk wv wo wg wu wd)
+    for s in report:
+        assert s.n_repeats == cfg.n_layers  # tiny-lm-xs: period 1
+        assert s.headroom_bits is not None and s.headroom_bits > 0
+        assert s.p_floor <= s.p_inner == P_UNIFORM
+        # merged ActObserver snapshot over repeats
+        assert s.act["n_batches"] > 0
+        assert s.act["lo"] <= s.act["hi"]
+        assert s.act["min_seen"] <= s.act["max_seen"]
+        assert s.act["absmax"] >= 0
+    assert report.accumulator_bits() == 7 * cfg.n_layers * P_UNIFORM
+    assert report.floor_accumulator_bits() < report.accumulator_bits()
+    assert report.binding_site() in report.sites
+
+
+def test_cert_summary_names_binding_site(calibrated):
+    *_, qm, _, _, _ = calibrated
+    s = qm.cert_summary()
+    assert s["ok"]
+    by_name = {n: ql.cert.headroom_bits for n, ql in qm.quantized_linears()
+               if ql.cert is not None}
+    assert s["min_headroom_site"] in by_name
+    assert by_name[s["min_headroom_site"]] == s["min_headroom_bits"]
+    assert s["min_headroom_bits"] == min(by_name.values())
+
+
+def test_site_key_for_path():
+    assert site_key_for_path("params/layers[2]/mixer/wq") == "slot2/mixer.wq"
+    assert site_key_for_path("p/layers[0]/ffn/moe/wd") == "slot0/ffn.moe.wd"
+    assert site_key_for_path("embedding/table") is None
+
+
+# ---------------------------------------------------------------------------
+# Search: tighter budget, bit-identical proxy loss
+# ---------------------------------------------------------------------------
+def test_search_tightens_budget_bit_identical(calibrated):
+    """The acceptance property: the searched plan meets a strictly tighter
+    global accumulator budget at *bit-identical* perplexity (P_I-only
+    re-spec serves the same codes), with every certificate re-issued."""
+    *_, evalb, _, qm, report, plan, qm2 = calibrated
+    searched = plan_accumulator_bits(plan, report)
+    assert searched < report.accumulator_bits()
+    assert searched == plan.meta["searched_bits"]
+    assert qm2.cert_summary()["ok"]
+    for name, spec in plan.items():
+        assert spec.p_inner >= report.sites[name].p_floor
+    ppl_u = quantized_ppl(qm, evalb)
+    ppl_s = quantized_ppl(qm2, evalb)
+    assert ppl_s == ppl_u  # exact: same codes, same scales, same quantizers
+
+
+def test_search_respects_explicit_budget(calibrated):
+    *_, report, plan, _ = calibrated
+    floor, uniform = plan.meta["floor_bits"], plan.meta["uniform_bits"]
+    assert floor < uniform
+    mid = floor + (uniform - floor) // 2
+    plan_mid = search_plan(report, acc_budget_bits=mid)
+    assert plan_accumulator_bits(plan_mid, report) <= mid
+    with pytest.raises(ValueError, match="below the certificate-exact floor"):
+        search_plan(report, acc_budget_bits=floor - 1)
+
+
+def test_search_margin_lifts_floors(calibrated):
+    *_, report, _, _ = calibrated
+    plan_m = search_plan(report, margin_bits=2)
+    for s in report:
+        p = plan_m.get(s.name)
+        got = p.p_inner if p is not None else s.p_inner
+        assert got >= min(s.p_floor + 2, s.p_inner)
+
+
+def test_plan_json_roundtrip(tmp_path, calibrated):
+    *_, plan, _ = calibrated
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    back = MixedPrecisionPlan.load(path)
+    assert set(back.keys()) == set(plan.keys())
+    for k in plan:
+        assert back[k] == plan[k]
+    assert back.meta["acc_budget_bits"] == plan.meta["acc_budget_bits"]
+
+
+def test_apply_plan_rejects_unknown_site(calibrated):
+    *_, qm, _, plan, _ = calibrated
+    bogus = MixedPrecisionPlan(
+        sites={"slot9/mixer.nope": next(iter(plan.items()))[1]})
+    with pytest.raises(DatapathMismatchError, match="unknown sites"):
+        apply_plan(qm, bogus)
+
+
+def test_apply_plan_rejects_code_alphabet_moves(calibrated):
+    """w/act/tile changes alter the codes: re-spec must refuse and point at
+    calibrate_and_quantize(plan=...)."""
+    *_, qm, _, plan, _ = calibrated
+    name, spec = next(iter(plan.items()))
+    w8 = dataclasses.replace(spec, w_bits=8)
+    with pytest.raises(DatapathMismatchError, match="code alphabet"):
+        apply_plan(qm, MixedPrecisionPlan(sites={name: w8}))
+
+
+def test_promote_w8_drives_recalibration(calibrated):
+    """w_bits moves go through the pipeline: the promoted (most binding)
+    site leaves the integer accumulator budget, so it loses its
+    certificate while every other site stays certified."""
+    cfg, params, calib, _, ptq, qm, report, _, _ = calibrated
+    plan_p = search_plan(report, promote_w8=1)
+    [promoted] = plan_p.meta["promoted_w8"]
+    assert promoted == report.binding_site()
+    assert plan_p[promoted].w_bits == 8
+    assert plan_p[promoted].p_inner == 32
+    with pytest.raises(DatapathMismatchError, match="code alphabet"):
+        apply_plan(qm, plan_p)
+
+    qm3 = calibrate_and_quantize(params, cfg, calib, ptq, plan=plan_p)
+    s = qm3.cert_summary()
+    n_sites = len(report.sites)
+    assert s["n_certified"] == (n_sites - 1) * cfg.n_layers
+    assert s["ok"]
+
+
+def test_pipeline_rejects_unknown_plan_site(calibrated):
+    cfg, params, calib, _, ptq, _, _, plan, _ = calibrated
+    bogus = MixedPrecisionPlan(
+        sites={"slot0/mixer.nope": next(iter(plan.items()))[1]})
+    with pytest.raises(DatapathMismatchError, match="unknown sites"):
+        calibrate_and_quantize(params, cfg, calib, ptq, plan=bogus)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision artifacts: export, strict reload, per-site validation
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mixed_artifact(tmp_path_factory, calibrated):
+    """A guaranteed-heterogeneous artifact: the searched plan with one
+    site bumped a bit above its floor, so at least two distinct per-site
+    datapaths coexist (the search itself may legitimately land uniform
+    when every site floors at the same register)."""
+    from repro.core import outer_accumulator_bits
+
+    cfg, params, _, _, _, qm, report, plan, _ = calibrated
+    sites = dict(plan.sites)
+    name = sorted(sites)[0]
+    spec = sites[name]
+    p_new = spec.p_inner + 1
+    k = report.sites[name].k
+    p_out = (p_new if spec.tile is None or spec.tile >= k
+             else outer_accumulator_bits(p_new, k, spec.tile))
+    sites[name] = dataclasses.replace(spec, p_inner=p_new, p_outer=p_out)
+    plan_h = MixedPrecisionPlan(sites=sites, meta=dict(plan.meta))
+    qm2h = apply_plan(qm, plan_h)
+
+    out = str(tmp_path_factory.mktemp("mixed") / "quantized")
+    artifact, meta = export_quantized_artifact(qm2h)
+    save_pytree(artifact, out, meta)
+    return out, plan_h, qm2h, meta
+
+
+def test_mixed_artifact_flags_and_strict_load(mixed_artifact, calibrated):
+    cfg, params, *_ = calibrated
+    out, _, _, meta = mixed_artifact
+    assert meta["mixed_precision"] is True  # heterogeneous P_I across sites
+    flat, meta2 = load_flat_artifact(out)
+    assert meta2["mixed_precision"] is True
+    pp = packed_params_from_artifact(flat, params, cfg, meta=meta2)
+    n_packed = sum(1 for leaf in jax.tree.leaves(
+        pp["layers"], is_leaf=lambda x: isinstance(x, dict) and "packed" in x)
+        if isinstance(leaf, dict))
+    assert n_packed > 0
+
+
+def test_mixed_artifact_serves_bit_identical(mixed_artifact, calibrated):
+    """Disk -> engine greedy identity vs the in-memory plan (the artifact
+    carries everything; nothing is re-derived at load)."""
+    cfg, params, *_ = calibrated
+    out, plan_h, qm2h, _ = mixed_artifact
+    flat, meta = load_flat_artifact(out)
+    sp_mem = serving_params_from_quantized(qm2h)
+    sp_disk = packed_params_from_artifact(flat, params, cfg, meta=meta)
+
+    base = dataclasses.replace(
+        qm2h.ptq.to_datapath_spec(cfg.d_model), static_act=True)
+    expected = plan_expected_specs(cfg, plan_h, base)
+    assert validate_datapath(sp_mem, expected) == len(expected)
+    assert validate_datapath(sp_disk, expected) == len(expected)
+
+    prompts = np.random.default_rng(2).integers(
+        0, cfg.vocab, size=(2, 8)).astype(np.int32)
+    out_mem = _paged(cfg, sp_mem).generate(prompts, 8)
+    out_disk = _paged(cfg, sp_disk).generate(prompts, 8)
+    np.testing.assert_array_equal(out_mem, out_disk)
+
+
+def test_partial_mixed_artifact_rejected(mixed_artifact, calibrated):
+    """Satellite: a dropped site must raise loudly, not silently serve
+    float. Mixed artifacts force strict accounting from their meta."""
+    cfg, params, *_ = calibrated
+    out, *_ = mixed_artifact
+    flat, meta = load_flat_artifact(out)
+    assert meta["mixed_precision"] is True
+
+    # one missing repeat: rejected regardless of strictness
+    partial = {k: v for k, v in flat.items()
+               if not k.startswith("layer0/mixer.wq/")}
+    with pytest.raises(DatapathMismatchError, match="does not cover"):
+        packed_params_from_artifact(partial, params, cfg, meta=meta,
+                                    strict=False)
+
+    # a whole site dropped: strict (auto-on for mixed_precision) rejects
+    dropped = {k: v for k, v in flat.items() if "/mixer.wq/" not in k}
+    with pytest.raises(DatapathMismatchError, match="does not cover"):
+        packed_params_from_artifact(dropped, params, cfg, meta=meta)
+
+
+def test_unknown_artifact_site_rejected(mixed_artifact, calibrated):
+    cfg, params, *_ = calibrated
+    out, *_ = mixed_artifact
+    flat, meta = load_flat_artifact(out)
+    flat = dict(flat)
+    flat["layer0/mixer.bogus/q"] = np.zeros((4, 4), np.int8)
+    with pytest.raises(DatapathMismatchError, match="does not enumerate"):
+        packed_params_from_artifact(flat, params, cfg, meta=meta)
+
+
+def test_plan_expected_specs_rejects_unknown_site(calibrated):
+    cfg, *_, plan, qm2 = calibrated
+    base = dataclasses.replace(
+        qm2.ptq.to_datapath_spec(cfg.d_model), static_act=True)
+    bogus = MixedPrecisionPlan(sites={"slot0/ffn.nope": base})
+    with pytest.raises(DatapathMismatchError, match="does not enumerate"):
+        plan_expected_specs(cfg, bogus, base)
+
+
+def test_validate_datapath_mapping_is_total(calibrated):
+    """Per-site validation is bidirectionally total: an unmapped packed
+    leaf raises, and a mapped-but-absent site raises (it would silently
+    serve float)."""
+    cfg, *_, plan, qm2 = calibrated
+    sp = serving_params_from_quantized(qm2)
+    base = dataclasses.replace(
+        qm2.ptq.to_datapath_spec(cfg.d_model), static_act=True)
+    expected = plan_expected_specs(cfg, plan, base)
+
+    short = dict(expected)
+    short.pop("slot0/mixer.wq")
+    with pytest.raises(DatapathMismatchError, match="not named by"):
+        validate_datapath(sp, short)
+
+    extra = dict(expected)
+    extra["slot0/mixer.ghost"] = base
+    with pytest.raises(DatapathMismatchError, match="no packed leaf"):
+        validate_datapath(sp, extra)
+
+    wrong = dict(expected)
+    wrong["slot0/mixer.wq"] = dataclasses.replace(
+        expected["slot0/mixer.wq"], p_inner=12)
+    with pytest.raises(DatapathMismatchError):
+        validate_datapath(sp, wrong)
+
+
+def test_two_site_overrides_roundtrip_hybrid(tmp_path):
+    """Satellite e2e on a second family: two sites with *different*
+    per-site datapaths quantize, certify, export, reload, and serve
+    bit-identically through the paged engine."""
+    cfg = get_config("tiny-hybrid")
+    params = init_model(jax.random.key(0), cfg)
+    data = TokenBatcher(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2))
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=P_UNIFORM, tile=None,
+                    algorithm="gpfq", constrain=True)
+    qm = calibrate_and_quantize(params, cfg, [data.batch(0)], ptq)
+    report = collect_observations(qm)
+
+    # hand-build a two-site plan with distinct registers (floor vs floor+1)
+    certed = [s for s in report if s.headroom_bits is not None][:2]
+    assert len(certed) == 2
+    a, b = certed
+    plan = MixedPrecisionPlan(sites={
+        a.name: dataclasses.replace(a.spec, p_inner=a.p_floor,
+                                    p_outer=a.p_floor),
+        b.name: dataclasses.replace(
+            b.spec, p_inner=min(b.p_floor + 1, b.p_inner),
+            p_outer=min(b.p_floor + 1, b.p_inner)),
+    })
+    assert plan[a.name].p_inner != plan[b.name].p_inner or a.p_floor != b.p_floor
+    qm2 = apply_plan(qm, plan)
+    assert qm2.cert_summary()["ok"]
+
+    artifact, meta = export_quantized_artifact(qm2)
+    assert meta["mixed_precision"] is True
+    out = str(tmp_path / "hybrid")
+    save_pytree(artifact, out, meta)
+    flat, meta2 = load_flat_artifact(out)
+    sp_mem = serving_params_from_quantized(qm2)
+    sp_disk = packed_params_from_artifact(flat, params, cfg, meta=meta2)
+
+    prompts = np.random.default_rng(3).integers(
+        0, cfg.vocab, size=(2, 8)).astype(np.int32)
+    out_mem = _paged(cfg, sp_mem).generate(prompts, 8)
+    out_disk = _paged(cfg, sp_disk).generate(prompts, 8)
+    np.testing.assert_array_equal(out_mem, out_disk)
+
+
+# ---------------------------------------------------------------------------
+# Serving observation: structural transparency + saturation counters
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def packed_setup():
+    cfg = get_smoke("smollm-360m").scaled(n_layers=2, vocab=128)
+    params = init_model(jax.random.key(0), cfg)
+    pparams = pack_decode_params(params, cfg)
+    prompts = np.random.default_rng(0).integers(
+        0, 128, size=(3, 8)).astype(np.int32)
+    return cfg, params, pparams, prompts
+
+
+def test_observer_structurally_transparent(packed_setup):
+    """Acceptance assertion: with observation disabled the decode-chunk
+    jaxpr is *unchanged* — the counters live entirely off the hot path."""
+    cfg, _, pparams, _ = packed_setup
+    plain = _paged(cfg, pparams, kv_dtype="int8")
+    observed = _paged(cfg, pparams, kv_dtype="int8", observe=True)
+    assert observed.datapath_fingerprint.endswith("+obs")
+    # bare traces (no observer attached) are structurally identical
+    assert str(plain.decode_chunk_jaxpr()) == str(observed.decode_chunk_jaxpr())
+    assert "debug_callback" not in str(plain.decode_chunk_jaxpr())
+    # with an observer attached, the host taps appear
+    tapped = str(observed.decode_chunk_jaxpr(observer=SaturationCounters()))
+    assert "debug_callback" in tapped
+
+
+def test_observed_serving_bit_identical_with_report(packed_setup):
+    cfg, _, pparams, prompts = packed_setup
+    plain = _paged(cfg, pparams, kv_dtype="int8")
+    observed = _paged(cfg, pparams, kv_dtype="int8", observe=True)
+    ref = plain.generate(prompts, 8)
+    out = observed.generate(prompts, 8)
+    np.testing.assert_array_equal(out, ref)  # counters never touch values
+
+    observed.assert_observation_transparent()
+    rep = observed.saturation_report()
+    assert rep["sites"], "packed sites must have recorded"
+    for name, site in rep["sites"].items():
+        assert name.startswith("slot")
+        assert site["n_calls"] > 0 and site["clip_total"] > 0
+        assert 0.0 <= site["clip_frac"] <= 1.0
+        # packed-leaf watermark section resolved for every observed site
+        assert site["watermark_bits"] > 0
+        # headroom is measured against the exact register limit (2^(p-1)-1)
+        assert site["headroom_bits_observed"] == pytest.approx(
+            site["p_inner"] - site["watermark_bits"], abs=1e-3)
+    # int8 KV pools: per-head accumulator watermarks vs the attn registers
+    assert rep["kv_heads"]
+    for slot in rep["kv_heads"].values():
+        assert slot  # every int8 attn slot reports each kv head
+        for head in slot.values():
+            assert np.isfinite(head["qk_watermark_bits"])
+            assert np.isfinite(head["pv_watermark_bits"])
+            assert 0 < head["qk_watermark_bits"] <= head["p_qk"]
+            assert 0 < head["pv_watermark_bits"] <= head["p_pv"]
+
+    with pytest.raises(ValueError, match="observe"):
+        plain.saturation_report()
+
+
+def test_static_kv_scales_roundtrip_identity(packed_setup, tmp_path):
+    """Calibrated static page scales: plan kv section drives the engine,
+    JSON round-trip preserves greedy outputs bit-exactly, and the engine
+    refuses scales on float pools."""
+    cfg, _, pparams, prompts = packed_setup
+    batch = {"tokens": jnp.asarray(prompts)}
+    ranges = observe_kv_ranges(pparams, cfg, [batch])
+    kv = search_kv_bits(ranges, kv_bits=8, low_bits=4, low_frac=0.25)
+
+    eng = _paged(cfg, pparams, kv_dtype="int8", kv_scales=kv)
+    assert eng.datapath_fingerprint.endswith("+kv-static")
+    out_a = eng.generate(prompts, 8)
+
+    plan = MixedPrecisionPlan(sites={}, kv=kv)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    kv_back = MixedPrecisionPlan.load(path).kv
+    out_b = _paged(cfg, pparams, kv_dtype="int8", kv_scales=kv_back).generate(
+        prompts, 8)
+    np.testing.assert_array_equal(out_a, out_b)
+
+    with pytest.raises(ValueError, match="int8"):
+        _paged(cfg, pparams, kv_scales=kv)
+    with pytest.raises(ValueError, match="not an attention slot"):
+        bad = {"slots": {"99": kv["slots"][next(iter(kv["slots"]))]},
+               "kv_bits_default": 8}
+        _paged(cfg, pparams, kv_dtype="int8", kv_scales=bad)
+
+
+# ---------------------------------------------------------------------------
+# Launcher: search -> export -> validated serve surface
+# ---------------------------------------------------------------------------
+def test_search_launcher_end_to_end(tmp_path):
+    from repro.launch.search import main
+
+    out = str(tmp_path / "mixed")
+    rep = main([
+        "--arch", "tiny-lm-xs", "--p-bits", str(P_UNIFORM), "--tile", "64",
+        "--calib-batches", "1", "--calib-batch-size", "2", "--seq", "32",
+        "--eval-batches", "1", "--kv-static", "--out", out,
+    ])
+    assert rep["savings_rate"] > 1.0
+    assert rep["searched"]["ppl"] == rep["uniform"]["ppl"]  # P_I-only plan
+    assert rep["searched"]["cert"]["ok"]
+    assert rep["searched"]["kv_static"]
+
+    plan = MixedPrecisionPlan.load(f"{out}/plan.json")
+    assert plan.kv is not None and plan.meta["base_spec"]["p_inner"] == P_UNIFORM
+    cfg = get_config("tiny-lm-xs")
+    params = init_model(jax.random.key(0), cfg)
+    flat, meta = load_flat_artifact(f"{out}/quantized")
+    pp = packed_params_from_artifact(flat, params, cfg, meta=meta)
+    base = DatapathSpec(**plan.meta["base_spec"])
+    n = validate_datapath(pp, plan_expected_specs(cfg, plan, base))
+    assert n == 7

@@ -127,7 +127,8 @@ def test_cert_summary_empty_is_explicitly_not_ok():
     qm = QuantizedModel(cfg=cfg, ptq=PTQConfig(constrain=False),
                         embedding={}, final_norm={})
     s = qm.cert_summary()
-    assert s == {"n_certified": 0, "min_headroom_bits": None, "ok": False}
+    assert s == {"n_certified": 0, "min_headroom_bits": None,
+                 "min_headroom_site": None, "ok": False}
     assert qm.certified  # the per-layer predicate stays vacuous-true...
     assert s["ok"] is False  # ...but the summary is explicit about it
 
