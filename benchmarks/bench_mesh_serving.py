@@ -1,0 +1,88 @@
+"""Mesh-sharded paged serving vs the 1-device engine on the same trace.
+
+Needs more than one visible device — CI runs it in a dedicated step with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (on one real
+device the bench prints a skip note and writes nothing, so a plain local
+``python -m benchmarks.run`` still completes). On fake CPU devices the
+sharded engine is *slower* than one device — every decode chunk pays
+emulated collectives for a model that fits in L2 — so the gated number is
+not a speedup but the overhead ratio ``toks_ratio_sharded_vs_1dev``:
+a step-change drop means the SPMD path started paying per-token resharding
+or extra host syncs (the regression class the one-``device_get``-per-chunk
+rule exists to prevent). Greedy streams are asserted bit-identical between
+the two engines before any number is reported. Writes
+``BENCH_mesh_serving.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models.transformer import init_model
+from repro.serving import PagedEngine, SamplerConfig
+
+from .bench_serving import ARCH, make_paged_engine, make_trace
+from .common import FAST, csv_row, write_bench_json
+
+REPS = 3 if FAST else 5
+
+
+def _timed(eng, vocab) -> tuple[float, dict]:
+    out = eng.serve(make_trace(vocab))  # warm every jit bucket
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        eng.serve(make_trace(vocab))
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def run():
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        print("bench/mesh_serving/skip,0,needs >= 2 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return None
+    mesh = make_mesh((n_dev // 2, 2))
+    cfg = get_config(ARCH)
+    params = init_model(jax.random.key(0), cfg)
+    reqs = make_trace(cfg.vocab)
+    useful = sum(r.max_new for r in reqs)
+
+    ref = make_paged_engine(params, cfg, reqs)
+    dt_ref, want = _timed(ref, cfg.vocab)
+    sharded = PagedEngine(params, cfg, ref.paged,
+                          SamplerConfig(temperature=0.0), mesh=mesh)
+    dt_sh, got = _timed(sharded, cfg.vocab)
+    for r in reqs:  # identity first, numbers second
+        np.testing.assert_array_equal(got[r.uid], want[r.uid])
+
+    toks_ref = useful / dt_ref
+    toks_sh = useful / dt_sh
+    results = {
+        "backend": jax.default_backend(),
+        "arch": ARCH,
+        "devices": n_dev,
+        "mesh_shape": list(mesh.devices.shape),
+        "useful_tokens": useful,
+        "toks_1dev": toks_ref,
+        "toks_sharded": toks_sh,
+        "toks_ratio_sharded_vs_1dev": toks_sh / toks_ref,
+        "us_per_tok_sharded": 1e6 * dt_sh / useful,
+    }
+    csv_row(f"mesh_serving/{'fast' if FAST else 'full'}",
+            results["us_per_tok_sharded"],
+            f"sharded={toks_sh:.1f}toks;1dev={toks_ref:.1f}toks;"
+            f"ratio={toks_sh / toks_ref:.2f}x@{n_dev}dev")
+    write_bench_json("BENCH_mesh_serving.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ("pareto", "table1", "table2", "table3", "kernels", "roofline",
-           "families", "decode", "datapath", "serving")
+           "families", "decode", "datapath", "serving", "mesh_serving")
 
 
 def main(argv=None) -> None:
@@ -65,6 +65,10 @@ def main(argv=None) -> None:
                 from . import bench_serving
 
                 bench_serving.run()
+            elif name == "mesh_serving":
+                from . import bench_mesh_serving
+
+                bench_mesh_serving.run()
             elif name == "roofline":
                 from . import bench_roofline
 

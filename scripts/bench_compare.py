@@ -62,15 +62,28 @@ def _numeric_leaves(obj, prefix=""):
 
 def compare_file(name: str, base: dict, cur: dict, threshold: float,
                  min_us: float = 0.0):
-    """Yields (metric, baseline, current, delta, status) rows."""
+    """Yields (metric, baseline, current, delta, status) rows.
+
+    Walks the union of both leaf sets: a perf metric present on one side
+    only is a hard failure either way. "MISSING" (baseline leaf gone from
+    the current run) catches silently dropped benches; "NO BASELINE"
+    (current leaf with no committed baseline) forces every new section —
+    e.g. ``mesh_serving`` — to commit its baseline in the same change
+    that introduces it, or the gate cannot gate it."""
     cur_leaves = dict(_numeric_leaves(cur))
-    for metric, b in _numeric_leaves(base):
+    base_leaves = dict(_numeric_leaves(base))
+    for metric, c in cur_leaves.items():
+        if metric in base_leaves:
+            continue
+        if _is_perf_key(metric.rsplit(".", 1)[-1]) is not None:
+            yield metric, None, c, None, "NO BASELINE"
+    for metric, b in base_leaves.items():
         direction = _is_perf_key(metric.rsplit(".", 1)[-1])
         if direction is None:
             continue
         c = cur_leaves.get(metric)
         if c is None:
-            yield metric, b, None, None, "missing"
+            yield metric, b, None, None, "MISSING"
             continue
         if b == 0:
             continue
@@ -119,7 +132,7 @@ def main(argv=None) -> int:
                                                         args.threshold,
                                                         args.min_us):
             rows.append((name, metric, b, c, delta, status))
-            if status == "REGRESSED":
+            if status in ("REGRESSED", "MISSING", "NO BASELINE"):
                 failures += 1
 
     floor = f", us-floor {args.min_us:.0f}us" if args.min_us else ""
@@ -132,7 +145,8 @@ def main(argv=None) -> int:
         ds = f"{delta:+.1%}" if isinstance(delta, float) else "—"
         print(f"| {name} | {metric} | {bs} | {cs} | {ds} | {status} |")
     compared = sum(1 for r in rows if r[5] in ("ok", "REGRESSED"))
-    print(f"\n{compared} metrics compared, {failures} regression(s).")
+    print(f"\n{compared} metrics compared, {failures} failure(s) "
+          f"(regressed / missing / no-baseline).")
     return 1 if failures else 0
 
 

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
+HBM_PER_CHIP = 16e9  # bytes of HBM per v5e chip (capacity, not bandwidth)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

@@ -34,7 +34,7 @@ from repro.configs import (
     cache_specs,
     get_config,
 )
-from repro.launch.analysis import Roofline, model_flops
+from repro.launch.analysis import HBM_PER_CHIP, ICI_BW, Roofline, model_flops
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models.config import param_count
@@ -170,6 +170,102 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
     return result
 
 
+#: default targets for --paged-budget: the three production-scale serving
+#: archs whose KV pools the mesh-sharded engine is meant to hold
+BUDGET_ARCHS = ("llama3-405b", "dbrx-132b", "jamba-1.5-large-398b")
+
+
+def _sharded_bytes(tree, shardings, mesh) -> float:
+    """Per-device bytes of an abstract pytree under *resolved* shardings:
+    each leaf is divided by the product of the mesh-axis sizes its
+    PartitionSpec actually uses — a replicated leaf divides by 1, so
+    divisibility fallbacks (e.g. a kv-head count the model axis does not
+    divide) surface as real budget, not optimistic /chips arithmetic."""
+    import numpy as np
+
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree),
+                        jax.tree.leaves(shardings,
+                                        is_leaf=lambda x: hasattr(x, "spec"))):
+        factor = 1
+        for entry in sh.spec:
+            for ax in ((entry,) if isinstance(entry, str) else (entry or ())):
+                factor *= mesh.shape[ax]
+        total += leaf.size * np.dtype(leaf.dtype).itemsize / factor
+    return total
+
+
+def paged_budget(arch: str, mesh, mesh_label: str, *, block_size: int = 64,
+                 num_slots: int = 64, kv_dtype: str = "act") -> dict:
+    """Analytic HBM + interconnect budget for mesh-sharded paged serving.
+
+    Weight and cache bytes come from the *real* sharding resolution
+    (``runtime.sharding.paged_engine_shardings`` on abstract leaves), not
+    from naive division by the chip count. The page pool's per-device
+    cost is measured as the finite difference between a 2-page and a
+    1-page abstract cache — pool leaves scale with ``num_blocks`` while
+    recurrent per-slot state (Jamba's Mamba layers) and the admin leaves
+    do not — and the leftover HBM is converted into the largest pool via
+    ``scheduler.blocks_for_budget`` arithmetic. The interconnect side is
+    the first-order decode floor: every layer's TP all-reduce of the
+    d_model residual, at the ring convention (2x operand bytes) of
+    :mod:`repro.launch.analysis`, over ICI_BW.
+    """
+    import numpy as np
+
+    from repro.models.transformer import abstract_params, init_paged_cache
+    from repro.runtime.sharding import paged_engine_shardings
+
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    max_pages = -(-cfg.max_seq_len // block_size)
+
+    def cache_bytes_per_dev(num_blocks: int) -> float:
+        cache = init_paged_cache(cfg, num_slots=num_slots,
+                                 num_blocks=num_blocks,
+                                 block_size=block_size, max_pages=max_pages,
+                                 abstract=True,
+                                 kv_dtype=None if kv_dtype == "act" else kv_dtype)
+        p_sh, c_sh = paged_engine_shardings(params, cache, cfg, mesh)
+        return _sharded_bytes(cache, c_sh, mesh), p_sh
+
+    b1, p_sh = cache_bytes_per_dev(1)
+    b2, _ = cache_bytes_per_dev(2)
+    page_bytes_per_dev = b2 - b1
+    fixed_cache_bytes_per_dev = b1 - page_bytes_per_dev
+    weight_bytes_per_dev = _sharded_bytes(params, p_sh, mesh)
+
+    kv_budget = HBM_PER_CHIP - weight_bytes_per_dev - fixed_cache_bytes_per_dev
+    max_blocks = int(kv_budget // page_bytes_per_dev) if kv_budget > 0 else 0
+    # decode interconnect floor: one d_model all-reduce per block output,
+    # 2x operand wire bytes (ring reduce-scatter + all-gather)
+    n_blocks_model = cfg.repeats * len(cfg.pattern)
+    act_bytes = np.dtype(cfg.act_dtype).itemsize
+    wire_per_tok = 2.0 * n_blocks_model * cfg.d_model * act_bytes
+    return {
+        "arch": arch,
+        "mesh": mesh_label,
+        "mesh_shape": {k: v for k, v in mesh.shape.items()},
+        "chips": int(mesh.devices.size),
+        "block_size": block_size,
+        "num_slots": num_slots,
+        "kv_dtype": kv_dtype,
+        "hbm_per_chip_bytes": HBM_PER_CHIP,
+        "weight_bytes_per_dev": weight_bytes_per_dev,
+        "fixed_cache_bytes_per_dev": fixed_cache_bytes_per_dev,
+        "kv_page_bytes_per_dev": page_bytes_per_dev,
+        "kv_hbm_budget_per_dev": max(kv_budget, 0.0),
+        "max_pool_blocks": max_blocks,
+        "pool_token_capacity": max_blocks * block_size,
+        "max_concurrent_max_seq": (max_blocks // max_pages) if max_pages else 0,
+        "fits": bool(max_blocks >= 1),
+        "interconnect": {
+            "decode_wire_bytes_per_tok_per_dev": wire_per_tok,
+            "decode_ici_floor_us_per_tok": 1e6 * wire_per_tok / ICI_BW,
+        },
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -180,6 +276,14 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true", help="every applicable cell")
     ap.add_argument("--quantized", action="store_true",
                     help="decode with the packed-int4 W4A8 serving artifact")
+    ap.add_argument("--paged-budget", action="store_true",
+                    help="analytic mesh-sharded paged-serving HBM/ICI "
+                         "budgets (no compile) for --arch or the "
+                         f"production serving archs {BUDGET_ARCHS}")
+    ap.add_argument("--kv-dtype", choices=("act", "int8"), default="act",
+                    help="page pool element type for --paged-budget")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="page size for --paged-budget")
     ap.add_argument("--out", type=str, default=None, help="output dir for JSON")
     args = ap.parse_args(argv)
 
@@ -192,6 +296,35 @@ def main(argv=None):
             meshes.append((make_production_mesh(multi_pod=False), "single"))
         if args.mesh in ("multi", "both"):
             meshes.append((make_production_mesh(multi_pod=True), "multi"))
+
+    if args.paged_budget:
+        failures = 0
+        archs = (args.arch,) if args.arch else BUDGET_ARCHS
+        for arch in archs:
+            for mesh, label in meshes:
+                try:
+                    b = paged_budget(arch, mesh, label,
+                                     block_size=args.block_size,
+                                     kv_dtype=args.kv_dtype)
+                except Exception as e:
+                    failures += 1
+                    print(f"[dryrun] FAIL paged-budget {arch}|{label}: "
+                          f"{type(e).__name__}: {e}")
+                    continue
+                verdict = "OK  " if b["fits"] else "OOM "
+                if not b["fits"]:
+                    failures += 1
+                print(f"[dryrun] {verdict}paged-budget {arch}|{label}  "
+                      f"weights={b['weight_bytes_per_dev'] / 1e9:.1f}GB/dev "
+                      f"pool={b['max_pool_blocks']}blocks"
+                      f"({b['pool_token_capacity']}tok) "
+                      f"ici_floor={b['interconnect']['decode_ici_floor_us_per_tok']:.0f}us/tok")
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fname = f"{arch}__paged_budget__{label}.json".replace("/", "_")
+                    with open(os.path.join(args.out, fname), "w") as f:
+                        json.dump(b, f, indent=1)
+        return 1 if failures else 0
 
     cells = []
     if args.all:

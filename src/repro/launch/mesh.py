@@ -39,3 +39,29 @@ def make_host_mesh():
     """All locally visible devices as a data-parallel mesh (tests/smoke)."""
     n = len(jax.devices())
     return _mk((n,), ("data",))
+
+
+def parse_mesh_spec(spec: str):
+    """``"dp,tp"`` (e.g. ``"2,4"``) -> a global (data, model) serving mesh.
+
+    The product must equal the *global* device count — under
+    ``jax.distributed`` that spans every process, so each host passes the
+    same spec and gets the same mesh (device order is the global
+    ``jax.devices()`` order, identical on all processes). ``"auto"``
+    spreads all devices over the data axis."""
+    if spec == "auto":
+        return make_mesh((len(jax.devices()),))
+    try:
+        shape = tuple(int(x) for x in spec.split(","))
+    except ValueError:
+        raise SystemExit(
+            f"--mesh {spec!r} is not 'dp,tp' integers (e.g. '2,4') or 'auto'")
+    if len(shape) != 2 or any(s < 1 for s in shape):
+        raise SystemExit(
+            f"--mesh {spec!r}: exactly two positive factors dp,tp expected")
+    n = len(jax.devices())
+    if shape[0] * shape[1] != n:
+        raise SystemExit(
+            f"--mesh {spec!r}: dp*tp = {shape[0] * shape[1]} but "
+            f"{n} global devices are visible")
+    return make_mesh(shape)

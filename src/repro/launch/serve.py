@@ -24,6 +24,12 @@ enough pages for a full-length batch at ``--max-concurrency``).
 prefill, watermark reservation with preempt-and-requeue) — token streams
 stay bit-identical to the default FIFO loop. See
 docs/serving_scheduler.md.
+
+``--mesh dp,tp`` serves the paged engine SPMD over a (data, model) mesh —
+kv-head-sharded pools, replicated admin leaves, fully-replicated host
+reads; token streams are bit-identical to the single-device engine. Under
+``jax.distributed`` the same flag spans every process (docs/multihost.md;
+``scripts/run_multiprocess.py`` drives the multi-process battery).
 """
 
 from __future__ import annotations
@@ -116,6 +122,12 @@ def main(argv=None):
                          "datapaths against the plan and, with --paged "
                          "--kv-dtype int8, threads the plan's calibrated "
                          "static KV page scales into the engine")
+    ap.add_argument("--mesh", type=str, default=None, metavar="DP,TP",
+                    help="serve SPMD over a (data, model) mesh (--paged): "
+                         "'dp,tp' whose product equals the global device "
+                         "count, or 'auto' for all devices data-parallel. "
+                         "Pools shard kv_heads, admin leaves replicate "
+                         "(docs/multihost.md)")
     ap.add_argument("--observe", action="store_true",
                     help="attach serving saturation counters (--paged): "
                          "static-quantizer clip counts + per-site/per-head "
@@ -181,6 +193,9 @@ def main(argv=None):
     if args.observe and not args.paged:
         raise SystemExit("--observe applies to the paged engine only "
                          "(add --paged)")
+    if args.mesh is not None and not args.paged:
+        raise SystemExit("--mesh applies to the paged engine only "
+                         "(add --paged)")
     if args.paged:
         if args.host_loop:
             raise SystemExit("--host-loop applies to the fixed-slot engine only")
@@ -209,6 +224,14 @@ def main(argv=None):
                 watermark=tuple(args.watermark) if args.watermark else None)
         except ValueError as e:
             raise SystemExit(f"scheduler policy: {e}") from None
+        mesh = None
+        if args.mesh is not None:
+            from repro.launch.mesh import parse_mesh_spec
+
+            mesh = parse_mesh_spec(args.mesh)
+            print(f"[serve] mesh: {dict(mesh.shape)} over "
+                  f"{len(mesh.devices.flat)} devices "
+                  f"({jax.process_count()} process(es))")
         try:
             engine = PagedEngine(
                 params, cfg,
@@ -219,6 +242,7 @@ def main(argv=None):
                 sampler,
                 observe=args.observe,
                 kv_scales=plan.kv if plan is not None else None,
+                mesh=mesh,
             )
         except ValueError as e:
             raise SystemExit(f"paged engine: {e}") from None

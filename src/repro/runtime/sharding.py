@@ -21,6 +21,7 @@ import threading
 from contextlib import contextmanager
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
@@ -253,8 +254,16 @@ def _leaf_logical_names(path, leaf) -> tuple:
     table = {1: _W1, 2: _W2, 3: _W3, 4: _W4}.get(base, {})
     names = table.get(name, (None,) * base)
     if suffix in ("scale", "col_sums", "bias"):
-        # (1, N) / (N,) per-channel vectors: shard only the channel dim
-        names = (None,) * (base - 1) + (names[-1] if names else None,)
+        # (1, N) / (N,) per-channel vectors: shard only the channel dim —
+        # except the expert axis of MoE stacks, which must co-shard with
+        # the packed codes (expert-parallel decode: a device holding an
+        # expert's codes must hold its scales/col_sums, or every EP
+        # matmul pays a cross-device gather of the dequant metadata)
+        chan = names[-1] if names else None
+        mids = [None] * (base - 1)
+        if mids and names and names[0] == "expert":
+            mids[0] = "expert"
+        names = (*mids, chan)
     if stacked:
         names = (None, *names)  # leading repeats axis: never sharded
     return names
@@ -315,6 +324,7 @@ def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
     """
     rules = rules or DEFAULT_RULES
     model_size = mesh.shape.get("model", 1)
+    paged = isinstance(cache, dict) and "free_list" in cache
 
     def one(path, leaf):
         name = None
@@ -322,6 +332,18 @@ def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
             if hasattr(entry, "key"):
                 name = entry.key
                 break
+        if paged:
+            top = next((e.key for e in path if hasattr(e, "key")), None)
+            if top != "pools" and top not in _PAGED_ADMIN_LEAVES:
+                # loud by design: a silently-replicated new pool leaf is
+                # exactly the bug class the mesh CI lane exists to catch —
+                # every paged top-level leaf must be either under "pools"
+                # (sharding decided by kind below) or a declared admin leaf
+                raise ValueError(
+                    f"unknown paged cache leaf {top!r}: not under 'pools' and "
+                    f"not in _PAGED_ADMIN_LEAVES {_PAGED_ADMIN_LEAVES}; declare "
+                    "its sharding explicitly in runtime.sharding"
+                )
         if name in _PAGED_ADMIN_LEAVES:
             return NamedSharding(mesh, P())
         if name in ("k_pages", "v_pages") and leaf.ndim == 5:
@@ -367,3 +389,62 @@ def cache_shardings(cache, cfg, mesh: Mesh, rules: dict | None = None):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native paged serving (docs/multihost.md)
+# ---------------------------------------------------------------------------
+
+
+def paged_engine_shardings(params, cache, cfg, mesh: Mesh,
+                           rules: dict | None = None):
+    """(param_shardings, cache_shardings) for the paged engine's jitted
+    programs — the out_shardings contract: every program returns its cache
+    operand under exactly these shardings (pools kv-head-sharded, admin
+    leaves replicated) and every token/stream output fully replicated, so
+    a host read of any output touches only local shards."""
+    rules = SERVING_QUANT_RULES if rules is None else rules
+    return (
+        param_shardings(params, mesh, rules),
+        cache_shardings(cache, cfg, mesh, rules),
+    )
+
+
+def rows_sharding(shape: tuple[int, ...], mesh: Mesh,
+                  rules: dict | None = None) -> NamedSharding:
+    """Row (dim 0) sharding for per-request host inputs — batched-admit
+    prompt blocks shard per-host over the data axis when the row count
+    divides it (divisibility fallback -> replicated)."""
+    rules = DEFAULT_RULES if rules is None else rules
+    names = ("batch",) + (None,) * (len(shape) - 1)
+    return NamedSharding(mesh, resolve_spec(shape, names, mesh, rules))
+
+
+def host_to_global(tree, shardings):
+    """Place a host (or local single-device) pytree onto global shardings.
+
+    Multihost-safe: built via ``jax.make_array_from_callback`` from the
+    host copy, so it works whether the sharding spans one process or many.
+    Every process must hold the identical full value (true for the paged
+    engine: params/cache init is seed-deterministic on every host)."""
+
+    def put(x, sh):
+        arr = np.asarray(x)
+        return jax.make_array_from_callback(
+            arr.shape, sh, lambda idx, a=arr: a[idx]
+        )
+
+    return jax.tree.map(put, tree, shardings)
+
+
+def host_read(x):
+    """Fetch an array to host memory, multihost-safe.
+
+    ``jax.device_get`` refuses non-fully-addressable arrays (any replicated
+    output of a multi-process computation). Replicated means every shard
+    holds the full value, so reading one local shard *is* the global read —
+    this is what makes the engine's one-device_get-per-chunk rule hold
+    unchanged under a multi-process mesh."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        return np.asarray(x.addressable_data(0))
+    return jax.device_get(x)

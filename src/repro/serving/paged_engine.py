@@ -67,6 +67,7 @@ from repro.models.transformer import (
     prefill,
 )
 from repro.quant.serve_packed import upgrade_packed_params
+from repro.runtime import sharding as shardlib
 from repro.quant.spec import (
     AttnDatapathSpec,
     tree_datapath_fingerprint,
@@ -141,7 +142,8 @@ def _sample_rows(logits, temperature: float, keys):
 class PagedEngine:
     def __init__(self, params, cfg: ModelConfig, paged: PagedConfig = PagedConfig(),
                  sampler: SamplerConfig = SamplerConfig(), datapath=None,
-                 attn_datapath=None, observe: bool = False, kv_scales=None):
+                 attn_datapath=None, observe: bool = False, kv_scales=None,
+                 mesh=None, shard_rules=None):
         self.params = upgrade_packed_params(params)
         if datapath is not None:
             validate_datapath(self.params, datapath)
@@ -256,6 +258,33 @@ class PagedEngine:
             max_pages,
             kv_dtype="int8" if paged.kv_dtype == "int8" else None,
         )
+        #: SPMD mesh for the three program families (docs/multihost.md):
+        #: pools shard kv_heads, admin leaves replicate, every host-read
+        #: output is fully replicated. None = the single-controller engine.
+        self.mesh = mesh
+        self._out_params = self._out_cache = self._out_rep = None
+        if mesh is not None:
+            resolved = resolve_paged_attn_impl(paged.attn_impl)
+            if resolved != "ref":
+                raise ValueError(
+                    f"mesh-native serving requires the partitionable 'ref' "
+                    f"attention impl (resolved {resolved!r}): the Pallas "
+                    f"block-table kernel is a single-device program until "
+                    f"the TPU pass wraps it in shard_map (ROADMAP item 4)")
+            if observe and jax.process_count() > 1:
+                raise ValueError(
+                    "observe=True is single-controller: the saturation "
+                    "debug_callback would fire per-process on partial "
+                    "shards — run observation on a one-process mesh")
+            self._out_params, self._out_cache = shardlib.paged_engine_shardings(
+                self.params, self.cache, cfg, mesh, shard_rules)
+            self._out_rep = shardlib.replicated(mesh)
+            # global placement: every process holds the identical full
+            # value (seed-deterministic init), so the host copy IS the
+            # global value — multihost-safe by construction
+            self.params = shardlib.host_to_global(self.params,
+                                                  self._out_params)
+            self.cache = shardlib.host_to_global(self.cache, self._out_cache)
         #: trace counters (python side effects — bump at trace time only)
         self.admit_traces = 0
         self.suffix_traces = 0
@@ -270,6 +299,18 @@ class PagedEngine:
         self.preemptions = 0
         self._uid_gen = 0
 
+        def _osh(*out):
+            """Explicit out_shardings for a mesh-native program: the cache
+            operand comes back under exactly its input shardings (donation
+            stays alias-exact) and every token output fully replicated —
+            the contract that keeps host reads local on every process.
+            Empty under the single-controller engine (XLA default)."""
+            if mesh is None:
+                return {}
+            return {"out_shardings": out[0] if len(out) == 1 else out}
+
+        _cache_sh, _rep = self._out_cache, self._out_rep
+
         # the cache pytree is DONATED to every program: it crosses the jit
         # boundary once per chunk/admit (unlike the dense engine, whose
         # cache lives inside one fused generate call), and without
@@ -277,7 +318,7 @@ class PagedEngine:
         # KV page pools — 2x the HBM the pool was sized for
         @partial(jax.jit, static_argnames=("n_pages", "backend", "attn_impl",
                                            "datapath"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh, _rep))
         def _admit(params, cache, prompt, slot, uid, incs, n_pages, backend,
                    attn_impl, datapath):
             with use_packed_backend(backend):
@@ -286,7 +327,7 @@ class PagedEngine:
 
         @partial(jax.jit, static_argnames=("n_pages", "n_shared", "backend",
                                            "attn_impl", "datapath"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh, _rep))
         def _admit_suffix(params, cache, suffix, shared_pages, slot, uid,
                           incs, n_pages, n_shared, backend, attn_impl,
                           datapath):
@@ -296,7 +337,7 @@ class PagedEngine:
                                                n_pages, n_shared)
 
         @partial(jax.jit, static_argnames=("n_pages", "n_shared"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh))
         def _admit_cached(cache, shared_pages, cow_src, slot, uid, s0,
                           last_tok, incs, n_pages, n_shared):
             return self._admit_cached_impl(cache, shared_pages, cow_src,
@@ -305,19 +346,19 @@ class PagedEngine:
 
         @partial(jax.jit, static_argnames=("backend", "attn_impl", "datapath",
                                            "attn_spec"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh, _rep))
         def _chunk(params, cache, k, backend, attn_impl, datapath, attn_spec):
             with use_packed_backend(backend):
                 return self._chunk_impl(params, cache, k, attn_impl, attn_spec)
 
-        @partial(jax.jit, donate_argnames=("cache",))
+        @partial(jax.jit, donate_argnames=("cache",), **_osh(_cache_sh))
         def _release(cache, slot, pages, n):
             return self._release_impl(cache, slot, pages, n)
 
         @partial(jax.jit, static_argnames=("n_rows", "n_prompt_pages",
                                            "backend", "attn_impl",
                                            "datapath"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh, _rep))
         def _admit_batch(params, cache, tokens, s0s, slots, uids, rows,
                          scatter_idx, incs, total_pop, n_rows,
                          n_prompt_pages, backend, attn_impl, datapath):
@@ -326,18 +367,18 @@ class PagedEngine:
                                               slots, uids, rows, scatter_idx,
                                               incs, total_pop, n_prompt_pages)
 
-        @partial(jax.jit, donate_argnames=("cache",))
+        @partial(jax.jit, donate_argnames=("cache",), **_osh(_cache_sh))
         def _admit_stub(cache, row, slot, uid, incs, n_pages):
             return self._admit_stub_impl(cache, row, slot, uid, incs, n_pages)
 
-        @partial(jax.jit, donate_argnames=("cache",))
+        @partial(jax.jit, donate_argnames=("cache",), **_osh(_cache_sh))
         def _grow(cache, slot, row, add, n_new):
             return self._grow_impl(cache, slot, row, add, n_new)
 
         @partial(jax.jit, static_argnames=("n_prior", "n_chunk_pages",
                                            "final", "backend", "attn_impl",
                                            "datapath"),
-                 donate_argnames=("cache",))
+                 donate_argnames=("cache",), **_osh(_cache_sh, _rep))
         def _prefill_chunk(params, cache, tokens, slot, uid, s0, incs,
                            n_prior, n_chunk_pages, final, backend, attn_impl,
                            datapath):
@@ -804,7 +845,10 @@ class PagedEngine:
         token with the cold admit's exact ``fold_in(uid, 0)`` key and
         flips the slot live (``seq_lens = s0``, ``steps = 1``); earlier
         chunks leave the slot inactive so interleaved decode chunks skip
-        it. One trace per (chunk_len, n_prior, final) bucket."""
+        it. One trace per (chunk_len, n_prior, final) bucket. Always
+        returns ``(cache, tok)`` — ``tok = -1`` on non-final chunks — so
+        the program's output pytree (and its mesh out_shardings) is
+        identical across the final/non-final traces."""
         self.prefill_chunk_traces += 1
         cfg, paged = self.cfg, self.paged
         bs = paged.block_size
@@ -823,7 +867,7 @@ class PagedEngine:
         new = dict(cache)
         new["pools"] = tuple(pools)
         if not final:
-            return new
+            return new, jnp.int32(-1)
 
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.key(self.sampler.seed), uid),
@@ -861,7 +905,7 @@ class PagedEngine:
         out = np.full(self.paged.max_pages_per_seq, self.paged.num_blocks,
                       np.int32)
         out[:len(pages)] = pages
-        return jnp.asarray(out)
+        return out
 
     def _do_admit(self, adm, backend, attn_impl):
         """Run one admission's device programs (evict, then the admit
@@ -870,40 +914,41 @@ class PagedEngine:
         deferred to the next decode chunk."""
         if adm.evict_pages is not None and adm.evict_pages.size:
             self.cache = self._release(
-                self.cache, jnp.int32(self.paged.max_concurrency),
+                self.cache, np.int32(self.paged.max_concurrency),
                 self._pad_row(adm.evict_pages),
-                jnp.int32(adm.evict_pages.size))
+                np.int32(adm.evict_pages.size))
         req = adm.req
-        incs = jnp.asarray(adm.incs)
+        incs = np.asarray(adm.incs, np.int32)
         if adm.chunked:
             # stub admit: claim the slot + full row FLOP-free; the prompt
             # prefills later, one page-aligned chunk per scheduler pass
             self.cache = self._admit_stub(
-                self.cache, self._pad_row(adm.row), jnp.int32(adm.slot),
-                jnp.int32(req.uid), incs, jnp.int32(adm.n_pages))
+                self.cache, self._pad_row(adm.row), np.int32(adm.slot),
+                np.int32(req.uid), incs, np.int32(adm.n_pages))
             return None
-        shared = jnp.asarray(np.asarray(adm.shared_pages, np.int32))
+        shared = np.asarray(adm.shared_pages, np.int32)
         if adm.cow_src is not None:
             self.cache = self._admit_cached(
-                self.cache, shared, jnp.int32(adm.cow_src),
-                jnp.int32(adm.slot), jnp.int32(req.uid),
-                jnp.int32(req.prompt.size), jnp.int32(req.prompt[-1]),
+                self.cache, shared, np.int32(adm.cow_src),
+                np.int32(adm.slot), np.int32(req.uid),
+                np.int32(req.prompt.size), np.int32(req.prompt[-1]),
                 incs, adm.n_pages, adm.n_shared)
             return None
         if adm.n_shared:
             suffix = req.prompt[adm.n_shared * self.paged.block_size:]
             self.cache, tok0 = self._admit_suffix(
-                self.params, self.cache, jnp.asarray(suffix, jnp.int32)[None],
-                shared, jnp.int32(adm.slot), jnp.int32(req.uid), incs,
+                self.params, self.cache,
+                np.asarray(suffix, np.int32)[None],
+                shared, np.int32(adm.slot), np.int32(req.uid), incs,
                 adm.n_pages, adm.n_shared, backend, attn_impl,
                 self.datapath_fingerprint)
         else:
             self.cache, tok0 = self._admit(
                 self.params, self.cache,
-                jnp.asarray(req.prompt, jnp.int32)[None], jnp.int32(adm.slot),
-                jnp.int32(req.uid), incs, adm.n_pages, backend, attn_impl,
+                np.asarray(req.prompt, np.int32)[None], np.int32(adm.slot),
+                np.int32(req.uid), incs, adm.n_pages, backend, attn_impl,
                 self.datapath_fingerprint)
-        return int(jax.device_get(tok0))
+        return int(shardlib.host_read(tok0))
 
     def _do_admit_batch(self, group, backend, attn_impl) -> np.ndarray:
         """Run one batched-admission group (>= 2 cold requests) through a
@@ -927,12 +972,19 @@ class PagedEngine:
             total_pop += a.n_pages  # cold: every row page freshly popped
         slots = np.asarray([a.slot for a in group], np.int32)
         uids = np.asarray([a.req.uid for a in group], np.int32)
+        if self.mesh is not None:
+            # per-host prompt sharding: the padded token block splits by
+            # row over the data axis when the group size divides it
+            # (divisibility fallback -> replicated); the per-row admin
+            # vectors stay replicated host inputs
+            tokens = shardlib.host_to_global(
+                tokens, shardlib.rows_sharding(tokens.shape, self.mesh))
         self.cache, toks = self._admit_batch(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(s0s),
-            jnp.asarray(slots), jnp.asarray(uids), jnp.asarray(rows),
-            jnp.asarray(scat), jnp.asarray(incs), jnp.int32(total_pop),
+            self.params, self.cache, tokens, s0s,
+            slots, uids, rows,
+            scat, incs, np.int32(total_pop),
             n, P, backend, attn_impl, self.datapath_fingerprint)
-        return np.asarray(jax.device_get(toks))
+        return np.asarray(shardlib.host_read(toks))
 
     def _do_prefill_chunk(self, slot, sched, backend, attn_impl):
         """Advance one stub-admitted slot by one page-aligned prefill
@@ -941,16 +993,14 @@ class PagedEngine:
         tokens, n_prior, final, incs = sched.take_prefill_chunk(slot)
         st = sched.active[slot]
         n_chunk_pages = -(-tokens.size // self.paged.block_size)
-        out = self._prefill_chunk(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32)[None],
-            jnp.int32(slot), jnp.int32(st.req.uid),
-            jnp.int32(st.req.prompt.size), jnp.asarray(incs),
+        self.cache, tok0 = self._prefill_chunk(
+            self.params, self.cache, np.asarray(tokens, np.int32)[None],
+            np.int32(slot), np.int32(st.req.uid),
+            np.int32(st.req.prompt.size), np.asarray(incs, np.int32),
             n_prior, n_chunk_pages, final, backend, attn_impl,
             self.datapath_fingerprint)
         if final:
-            self.cache, tok0 = out
-            return int(jax.device_get(tok0))
-        self.cache = out
+            return int(shardlib.host_read(tok0))
         return None
 
     @staticmethod
@@ -998,6 +1048,17 @@ class PagedEngine:
         # (the callback is baked into the jaxpr); it is engine-constant
         # (observe=True at construction), so every trace under this
         # engine's "+obs" fingerprint is consistently observing
+        if (arrivals is not None and self.mesh is not None
+                and jax.process_count() > 1):
+            # wall-clock pacing is single-controller: two processes would
+            # observe different clocks, submit in different orders, and
+            # issue diverging device programs (the SPMD deadlock class).
+            # Multi-process traffic must arrive deterministically — all up
+            # front, or through the pass-indexed ``_late`` hook.
+            raise ValueError(
+                "arrivals= is wall-clock-paced and single-controller; "
+                "multi-process serving needs deterministic submission "
+                "(submit everything up front or use the _late hook)")
         ctx = (attach_observer(self.observer) if self.observer is not None
                else nullcontext())
         with ctx:
@@ -1039,9 +1100,9 @@ class PagedEngine:
 
         def finish(slot):
             st = sched.finish(slot)
-            self.cache = self._release(self.cache, jnp.int32(slot),
+            self.cache = self._release(self.cache, np.int32(slot),
                                        self._pad_row(st.row),
-                                       jnp.int32(st.n_pages))
+                                       np.int32(st.n_pages))
             results[st.req.uid] = np.concatenate(
                 [st.req.prompt, np.asarray(st.tokens, np.int32)])
             if _probe is not None:
@@ -1067,9 +1128,12 @@ class PagedEngine:
             if sched.active:
                 k = min(self.paged.chunk_max, sched.min_remaining())
                 self.cache, buf = self._chunk(
-                    self.params, self.cache, jnp.int32(k), backend, attn_impl,
+                    self.params, self.cache, np.int32(k), backend, attn_impl,
                     self.datapath_fingerprint, self.attn_spec)
-                buf = np.asarray(jax.device_get(buf))
+                # the chunk's ONE host sync: buf is fully replicated by
+                # the out_shardings contract, so this read is local on
+                # every process (docs/multihost.md)
+                buf = np.asarray(shardlib.host_read(buf))
                 if _probe is not None:
                     _probe(self, sched)
                 for slot in list(sched.active):
@@ -1131,9 +1195,9 @@ class PagedEngine:
 
         def finish(slot):
             st = sched.finish(slot)
-            self.cache = self._release(self.cache, jnp.int32(slot),
+            self.cache = self._release(self.cache, np.int32(slot),
                                        self._pad_row(st.row),
-                                       jnp.int32(st.n_pages))
+                                       np.int32(st.n_pages))
             results[st.req.uid] = np.concatenate(
                 [st.req.prompt, np.asarray(st.tokens, np.int32)])
             if _probe is not None:
@@ -1206,9 +1270,9 @@ class PagedEngine:
                     progressed = True  # freed pages: replanned next pass
                     st = sched.preempt(v)
                     self.preemptions += 1
-                    self.cache = self._release(self.cache, jnp.int32(v),
+                    self.cache = self._release(self.cache, np.int32(v),
                                                self._pad_row(st.row),
-                                               jnp.int32(st.n_pages))
+                                               np.int32(st.n_pages))
                     if metrics is not None:
                         metrics.preempted(st.req.uid)
                     if _probe is not None:
@@ -1216,8 +1280,8 @@ class PagedEngine:
                 if plan.evict_nodes:
                     pages = sched._commit_evict(plan.evict_nodes)
                     self.cache = self._release(
-                        self.cache, jnp.int32(self.paged.max_concurrency),
-                        self._pad_row(pages), jnp.int32(pages.size))
+                        self.cache, np.int32(self.paged.max_concurrency),
+                        self._pad_row(pages), np.int32(pages.size))
                     if _probe is not None:
                         _probe(self, sched)
                 for slot, n_new in plan.grow:
@@ -1225,17 +1289,17 @@ class PagedEngine:
                     add = np.zeros(self.paged.max_pages_per_seq, np.int32)
                     add[held:held + n_new] = 1
                     self.cache = self._grow(
-                        self.cache, jnp.int32(slot),
+                        self.cache, np.int32(slot),
                         self._pad_row(sched.active[slot].row),
-                        jnp.asarray(add), jnp.int32(n_new))
+                        add, np.int32(n_new))
                     if _probe is not None:
                         _probe(self, sched)
                 if plan.slots:
                     progressed = True
                     self.cache, buf = self._chunk(
-                        self.params, self.cache, jnp.int32(plan.k), backend,
+                        self.params, self.cache, np.int32(plan.k), backend,
                         attn_impl, self.datapath_fingerprint, self.attn_spec)
-                    buf = np.asarray(jax.device_get(buf))
+                    buf = np.asarray(shardlib.host_read(buf))
                     sched.advance_decode(plan.k)
                     if _probe is not None:
                         _probe(self, sched)
@@ -1362,6 +1426,31 @@ class PagedEngine:
         return self.observer.report(params=self.params,
                                     pools=self.cache["pools"],
                                     attn_spec=self.attn_spec)
+
+    def assert_sampling_keys_collective_safe(self) -> None:
+        """The per-request sampling stream must be identical on every
+        device and process: keys derive in-graph as
+        ``fold_in(fold_in(key(seed), uid), step)`` from *replicated* admin
+        leaves, so the SPMD program — forced to return fully replicated
+        key data — must agree bit-exactly with the eager single-device
+        computation on the same (uids, steps). Mesh engines only; raises
+        AssertionError on any divergence."""
+        if self.mesh is None:
+            raise ValueError(
+                "engine has no mesh — the single-controller sampling "
+                "stream is trivially host-consistent")
+        uids = np.asarray(shardlib.host_read(self.cache["uids"]), np.int32)
+        steps = np.asarray(shardlib.host_read(self.cache["steps"]), np.int32)
+        seed = self.sampler.seed
+        fn = jax.jit(lambda u, t: jax.random.key_data(_fold_keys(seed, u, t)),
+                     out_shardings=self._out_rep)
+        got = np.asarray(shardlib.host_read(fn(uids, steps)))
+        want = np.asarray(jax.device_get(jax.random.key_data(
+            _fold_keys(seed, jnp.asarray(uids), jnp.asarray(steps)))))
+        np.testing.assert_array_equal(
+            got, want,
+            err_msg="SPMD sampling keys diverge from the single-device "
+                    "stream — per-request determinism is broken")
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """Fixed-slot-compatible entry: prompts (B, S0) -> (B, S0 + max_new).

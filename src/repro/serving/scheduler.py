@@ -181,6 +181,13 @@ class PoolState:
     indices to a later admission. Owned by the engine (it must persist
     across ``serve()`` calls: cached pages stay out of the free stack
     between traces), shared with each ``Scheduler``.
+
+    Under a multi-process mesh every process runs this mirror
+    independently: it is pure seeded numpy driven only by the (identical)
+    request trace and the (replicated) device token reads, so the replay
+    is byte-identical on every host by construction — the multi-process
+    battery (scripts/run_multiprocess.py) allgathers :meth:`digest` and
+    asserts exactly that.
     """
 
     free_list: np.ndarray
@@ -211,6 +218,19 @@ class PoolState:
             return
         self.free_top -= n
         self.free_list[self.free_top:self.free_top + n] = pages
+
+    def digest(self) -> str:
+        """Stable byte-level digest of the allocator state (free stack,
+        top, refcounts) — what the multi-process determinism battery
+        compares across hosts and against the device's replicated
+        ``free_list``/``page_refcounts`` leaves."""
+        import hashlib
+
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.asarray(self.free_list, np.int32).tobytes())
+        h.update(np.int64(self.free_top).tobytes())
+        h.update(np.asarray(self.page_rc, np.int32).tobytes())
+        return h.hexdigest()
 
 
 @dataclass(frozen=True)

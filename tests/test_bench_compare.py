@@ -1,0 +1,64 @@
+"""The bench regression gate must fail loudly when a perf metric exists
+on only one side — dropped benches ("MISSING") and new uncommitted
+sections ("NO BASELINE") both used to pass silently."""
+
+import importlib.util
+import os
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare",
+    os.path.join(os.path.dirname(__file__), "..", "scripts",
+                 "bench_compare.py"))
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+compare_file = bench_compare.compare_file
+
+
+def _statuses(base, cur, threshold=0.25, min_us=0.0):
+    return {m: s for m, _, _, _, s in
+            compare_file("BENCH_x.json", base, cur, threshold, min_us)}
+
+
+def test_matching_metrics_ok():
+    base = {"decode": {"us_per_tok": 100.0, "toks_s": 50.0}}
+    cur = {"decode": {"us_per_tok": 101.0, "toks_s": 49.0}}
+    assert set(_statuses(base, cur).values()) == {"ok"}
+
+
+def test_regression_both_directions():
+    base = {"decode": {"us_per_tok": 100.0, "toks_s": 50.0}}
+    cur = {"decode": {"us_per_tok": 200.0, "toks_s": 10.0}}
+    s = _statuses(base, cur)
+    assert s["decode.us_per_tok"] == "REGRESSED"
+    assert s["decode.toks_s"] == "REGRESSED"
+
+
+def test_baseline_metric_gone_is_failure():
+    base = {"decode": {"us_per_tok": 100.0}}
+    s = _statuses(base, {"decode": {}})
+    assert s["decode.us_per_tok"] == "MISSING"
+
+
+def test_current_only_section_needs_a_baseline():
+    """A freshly added section (the mesh_serving case) must commit its
+    baseline in the same change, or the gate cannot gate it."""
+    base = {"decode": {"us_per_tok": 100.0}}
+    cur = {"decode": {"us_per_tok": 100.0},
+           "mesh_serving": {"toks_s_sharded": 40.0, "note": "cfg echo"}}
+    s = _statuses(base, cur)
+    assert s["mesh_serving.toks_s_sharded"] == "NO BASELINE"
+    # non-perf leaves (config echoes, notes) stay exempt on both sides
+    assert "mesh_serving.note" not in s
+
+
+def test_main_counts_one_sided_metrics_as_failures(tmp_path, capsys):
+    b = tmp_path / "base"
+    c = tmp_path / "cur"
+    b.mkdir(), c.mkdir()
+    (b / "BENCH_x.json").write_text('{"decode": {"us_per_tok": 100.0}}')
+    (c / "BENCH_x.json").write_text('{"serving": {"toks_s": 10.0}}')
+    rc = bench_compare.main(["--baseline", str(b), "--current", str(c)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "MISSING" in out and "NO BASELINE" in out

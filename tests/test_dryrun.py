@@ -43,6 +43,37 @@ def test_dryrun_train_cell(tmp_path):
     assert rec["hlo_stats"]["max_trip_product"] > 1  # scans were corrected
 
 
+def test_paged_budget_cli(tmp_path):
+    """--paged-budget is pure sharding arithmetic (no compile), so it is
+    fast even over the production serving archs; the per-device numbers
+    must come from the resolved specs, and every arch must fit."""
+    out = str(tmp_path)
+    r = _run_dryrun(["--paged-budget", "--mesh", "single", "--out", out],
+                    devices=256, timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(os.path.join(
+        out, "llama3-405b__paged_budget__single.json")))
+    assert rec["fits"] and rec["max_pool_blocks"] >= 1
+    assert rec["chips"] == 256
+    assert 0 < rec["weight_bytes_per_dev"] < rec["hbm_per_chip_bytes"]
+    assert rec["kv_page_bytes_per_dev"] > 0
+    assert rec["interconnect"]["decode_ici_floor_us_per_tok"] > 0
+    # int8 pages halve the per-page bytes -> more blocks in the budget
+    r8 = _run_dryrun(["--paged-budget", "--arch", "llama3-405b",
+                      "--kv-dtype", "int8", "--mesh", "single",
+                      "--out", out], devices=256, timeout=300)
+    assert r8.returncode == 0, r8.stdout[-2000:] + r8.stderr[-2000:]
+    rec8 = json.load(open(os.path.join(
+        out, "llama3-405b__paged_budget__single.json")))
+    assert rec8["max_pool_blocks"] > rec["max_pool_blocks"]
+    # an 8-chip mesh cannot hold 405B weights: the budget must say OOM
+    # (exit 1), not fabricate a fitting pool
+    r_oom = _run_dryrun(["--paged-budget", "--arch", "llama3-405b",
+                         "--mesh-shape", "2,4"], timeout=300)
+    assert r_oom.returncode == 1
+    assert "OOM" in r_oom.stdout
+
+
 @pytest.mark.slow
 def test_dryrun_multipod_axis(tmp_path):
     """3D mesh (pod axis) lowers and compiles."""

@@ -1,0 +1,192 @@
+"""SPMD mesh paged serving: the sharded engine is *bit-identical* to the
+1-device engine on every serving path.
+
+These tests need more than one device, so CI runs them in the dedicated
+``mesh`` job under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the whole module skips otherwise, keeping the default ``tests`` job
+fast). The model is tiny-lm-xs (n_kv_heads=4) so a tp=2 model axis
+genuinely shards the KV pools — smollm's nkv=1 would silently replicate.
+
+The true multi-process lane (``jax.distributed`` + gloo collectives)
+lives in scripts/run_multiprocess.py; ``test_multiprocess_battery``
+shells out to it so a local ``pytest -m mesh`` run covers both worlds.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models.transformer import init_model
+from repro.runtime import sharding as shardlib
+from repro.serving import (
+    PagedConfig,
+    PagedEngine,
+    Request,
+    SamplerConfig,
+    SchedulerPolicy,
+)
+
+pytestmark = pytest.mark.mesh
+
+if len(jax.devices()) < 2:
+    pytest.skip("mesh serving tests need >= 2 devices "
+                "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+                allow_module_level=True)
+
+GREEDY = SamplerConfig(temperature=0.0)
+SAMPLED = SamplerConfig(temperature=0.8, seed=5)
+
+
+def _mesh2d():
+    n = len(jax.devices())
+    return make_mesh((n // 2, 2))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # nkv=4: divisible by tp=2 so pools shard; 2 layers keep traces fast
+    return get_config("tiny-lm-xs").scaled(n_layers=2, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_model(jax.random.key(0), cfg)
+
+
+def _pc(**kw):
+    pc = dict(block_size=8, num_blocks=16, max_concurrency=3,
+              max_pages_per_seq=4, chunk_max=4, attn_impl="ref")
+    pc.update(kw)
+    return PagedConfig(**pc)
+
+
+def _reqs(lens, seed=11, vocab=128):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=u, prompt=rng.integers(0, vocab, size=s).astype(np.int32),
+                    max_new=m, priority=p)
+            for u, (s, m, p) in enumerate(lens)]
+
+
+def _pair(params, cfg, pc, sampler=GREEDY, ref_pc=None):
+    ref = PagedEngine(params, cfg, ref_pc or pc, sampler)
+    eng = PagedEngine(params, cfg, pc, sampler, mesh=_mesh2d())
+    return ref, eng
+
+
+def _assert_identical(ref, eng, reqs, check_free=True):
+    want = ref.serve([Request(r.uid, r.prompt.copy(), r.max_new, r.priority)
+                      for r in reqs])
+    got = eng.serve([Request(r.uid, r.prompt.copy(), r.max_new, r.priority)
+                     for r in reqs])
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    if check_free:
+        for leaf in ("free_list", "page_refcounts", "free_top"):
+            np.testing.assert_array_equal(
+                np.asarray(shardlib.host_read(eng.cache[leaf])),
+                np.asarray(jax.device_get(ref.cache[leaf])))
+    return want, got
+
+
+LENS = [(8, 8, 0), (8, 6, 1), (16, 8, 0), (8, 12, 1), (24, 4, 0)]
+
+
+def test_cold_greedy_identity(params, cfg):
+    ref, eng = _pair(params, cfg, _pc())
+    _assert_identical(ref, eng, _reqs(LENS))
+
+
+def test_shared_prefix_identity(params, cfg):
+    """Prefix-cache hits (refcounted shared pages) under the mesh."""
+    rng = np.random.default_rng(3)
+    stem = rng.integers(0, 128, size=16).astype(np.int32)
+    reqs = [Request(uid=u,
+                    prompt=np.concatenate(
+                        [stem, rng.integers(0, 128, size=4).astype(np.int32)]),
+                    max_new=6)
+            for u in range(4)]
+    ref, eng = _pair(params, cfg, _pc(prefix_cache=True))
+    _assert_identical(ref, eng, reqs)
+    assert eng.prefix_cache.hits == ref.prefix_cache.hits
+    assert eng.prefix_cache.hits > 0
+
+
+def test_int8_kv_identity(params, cfg):
+    ref, eng = _pair(params, cfg, _pc(kv_dtype="int8"))
+    _assert_identical(ref, eng, _reqs(LENS))
+
+
+def test_preempted_and_resumed_identity(params, cfg):
+    """Watermark preemption on the sharded engine: the tight pool forces a
+    preempt-and-requeue mid-decode, and the resumed stream still matches
+    the roomy FIFO reference token for token."""
+    reqs = _reqs([(8, 24, 0), (8, 24, 1), (8, 24, 1)])
+    sched = SchedulerPolicy(admit_window=2, watermark=(1, 4))
+    ref = PagedEngine(params, cfg, _pc(), GREEDY)  # roomy FIFO reference
+    eng = PagedEngine(params, cfg, _pc(num_blocks=6, sched=sched), GREEDY,
+                      mesh=_mesh2d())
+    _assert_identical(ref, eng, reqs, check_free=False)
+    assert eng.preemptions >= 1
+
+
+def test_batched_admit_identity(params, cfg):
+    """Throughput policy under the mesh: batched admission + chunked
+    prefill trace and run as SPMD programs (per-host prompt rows)."""
+    sched = SchedulerPolicy(admit_window=4, batch_max=3, prefill_chunk=16)
+    lens = [(8, 6, 0), (8, 4, 1), (24, 6, 0), (8, 5, 0), (16, 4, 1), (8, 3, 0)]
+    pc = _pc(num_blocks=24, max_concurrency=4, sched=sched)
+    ref, eng = _pair(params, cfg, pc)
+    _assert_identical(ref, eng, _reqs(lens, seed=7))
+    assert eng.batch_traces >= 1 and eng.prefill_chunk_traces >= 1
+
+
+def test_sampled_identity(params, cfg):
+    """temperature > 0: per-request fold_in(uid, step) keys are
+    collective-safe, so sampled streams match the 1-device engine too."""
+    ref, eng = _pair(params, cfg, _pc(), sampler=SAMPLED)
+    _assert_identical(ref, eng, _reqs(LENS))
+    eng.assert_sampling_keys_collective_safe()
+
+
+def test_out_shardings_contract(params, cfg):
+    """The cache the engine actually serves from obeys the contract:
+    pools shard kv_heads along the model axis, every admin leaf is
+    fully replicated (that is what makes the one-device_get-per-chunk
+    host read multihost-safe)."""
+    eng = PagedEngine(params, cfg, _pc(kv_dtype="int8"), GREEDY,
+                      mesh=_mesh2d())
+    eng.serve(_reqs(LENS[:2]))
+    kp = eng.cache["pools"][0]["k_pages"]
+    assert kp.sharding.spec == P(None, None, None, "model", None)
+    assert not kp.is_fully_replicated  # tp=2 divides nkv=4: real sharding
+    assert kp.sharding.spec[3] == eng.cache["pools"][0]["k_scales"].sharding.spec[2]
+    for name in shardlib._PAGED_ADMIN_LEAVES:
+        leaf = eng.cache[name]
+        assert leaf.is_fully_replicated, name
+        assert leaf.sharding.spec == P(), name
+
+
+@pytest.mark.slow
+def test_multiprocess_battery():
+    """True multi-controller lane: 2 OS processes x 2 devices rendezvous
+    through jax.distributed + gloo and must produce byte-identical
+    streams, free state, and cross-process digests."""
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "run_multiprocess.py")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(script), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run(
+        [sys.executable, script, "--procs", "2", "--devices-per-proc", "2",
+         "--port", "29613"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert res.returncode == 0, res.stdout + res.stderr

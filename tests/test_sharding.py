@@ -107,6 +107,54 @@ def test_paged_cache_shardings_int8_scale_leaves(mesh):
         assert spec[2] == sh["pools"][0]["k_pages"].spec[3]  # kv_heads dim
 
 
+def test_paged_admin_leaves_enumerate_cache(mesh):
+    """_PAGED_ADMIN_LEAVES must exactly enumerate the non-pool top-level
+    leaves of init_paged_cache — adding a leaf to one without the other
+    is the silent-replication bug this contract exists to catch."""
+    from repro.models.transformer import init_paged_cache
+    from repro.runtime.sharding import _PAGED_ADMIN_LEAVES
+
+    cfg = get_smoke("smollm-360m")
+    for kv_dtype in (None, "int8"):
+        cache = init_paged_cache(cfg, num_slots=4, num_blocks=16, block_size=8,
+                                 max_pages=4, abstract=True, kv_dtype=kv_dtype)
+        assert set(cache) - {"pools"} == set(_PAGED_ADMIN_LEAVES)
+
+
+def test_paged_cache_unknown_leaf_raises(mesh):
+    """A paged-cache leaf outside pools/_PAGED_ADMIN_LEAVES must error
+    loudly at sharding-resolution time, not silently replicate."""
+    from repro.models.transformer import init_paged_cache
+
+    cfg = get_smoke("smollm-360m")
+    cache = dict(init_paged_cache(cfg, num_slots=4, num_blocks=16,
+                                  block_size=8, max_pages=4, abstract=True))
+    cache["mystery_counter"] = jax.ShapeDtypeStruct((16,), jnp.int32)
+    with pytest.raises(ValueError, match="mystery_counter"):
+        cache_shardings(cache, cfg, mesh)
+
+
+def test_packed_moe_scales_coshard_expert_axis(mesh):
+    """(E, K, C) packed MoE decode stacks: scale/col_sums co-shard the
+    expert axis with the codes, so an EP device dequantizes its experts
+    without gathering metadata; spec_arr twins stay replicated."""
+    from repro.configs import get_config
+    from repro.models.transformer import init_model
+    from repro.quant.serve_packed import pack_decode_params
+    from repro.runtime.sharding import SERVING_QUANT_RULES
+
+    cfg = get_config("tiny-moe")
+    params = pack_decode_params(init_model(jax.random.key(0), cfg), cfg)
+    sh = param_shardings(params, mesh, SERVING_QUANT_RULES)
+    wg = sh["layers"][0]["ffn"]["wg"]
+    e_axis = wg["packed"].spec[1]
+    assert e_axis is not None  # expert axis actually expert-parallel
+    for name in ("scale", "col_sums"):
+        assert wg[name].spec[1] == e_axis
+        assert wg[name].spec[-1] == wg["packed"].spec[-1]  # channel dim too
+    assert wg["spec_arr"].spec == P(None, None, None)
+
+
 def test_logical_constraint_noop_without_rules():
     from repro.runtime.sharding import logical_constraint
 
