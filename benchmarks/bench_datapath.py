@@ -112,9 +112,14 @@ def run():
     # uniform-vs-searched mixed-precision frontier: lives in the datapath
     # bench (not the pareto table) so the CI subset — decode, datapath,
     # serving — gates it on every PR via scripts/bench_compare.py
-    from .bench_pareto import mixed_frontier
+    from .bench_pareto import mixed_frontier, sparse_frontier
 
     results["mixed_frontier"] = mixed_frontier()
+    # 2:4 arm: same gating story — the sparse point's certificate-floor
+    # and quality invariants collapse to *_rate keys the compare script
+    # hard-fails on (NO BASELINE forces this section to ship with its
+    # committed baseline)
+    results["sparse_frontier"] = sparse_frontier()
 
     write_bench_json("BENCH_datapath.json", results)
     return results

@@ -157,6 +157,81 @@ def mixed_frontier(p_uniform: int = 20):
     return res
 
 
+#: quality guard for the sparse arm: pruning half the weights of the N
+#: most-headroomed sites must not blow perplexity past this factor of the
+#: dense point (mask-aware GPFQ redistributes the pruned energy; a broken
+#: error-feedback path fails this outright, not by a tolerance band)
+SPARSE_PPL_GUARD = 1.5
+
+
+def sparse_frontier(p_uniform: int = 20, n_sparsify: int = 2):
+    """2:4 semi-structured sparsity arm of the accumulator frontier.
+
+    Starts from the same conservative uniform AXE baseline as
+    :func:`mixed_frontier`, asks the search to mark the ``n_sparsify``
+    most-headroomed eligible sites for 2:4 sparsity, and drives the
+    mask-aware re-calibration the code-changing move requires. Reports
+    the post-recalibration certificate floors of the sparsified sites
+    against their dense floors — the certificate is issued against the
+    halved effective depth (docs/datapath.md), so the sparse floor can
+    never exceed the dense one.
+
+    The ``*_rate`` keys feed scripts/bench_compare.py (higher-better) and
+    collapse the invariants to hard 1.0/0.0 indicators:
+
+    * ``floor_tightens_rate``: every sparsified site's certificate floor
+      is <= its dense floor (the accumulator-side win);
+    * ``ppl_guard_rate``: the sparse point stays certified, sparsifies
+      exactly the requested sites, and holds perplexity within
+      ``SPARSE_PPL_GUARD`` of dense (the quality-side guard).
+    """
+    cfg, params = trained_params(ARCH)
+    calib = calib_batches(cfg)
+    evalb = eval_batches(cfg)
+    ptq = PTQConfig(w_bits=4, act_bits=8, p_bits=p_uniform, tile=None,
+                    algorithm="gpfq", constrain=True)
+    qm = calibrate_and_quantize(params, cfg, calib, ptq)
+    report = collect_observations(qm)
+    plan = search_plan(report, sparsify=n_sparsify)
+    # sparsity changes the codes: mask-aware constrained re-solve, not a
+    # re-spec of the dense codes
+    qm2 = calibrate_and_quantize(params, cfg, calib, ptq, plan=plan)
+    report2 = collect_observations(qm2)
+
+    names = plan.meta["sparsified"]
+    dense_floors = {n: report.sites[n].p_floor for n in names}
+    sparse_floors = {n: report2.sites[n].p_floor for n in names}
+    floor_tightens = all(sparse_floors[n] <= dense_floors[n] for n in names)
+    saving = sum(dense_floors[n] - sparse_floors[n] for n in names)
+    ppl_d = quantized_ppl(qm, evalb)
+    ppl_s = quantized_ppl(qm2, evalb)
+    guarded = (
+        qm2.certified
+        and len(names) == n_sparsify
+        and ppl_s <= ppl_d * SPARSE_PPL_GUARD
+    )
+    res = {
+        "arch": ARCH,
+        "p_uniform": p_uniform,
+        "n_sparsified": len(names),
+        "sparsified_sites": names,
+        "dense_floor_bits": sum(dense_floors.values()),
+        "sparse_floor_bits": sum(sparse_floors.values()),
+        "floor_saving_bits": saving,
+        "ppl_dense": ppl_d,
+        "ppl_sparse": ppl_s,
+        "floor_tightens_rate": 1.0 if floor_tightens else 0.0,
+        "ppl_guard_rate": 1.0 if guarded else 0.0,
+    }
+    csv_row(
+        f"pareto_sparse/{ARCH}/P{p_uniform}x{n_sparsify}", 0.0,
+        f"sites={len(names)};floor_saving_bits={saving};"
+        f"ppl_d={ppl_d:.2f};ppl_s={ppl_s:.2f};guarded={guarded}",
+    )
+    return res
+
+
 if __name__ == "__main__":
     run()
     mixed_frontier()
+    sparse_frontier()

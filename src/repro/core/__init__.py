@@ -18,8 +18,10 @@ The paper's contribution as a composable JAX library:
 from .alphabet import (
     Alphabet,
     Budgets,
+    SPARSITY_2_4,
     accumulator_range,
     act_alphabet,
+    effective_depth,
     l1_budget_zero_centered,
     min_accumulator_bits,
     outer_accumulator_bits,
@@ -62,6 +64,7 @@ from .overflow import (
     simulate_accumulation,
     worst_case_inputs,
 )
+from .sparsity import apply_mask, check_2to4, is_2to4, mask_2to4, validate_sparsity
 from .quantizers import (
     ActQuantParams,
     ROUND_NEAREST,
@@ -76,9 +79,10 @@ from .quantizers import (
 )
 
 __all__ = [
-    "Alphabet", "Budgets", "accumulator_range", "act_alphabet",
-    "l1_budget_zero_centered", "min_accumulator_bits",
+    "Alphabet", "Budgets", "SPARSITY_2_4", "accumulator_range", "act_alphabet",
+    "effective_depth", "l1_budget_zero_centered", "min_accumulator_bits",
     "outer_accumulator_bits", "strict_budgets", "weight_alphabet",
+    "apply_mask", "check_2to4", "is_2to4", "mask_2to4", "validate_sparsity",
     "EPINIT", "GPFQ", "OPTQ", "RTN", "PTQConfig", "QuantizedLinear",
     "quantize_linear", "sweep_config",
     "ActObserver", "LayerStats",

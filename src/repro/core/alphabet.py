@@ -83,16 +83,47 @@ def accumulator_range(p_bits: int) -> tuple[int, int]:
 
 
 # ---------------------------------------------------------------------------
+# Semi-structured sparsity: effective reduction depth.
+# ---------------------------------------------------------------------------
+SPARSITY_2_4 = "2:4"
+SPARSITY_PATTERNS = (SPARSITY_2_4,)
+
+
+def effective_depth(k: int, sparsity: str | None) -> int:
+    """Number of nonzero addends in a ``k``-deep reduction under ``sparsity``.
+
+    The accumulator bound of Eq. 3 depends on code ranges and reduction
+    depth only — 2:4 semi-structured sparsity guarantees at most 2 nonzero
+    weights per contiguous group of 4 along K, so at most ``k/2`` products
+    contribute to any dot product and the certificate tightens accordingly.
+    """
+    if sparsity is None:
+        return k
+    if sparsity == SPARSITY_2_4:
+        return max((k + 1) // 2, 1)
+    raise ValueError(f"unknown sparsity pattern {sparsity!r}")
+
+
+# ---------------------------------------------------------------------------
 # Eq. 3 — data-type bound: minimum P* for naive (M, N, K) manipulation.
 # ---------------------------------------------------------------------------
-def min_accumulator_bits(k: int, n_bits: int, m_bits: int, signed_input: bool) -> int:
+def min_accumulator_bits(
+    k: int,
+    n_bits: int,
+    m_bits: int,
+    signed_input: bool,
+    sparsity: str | None = None,
+) -> int:
     """P* = ceil(log2(2^(log2(K) + N + M - 1 - 1_signed) + 1) + 1)   (Eq. 3).
 
     The conservative bit width that makes *any* K-deep dot product of N-bit
-    inputs with M-bit weights representable.
+    inputs with M-bit weights representable. Under a sparsity pattern the
+    depth entering the bound is the *effective* depth (the maximum count of
+    nonzero addends): 2:4 halves it, which tightens P* by one bit.
     """
     if k < 1:
         raise ValueError("dot-product depth must be >= 1")
+    k = effective_depth(k, sparsity)
     exponent = math.log2(k) + n_bits + m_bits - 1 - (1 if signed_input else 0)
     return int(math.ceil(math.log2(2**exponent + 1) + 1))
 
@@ -151,8 +182,19 @@ def strict_budgets(p_bits: int, act: Alphabet, rounding_slack: float) -> Budgets
 # ---------------------------------------------------------------------------
 # Eq. 22 — multi-stage accumulation.
 # ---------------------------------------------------------------------------
-def outer_accumulator_bits(p_inner: int, k: int, tile: int) -> int:
-    """P_O = ceil(P_I + log2(K) - log2(T))   (Eq. 22)."""
+def outer_accumulator_bits(
+    p_inner: int, k: int, tile: int, sparsity: str | None = None
+) -> int:
+    """P_O = ceil(P_I + log2(K_eff) - log2(T_eff))   (Eq. 22).
+
+    ``sparsity`` substitutes *effective* depths: 2:4 halves both the total
+    addend count and the per-tile addend count, so the tile count — and with
+    it P_O - P_I — is unchanged; the parameter exists so call sites state
+    the exact datapath they certify (and stay correct if a future pattern
+    scales the two differently).
+    """
+    k = effective_depth(k, sparsity)
+    tile = effective_depth(tile, sparsity)
     if k < tile:
         tile = k
     return int(math.ceil(p_inner + math.log2(k) - math.log2(tile)))

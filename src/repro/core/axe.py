@@ -62,6 +62,7 @@ class PTQConfig:
     constrain: bool = True
     p_bits: int = 16
     tile: int | None = 128
+    sparsity: str | None = None  # None | "2:4" semi-structured weight sparsity
     rounding: str = ROUND_NEAREST
     soft: bool = True
     strict: bool = True
@@ -93,14 +94,16 @@ class PTQConfig:
 
     def naive_p_star(self, k: int) -> int:
         """Eq. 3 bound for this (M, N) pair — the naive-manipulation baseline."""
-        return min_accumulator_bits(k, self.act_bits, self.w_bits, self.act_signed)
+        return min_accumulator_bits(
+            k, self.act_bits, self.w_bits, self.act_signed, sparsity=self.sparsity
+        )
 
     def outer_bits(self, k: int) -> int:
         if not self.constrain:
             return 32
         if self.tile is None:
             return self.p_bits
-        return outer_accumulator_bits(self.p_bits, k, self.tile)
+        return outer_accumulator_bits(self.p_bits, k, self.tile, sparsity=self.sparsity)
 
     def to_datapath_spec(self, k: int, act: "ActQuantParams | None" = None):
         """The per-site :class:`~repro.quant.spec.DatapathSpec` this recipe
@@ -123,6 +126,7 @@ class PTQConfig:
             tile=self.tile if self.constrain else None,
             p_inner=self.p_bits if self.constrain else 32,
             p_outer=self.outer_bits(k),
+            sparsity=self.sparsity,
         )
         if act is not None:
             spec = spec.with_act(act.scale, act.zero_point)
@@ -181,6 +185,7 @@ def _make_solver(stats: LayerStats, cfg: PTQConfig, k: int):
             return gpfq_memory_efficient(
                 w, h_half, g, cfg.w_alphabet, cfg.act_alphabet,
                 axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+                sparsity=cfg.sparsity,
             )
     elif cfg.algorithm == OPTQ:
         hess = stats.optq_hessian(cfg.damp_frac)
@@ -189,11 +194,17 @@ def _make_solver(stats: LayerStats, cfg: PTQConfig, k: int):
             return optq(
                 w, hess, cfg.w_alphabet, cfg.act_alphabet,
                 axe=cfg.axe, rounding=cfg.rounding, act_order=cfg.act_order,
+                sparsity=cfg.sparsity,
             )
     elif cfg.algorithm == RTN:
 
         def solve(w):
             q_int, scale = quantize_weights_rtn(w, cfg.w_alphabet, cfg.rounding)
+            if cfg.sparsity is not None:
+                # mask-then-round baseline: no error feedback to redistribute
+                from .sparsity import mask_2to4
+
+                q_int = q_int * mask_2to4(q_int)
             return GreedyResult(q_int=q_int, scale=scale, w_alphabet=cfg.w_alphabet)
     elif cfg.algorithm == EPINIT:
         axe = cfg.axe or AxeConfig(p_bits=cfg.p_bits, tile=cfg.tile)
@@ -206,6 +217,11 @@ def _make_solver(stats: LayerStats, cfg: PTQConfig, k: int):
         def solve(w):
             scale = weight_scales(w, cfg.w_alphabet)
             w_int = to_int_domain(w, scale)
+            if cfg.sparsity is not None:
+                # mask first: l1 projection + RTZ both keep exact zeros at zero
+                from .sparsity import mask_2to4
+
+                w_int = w_int * mask_2to4(w_int)
             # EP-init projects each tile row onto the l1 ball of the *strict*
             # radius (RTZ keeps it valid post-rounding), per A2Q+ / §2.3.
             w_ct = tiled(w_int.T, t)  # (C, n_tiles, T)
@@ -247,7 +263,11 @@ def quantize_linear(
             raise ValueError("stacked quantization does not take an input bias")
         q_int, scale = jax.vmap(lambda we: (lambda r: (r.q_int, r.scale))(solve(we)))(w)
         delta = jnp.einsum("k,ekc->ec", stats.x_mean, w - q_int * scale)
-        cert = certify_stacked(q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile) if want_cert else None
+        cert = (
+            certify_stacked(q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile, sparsity=cfg.sparsity)
+            if want_cert
+            else None
+        )
         return QuantizedLinear(
             q_int=q_int,
             scale=scale,
@@ -260,7 +280,11 @@ def quantize_linear(
 
     res = solve(w)
     new_bias = bias_correction(stats.x_mean, w, res.w_q, bias)
-    cert = certify(res.q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile) if want_cert else None
+    cert = (
+        certify(res.q_int, cfg.act_alphabet, cfg.p_bits, cfg.tile, sparsity=cfg.sparsity)
+        if want_cert
+        else None
+    )
     return QuantizedLinear(
         q_int=res.q_int,
         scale=res.scale,

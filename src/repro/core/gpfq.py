@@ -30,6 +30,7 @@ from .alphabet import (
     strict_budgets,
 )
 from .ep_init import l1_projection_threshold, soft_threshold, tiled
+from .sparsity import apply_mask, mask_2to4, validate_sparsity
 from .quantizers import (
     ROUND_NEAREST,
     ROUNDING_SLACK,
@@ -165,7 +166,10 @@ def constrain_row(
 # ---------------------------------------------------------------------------
 # The GPFQ greedy loop (shared by the standard and memory-efficient paths).
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe"))
+@partial(
+    jax.jit,
+    static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe", "has_mask"),
+)
 def _gpfq_loop(
     w_int,  # (K, C) integer-domain weights
     xg,  # (K, D) analog inputs (rows)
@@ -176,6 +180,7 @@ def _gpfq_loop(
     tile_ids,  # (K,)
     pos0,
     neg0,
+    mask,  # (K, C) {0,1} sparsity support, or (1, C) dummy when dense
     *,
     w_bits: int,
     w_signed: bool,
@@ -183,6 +188,7 @@ def _gpfq_loop(
     strict: bool,
     mode: str,
     has_axe: bool,
+    has_mask: bool,
 ):
     K, C = w_int.shape
     D = xg.shape[1]
@@ -197,6 +203,14 @@ def _gpfq_loop(
         g_i = jax.lax.dynamic_slice_in_dim(xg, i, 1, axis=0)[0]  # (D,)
         denom = h_norm2[i]
         v = w_i * (hg_dot[i] / denom) + (h_i @ U) / denom  # (C,)
+
+        if has_mask:
+            # mask-then-quantize: pruned positions quantize to exactly 0 (zero
+            # passes the soft threshold / budget clip untouched and consumes no
+            # budget); the residual U keeps the full w_i term, so the pruned
+            # energy is redistributed into later rows by the greedy update
+            m_i = jax.lax.dynamic_slice_in_dim(mask, i, 1, axis=0)[0]  # (C,)
+            v = v * m_i
 
         if has_axe:
             q, pos, neg = constrain_row(
@@ -230,10 +244,21 @@ def _run(
     axe: AxeConfig | None,
     rounding: str,
     act_order: bool,
+    sparsity: str | None = None,
 ):
+    validate_sparsity(sparsity)
     w_int, scale = _prepare(w, w_alphabet)
     K = w.shape[0]
     state = make_axe_state(w_int, axe, act_alphabet, rounding, K)
+
+    if sparsity is not None:
+        # magnitude top-2 per group-of-4, ranked on the integer-domain target
+        # (per-channel positive scale preserves within-column ordering);
+        # computed on the *original* K indexing so the pattern survives
+        # act_order permutation of the solve
+        mask = mask_2to4(w_int)
+    else:
+        mask = jnp.ones((1, w.shape[1]), w_int.dtype)
 
     if act_order:
         # descending diagonal of the Hessian proxy 2 Xq Xq^T == row norms of Xq
@@ -266,12 +291,14 @@ def _run(
         tile_ids[order] if state is not None else tile_ids,
         pos0,
         neg0,
+        mask[order] if sparsity is not None else mask,
         w_bits=w_alphabet.bits,
         w_signed=w_alphabet.signed,
         rounding=rounding,
         strict=strict,
         mode=mode,
         has_axe=has_axe,
+        has_mask=sparsity is not None,
     )
     q_int = Q_perm[inv_order]
     aux = {"residual_norm": jnp.linalg.norm(U), "pos": pos, "neg": neg}
@@ -294,11 +321,17 @@ def gpfq(
     axe: AxeConfig | None = None,
     rounding: str = ROUND_NEAREST,
     act_order: bool = False,
+    sparsity: str | None = None,
 ) -> GreedyResult:
-    """Standard GPFQ (Algorithm 1). ``x``/``xq``: (K, D) sample rows."""
+    """Standard GPFQ (Algorithm 1). ``x``/``xq``: (K, D) sample rows.
+
+    ``sparsity="2:4"`` inserts a mask-then-quantize step: a per-group-of-4
+    magnitude mask is fixed before the greedy solve and the error feedback
+    runs against the masked support.
+    """
     if w.shape[0] != x.shape[0] or x.shape != xq.shape:
         raise ValueError(f"shape mismatch: w {w.shape}, x {x.shape}, xq {xq.shape}")
-    return _run(w, x, xq, w_alphabet, act_alphabet, axe, rounding, act_order)
+    return _run(w, x, xq, w_alphabet, act_alphabet, axe, rounding, act_order, sparsity)
 
 
 def me_stats(x: jax.Array, xq: jax.Array, eta: float = 1e-6) -> tuple[jax.Array, jax.Array]:
@@ -326,6 +359,7 @@ def gpfq_memory_efficient(
     axe: AxeConfig | None = None,
     rounding: str = ROUND_NEAREST,
     act_order: bool = False,
+    sparsity: str | None = None,
 ) -> GreedyResult:
     """Memory-efficient GPFQ (Theorem B.1): GPFQ(W, G H^-1, H)."""
     k = w.shape[0]
@@ -333,4 +367,4 @@ def gpfq_memory_efficient(
         raise ValueError("h_half and g must be (K, K)")
     # (G H^-1)^T = H^-1 G^T  (H symmetric PSD)
     gh_inv = jnp.linalg.solve(h_half, g.T).T
-    return _run(w, gh_inv, h_half, w_alphabet, act_alphabet, axe, rounding, act_order)
+    return _run(w, gh_inv, h_half, w_alphabet, act_alphabet, axe, rounding, act_order, sparsity)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from .alphabet import Alphabet
 from .gpfq import AxeConfig, GreedyResult, constrain_row, make_axe_state
+from .sparsity import mask_2to4, validate_sparsity
 from .quantizers import (
     ROUND_NEAREST,
     quantize_int,
@@ -49,7 +50,10 @@ def inverse_cholesky(h: jax.Array) -> jax.Array:
     return jnp.linalg.cholesky(h_inv).T
 
 
-@partial(jax.jit, static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe"))
+@partial(
+    jax.jit,
+    static_argnames=("w_bits", "w_signed", "rounding", "strict", "mode", "has_axe", "has_mask"),
+)
 def _optq_loop(
     w_int,  # (K, C)
     hinv_u,  # (K, K) upper-triangular factor
@@ -59,6 +63,7 @@ def _optq_loop(
     tile_ids,
     pos0,
     neg0,
+    mask,  # (K, C) {0,1} sparsity support, or (1, C) dummy when dense
     *,
     w_bits: int,
     w_signed: bool,
@@ -66,6 +71,7 @@ def _optq_loop(
     strict: bool,
     mode: str,
     has_axe: bool,
+    has_mask: bool,
 ):
     K, C = w_int.shape
     alphabet = Alphabet(bits=w_bits, signed=w_signed, symmetric=True)
@@ -74,13 +80,21 @@ def _optq_loop(
     def body(i, carry):
         W, Q, pos, neg = carry
         w_i = jax.lax.dynamic_slice_in_dim(W, i, 1, axis=0)[0]  # (C,)
+        if has_mask:
+            # mask-then-quantize: pruned positions target exactly 0; the error
+            # term below keeps the unmasked w_i, so the pruned energy is
+            # propagated through the Cholesky factor to later rows
+            m_i = jax.lax.dynamic_slice_in_dim(mask, i, 1, axis=0)[0]
+            target = w_i * m_i
+        else:
+            target = w_i
         if has_axe:
             q, pos, neg = constrain_row(
-                w_i, tile_ids[i], lam, A, B, pos, neg,
+                target, tile_ids[i], lam, A, B, pos, neg,
                 strict=strict, mode=mode, alphabet=alphabet, rounding=rounding,
             )
         else:
-            q = quantize_int(w_i, alphabet, rounding)
+            q = quantize_int(target, alphabet, rounding)
         d = hinv_u[i, i]
         err = (w_i - q) / d  # (C,)
         # propagate to not-yet-quantized rows only (j > i)
@@ -102,20 +116,28 @@ def optq(
     axe: AxeConfig | None = None,
     rounding: str = ROUND_NEAREST,
     act_order: bool = True,
+    sparsity: str | None = None,
 ) -> GreedyResult:
     """OPTQ with optional AXE constraints (Algorithm 2).
 
     ``hessian``: the (K, K) proxy from :func:`hessian_proxy` (already damped).
     ``act_order``: quantize rows in descending diag(H) order (the GPTQ
     `--act-order` trick the paper also adopts, §C.1).
+    ``sparsity="2:4"``: per-group-of-4 magnitude mask fixed before the solve;
+    error feedback runs against the masked support (see :mod:`.sparsity`).
     """
     K = w.shape[0]
     if hessian.shape != (K, K):
         raise ValueError(f"hessian must be ({K}, {K}), got {hessian.shape}")
 
+    validate_sparsity(sparsity)
     scale = weight_scales(w, w_alphabet)
     w_int = to_int_domain(w, scale)
     state = make_axe_state(w_int, axe, act_alphabet, rounding, K)
+    if sparsity is not None:
+        mask = mask_2to4(w_int)  # original K indexing; survives act_order
+    else:
+        mask = jnp.ones((1, w.shape[1]), w_int.dtype)
 
     if act_order:
         order = jnp.argsort(-jnp.diag(hessian))
@@ -148,12 +170,14 @@ def optq(
         tile_ids[order] if state is not None else tile_ids,
         pos0,
         neg0,
+        mask[order] if sparsity is not None else mask,
         w_bits=w_alphabet.bits,
         w_signed=w_alphabet.signed,
         rounding=rounding,
         strict=strict,
         mode=mode,
         has_axe=has_axe,
+        has_mask=sparsity is not None,
     )
     q_int = Q_perm[inv_order]
     return GreedyResult(

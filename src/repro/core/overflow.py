@@ -33,6 +33,12 @@ class CertReport:
     outer_hi: float
     outer_lo: float
     outer_ok: bool
+    # the reduction depth the certificate was issued against; lets
+    # min_feasible_p_bits re-derive Eq. 22 even when the caller omits k
+    k: int | None = None
+    # sparsity pattern of the certified codes (None | "2:4"); 2:4 halves the
+    # effective depth entering the Eq. 22 re-derivation
+    sparsity: str | None = None
 
     def __bool__(self) -> bool:
         return self.ok and self.outer_ok
@@ -69,6 +75,14 @@ class StackedCertReport:
     def tile(self) -> int | None:
         return self.reports[0].tile
 
+    @property
+    def k(self) -> int | None:
+        return self.reports[0].k
+
+    @property
+    def sparsity(self) -> str | None:
+        return self.reports[0].sparsity
+
 
 def tile_signed_sums(q_int: jax.Array, tile: int | None) -> tuple[jax.Array, jax.Array]:
     """Per (channel, tile) sums of positive / negative integer weights.
@@ -88,14 +102,27 @@ def certify(
     act: Alphabet,
     p_bits: int,
     tile: int | None = None,
+    sparsity: str | None = None,
 ) -> CertReport:
     """Analytic overflow certificate for ``q_int`` (K, C).
 
     Monolithic: every channel's worst-case dot product must fit a signed
     ``p_bits`` register. Multi-stage: every (channel, tile) partial must fit
     ``p_bits`` (= P_I) and the total must fit P_O from Eq. 22.
+
+    ``sparsity="2:4"`` asserts (loudly) that the codes satisfy the 2:4
+    pattern and records it on the report. The Eq. 6 worst cases are computed
+    from the codes' actual signed sums, so masked zeros already contribute
+    nothing — the sparse certificate is *automatically* tighter; recording
+    the pattern additionally halves the effective depth entering every
+    later Eq. 22 re-derivation (:func:`min_feasible_p_bits`).
     """
     k = q_int.shape[0]
+    if sparsity is not None:
+        from .sparsity import check_2to4, validate_sparsity
+
+        validate_sparsity(sparsity)
+        check_2to4(q_int)
     pos, neg = tile_signed_sums(q_int, tile)  # (C, n_tiles)
     hi = act.nu * pos + act.mu * neg  # worst-case max per tile (Eq. 6/7)
     lo = act.mu * pos + act.nu * neg  # worst-case min per tile (Eq. 6/8)
@@ -109,13 +136,16 @@ def certify(
         p_outer = p_bits
         outer_hi, outer_lo, outer_ok = worst_hi, worst_lo, inner_ok
     else:
-        p_outer = outer_accumulator_bits(p_bits, k, tile)
+        p_outer = outer_accumulator_bits(p_bits, k, tile, sparsity=sparsity)
         o_lo_lim, o_hi_lim = accumulator_range(p_outer)
         # outer accumulator sums the tile partials; worst cases add up
         outer_hi = float(jnp.max(jnp.sum(hi, axis=-1)))
         outer_lo = float(jnp.min(jnp.sum(lo, axis=-1)))
         outer_ok = outer_hi <= o_hi_lim and outer_lo >= o_lo_lim
 
+    # note: an all-zero site clamps to peak=1.0, so headroom stays *finite*
+    # (= log2(hi_lim)) — search ordering still needs the name tie-break in
+    # search_plan because distinct sites can share that exact value
     peak = max(worst_hi, -worst_lo, 1.0)
     headroom = float(np.log2(hi_lim) - np.log2(peak)) if peak > 0 else float("inf")
     return CertReport(
@@ -129,6 +159,8 @@ def certify(
         outer_hi=outer_hi,
         outer_lo=outer_lo,
         outer_ok=outer_ok,
+        k=k,
+        sparsity=sparsity,
     )
 
 
@@ -137,10 +169,14 @@ def certify_stacked(
     act: Alphabet,
     p_bits: int,
     tile: int | None = None,
+    sparsity: str | None = None,
 ) -> StackedCertReport:
     """Per-expert analytic certificates for stacked (E, K, C) weights."""
     return StackedCertReport(
-        reports=tuple(certify(q_int[e], act, p_bits, tile) for e in range(q_int.shape[0]))
+        reports=tuple(
+            certify(q_int[e], act, p_bits, tile, sparsity=sparsity)
+            for e in range(q_int.shape[0])
+        )
     )
 
 
@@ -162,10 +198,16 @@ def min_feasible_p_bits(
 
     ``k`` (the site's reduction depth) lets the multi-stage check also
     re-derive P_O via Eq. 22 at each candidate — tightening P_I tightens
-    P_O, and the *outer* worst case must still fit. ``margin_bits`` adds
-    a log2 safety factor on the recorded peaks (0 = exact). Never returns
-    more than the certified ``p_bits``; stacked reports take the max over
-    experts (one datapath serves the stack).
+    P_O, and the *outer* worst case must still fit. When ``k`` is omitted
+    the report's own recorded depth backs the re-derivation, so a tiled
+    report never returns a P_I whose derived P_O overflows. The report's
+    sparsity pattern feeds Eq. 22's effective depths. ``margin_bits`` adds
+    a log2 safety factor on the recorded peaks (0 = exact); if the inflated
+    peaks no longer fit even the certified ``p_bits`` register there is no
+    feasible floor and a ``ValueError`` is raised instead of silently
+    returning an infeasible width. Never returns more than the certified
+    ``p_bits``; stacked reports take the max over experts (one datapath
+    serves the stack).
     """
     if isinstance(report, StackedCertReport):
         return max(min_feasible_p_bits(r, k, margin_bits) for r in report.reports)
@@ -173,17 +215,22 @@ def min_feasible_p_bits(
     hi, lo = report.worst_hi * grow, report.worst_lo * grow
     o_hi, o_lo = report.outer_hi * grow, report.outer_lo * grow
     tile = report.tile
-    for p in range(2, report.p_bits):
+    depth = k if k is not None else report.k
+    for p in range(2, report.p_bits + 1):
         lo_lim, hi_lim = accumulator_range(p)
         if hi > hi_lim or lo < lo_lim:
             continue
-        if tile is not None and k is not None and tile < k:
-            po = outer_accumulator_bits(p, k, tile)
+        if tile is not None and depth is not None and tile < depth:
+            po = outer_accumulator_bits(p, depth, tile, sparsity=report.sparsity)
             o_lo_lim, o_hi_lim = accumulator_range(po)
             if o_hi > o_hi_lim or o_lo < o_lo_lim:
                 continue
         return p
-    return report.p_bits
+    raise ValueError(
+        f"no feasible accumulator floor: margin_bits={margin_bits} inflates the "
+        f"recorded worst-case peaks (hi={hi:.6g}, lo={lo:.6g}) past the certified "
+        f"P_I={report.p_bits} register itself"
+    )
 
 
 def simulate_accumulation(

@@ -1,0 +1,96 @@
+"""2:4 semi-structured sparsity masks (ROADMAP item 2).
+
+A 2:4 pattern keeps at most 2 nonzero weights in every contiguous group of
+4 along the reduction axis K. The accumulator certificate (Eq. 3 / Eq. 6)
+only sees the surviving codes, so the pattern *halves the effective
+reduction depth* and tightens the certified floor — see
+:func:`repro.core.alphabet.effective_depth`.
+
+Mask selection is magnitude top-2 per (group-of-4, channel), computed on
+the integer-domain target so it commutes with the per-channel positive
+scale. Ties break toward the lower in-group index (stable argsort), which
+keeps masks deterministic — the kernel metadata packing and the plan
+re-calibration path both rely on that.
+
+Everything here is traceable (works under ``jax.jit`` / ``jax.eval_shape``);
+the host-side :func:`check_2to4` validator is the only numpy consumer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .alphabet import SPARSITY_2_4, effective_depth
+
+GROUP = 4  # in-group population of the N:M pattern (N=2, M=4)
+KEEP = 2
+
+
+def validate_sparsity(sparsity: str | None) -> None:
+    """Raise unless ``sparsity`` names a supported pattern (or is None)."""
+    if sparsity is not None and sparsity != SPARSITY_2_4:
+        raise ValueError(f"unknown sparsity pattern {sparsity!r}")
+
+
+def mask_2to4(w: jax.Array) -> jax.Array:
+    """Top-2-magnitude 2:4 mask for ``w`` with K on axis -2: (..., K, C).
+
+    Returns a {0, 1} array of ``w``'s dtype. Requires ``K % 4 == 0``.
+    Ranking is per (group, channel); among equal magnitudes the lower
+    in-group index wins (stable sort), so all-equal groups keep positions
+    0 and 1 — deterministic across runs and devices.
+    """
+    k = w.shape[-2]
+    if k % GROUP:
+        raise ValueError(f"2:4 sparsity needs K % 4 == 0, got K={k}")
+    lead = w.shape[:-2]
+    n = w.shape[-1]
+    g = jnp.abs(w).reshape(*lead, k // GROUP, GROUP, n)
+    # rank[i] = how many in-group slots beat slot i (stable: ties -> index)
+    order = jnp.argsort(-g, axis=-2, stable=True)
+    rank = jnp.argsort(order, axis=-2, stable=True)
+    keep = (rank < KEEP).astype(w.dtype)
+    return keep.reshape(*lead, k, n)
+
+
+def apply_mask(w: jax.Array, sparsity: str | None) -> jax.Array:
+    """Magnitude-mask ``w`` (K on axis -2) to the requested pattern."""
+    validate_sparsity(sparsity)
+    if sparsity is None:
+        return w
+    return w * mask_2to4(w)
+
+
+def is_2to4(q: np.ndarray | jax.Array) -> bool:
+    """True iff every group of 4 along axis -2 has at most 2 nonzeros."""
+    q = np.asarray(q)
+    k = q.shape[-2]
+    if k % GROUP:
+        return False
+    lead = q.shape[:-2]
+    g = q.reshape(*lead, k // GROUP, GROUP, q.shape[-1])
+    return bool(((g != 0).sum(axis=-2) <= KEEP).all())
+
+
+def check_2to4(q: np.ndarray | jax.Array, what: str = "codes") -> None:
+    """Loud host-side validation that ``q`` satisfies the 2:4 pattern."""
+    k = np.asarray(q).shape[-2]
+    if k % GROUP:
+        raise ValueError(f"{what} claim 2:4 sparsity but K={k} is not a multiple of 4")
+    if not is_2to4(q):
+        raise ValueError(f"{what} claim 2:4 sparsity but a group of 4 has > 2 nonzeros")
+
+
+__all__ = [
+    "GROUP",
+    "KEEP",
+    "SPARSITY_2_4",
+    "apply_mask",
+    "check_2to4",
+    "effective_depth",
+    "is_2to4",
+    "mask_2to4",
+    "validate_sparsity",
+]

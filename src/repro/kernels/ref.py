@@ -51,12 +51,14 @@ def gpfq_solve_ref(w_int, xg, xh, *, w_bits, lam, budget_b, tile, rounding="near
         tile_ids,
         jnp.zeros((n_tiles, C), jnp.float32),
         jnp.zeros((n_tiles, C), jnp.float32),
+        jnp.ones((1, C), jnp.float32),  # dense: dummy support row
         w_bits=w_bits,
         w_signed=True,
         rounding=rounding,
         strict=True,
         mode="split",
         has_axe=True,
+        has_mask=False,
     )
     return Q
 

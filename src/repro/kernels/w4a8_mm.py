@@ -69,6 +69,74 @@ def pack_int4(q: jax.Array) -> jax.Array:
     return jnp.bitwise_or(low, high).astype(jnp.int8)
 
 
+# ---------------------------------------------------------------------------
+# 2:4 semi-structured compression (codes + metadata indices).
+#
+# Layout: per group of 4 rows along K, per column, the (<= 2) surviving codes
+# are stored as one packed int4 byte (low nibble = first kept code, high =
+# second) and one metadata byte (bits 0-1 = in-group position of the first,
+# bits 2-3 = of the second). Groups with fewer than 2 nonzeros pad with
+# zero-valued codes pointing at unused slots — expansion is insensitive to
+# which slots because a zero code contributes zero. Weight HBM traffic is
+# K/4 + K/4 bytes per column vs K/2 dense-packed: a further 2x reduction.
+# ---------------------------------------------------------------------------
+def compress_2to4(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., K, N) 2:4-sparse int codes -> (packed (..., K//4, N) int8,
+    meta (..., K//4, N) int8). Traceable (works under ``jax.eval_shape``);
+    the 2:4 property itself is validated by ``certify`` at quantization
+    time, not here."""
+    q = q.astype(jnp.int8)
+    *lead, k, n = q.shape
+    if k % 4:
+        raise ValueError(f"2:4 compression needs K % 4 == 0, got K={k}")
+    g = q.reshape(*lead, k // 4, 4, n)
+    # nonzero slots first (stable: ties keep in-group index order)
+    order = jnp.argsort(g == 0, axis=-2, stable=True)
+    idx = order[..., :2, :]  # (..., k//4, 2, n) positions of kept codes
+    vals = jnp.take_along_axis(g, idx, axis=-2)  # (..., k//4, 2, n)
+    meta = jnp.bitwise_or(
+        idx[..., 0, :].astype(jnp.int8),
+        jnp.left_shift(idx[..., 1, :].astype(jnp.int8), 2),
+    )
+    return pack_int4(vals.reshape(*lead, k // 2, n)), meta
+
+
+def unpack_sparse24(packed: jax.Array, meta: jax.Array) -> jax.Array:
+    """Gather-reference expansion: (..., K//4, N) packed + meta ->
+    (..., K, N) int8 dense-with-zeros, bit-identical to the codes that were
+    compressed. Leading dims (repeat/expert stacks) pass through."""
+    vals = unpack_int4(packed)  # (..., K//2, N)
+    *lead, k2, n = vals.shape
+    g4 = k2 // 2
+    v = vals.reshape(*lead, g4, 2, n)
+    m = meta.astype(jnp.int32)
+    i0 = jnp.bitwise_and(m, 3)[..., :, None, :]  # (..., g4, 1, n)
+    i1 = jnp.bitwise_and(jnp.right_shift(m, 2), 3)[..., :, None, :]
+    pos = jnp.arange(4, dtype=jnp.int32).reshape(
+        *(1,) * len(lead), 1, 4, 1
+    )  # in-group slot ids
+    dense = jnp.where(pos == i0, v[..., 0:1, :], jnp.int8(0)) + jnp.where(
+        pos == i1, v[..., 1:2, :], jnp.int8(0)
+    )
+    return dense.reshape(*lead, g4 * 4, n).astype(jnp.int8)
+
+
+def _expand_sparse24_block(wp, meta):
+    """In-kernel expansion of one (bk//4, bn) packed+meta block to a dense
+    (bk, bn) int32 block. Mirrors :func:`unpack_sparse24` exactly (same
+    nibble decode, same position compare), so the kernel matmul consumes
+    bit-identical codes to the gather reference."""
+    vals = unpack_int4(wp)  # (bk//2, bn) int8
+    g4, bn = meta.shape
+    v = vals.reshape(g4, 2, bn).astype(jnp.int32)
+    m = meta.astype(jnp.int32)
+    i0 = jnp.bitwise_and(m, 3)[:, None, :]
+    i1 = jnp.bitwise_and(jnp.right_shift(m, 2), 3)[:, None, :]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (g4, 4, bn), 1)
+    dense = jnp.where(pos == i0, v[:, 0:1, :], 0) + jnp.where(pos == i1, v[:, 1:2, :], 0)
+    return dense.reshape(g4 * 4, bn)
+
+
 def _kernel(x_ref, wp_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
             n_k: int, p_inner: int, assert_inner: bool, out_dtype):
     k = pl.program_id(2)
@@ -234,4 +302,148 @@ def w4a8_decode_matmul(
     kw.setdefault("block_m", 128)  # min() against M inside w4a8_matmul
     return w4a8_matmul(
         x_int8, w_packed, w_scale, act_scale, act_zp, col_sums=col_sums, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sparse (2:4) decode path.
+# ---------------------------------------------------------------------------
+def _sparse_kernel(x_ref, wp_ref, meta_ref, sw_ref, corr_ref, out_ref, acc_ref, *,
+                   n_k: int, p_inner: int, assert_inner: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (bm, bk) int8 codes
+    # expand the compressed block in VMEM: the HBM->VMEM weight traffic is
+    # bk/4 + bk/4 bytes per column (codes + metadata) instead of bk/2 dense
+    w = _expand_sparse24_block(wp_ref[...], meta_ref[...])  # (bk, bn) int32
+    partial = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    if assert_inner:  # interpret-mode verification (2:4 tightens the bound)
+        limit = 2 ** (p_inner - 1) - 1
+        watermark = jnp.max(jnp.abs(partial))
+        if hasattr(pl, "debug_check"):
+            pl.debug_check(watermark <= limit, "inner accumulator overflow")
+        else:
+            def _check(w, lim=limit):
+                assert int(w) <= lim, f"inner accumulator overflow: {w} > {lim}"
+
+            jax.debug.callback(_check, watermark)
+    acc_ref[...] += partial
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        out_ref[...] = ((acc - corr_ref[...]) * sw_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "p_inner",
+                     "assert_inner", "interpret", "out_dtype"),
+)
+def w4a8_sparse_matmul(
+    x_int8: jax.Array,  # (M, K) int8 activation codes
+    w_packed: jax.Array,  # (K//4, N) int8 packed 2:4 codes (2 nibbles/group)
+    w_meta: jax.Array,  # (K//4, N) int8 in-group position metadata
+    w_scale: jax.Array,  # (N,) f32 per-channel weight scales
+    act_scale: float,
+    act_zp: int,
+    *,
+    col_sums: jax.Array,  # (N,) or (1, N) int32 — REQUIRED, from pack time
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    p_inner: int = 16,
+    assert_inner: bool = False,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    """W4A8 GEMM over 2:4-compressed weights, bit-identical to running
+    :func:`w4a8_matmul` on the dense-with-zeros codes: the in-kernel
+    expansion reconstructs the exact same int values, the MXU partial sums
+    the exact same int32 integers, and the epilogue applies the exact same
+    float math in the same order. ``col_sums`` must be the dense codes'
+    per-channel sums (= the sums of the kept codes — zeros add nothing).
+
+    Same ragged-M handling as the dense kernel; decode batches (M < 8)
+    round up to the 8-row sublane.
+    """
+    m, k4 = x_int8.shape[0], w_packed.shape[0]
+    k = 4 * k4
+    assert x_int8.shape[1] == k, (x_int8.shape, w_packed.shape)
+    assert w_meta.shape == w_packed.shape, (w_meta.shape, w_packed.shape)
+    n = w_packed.shape[1]
+
+    if m <= block_m:
+        bm = _round_up(m, 8)
+    else:
+        bm, c = 8, block_m
+        while c >= 8:
+            if _round_up(m, c) - m <= max(c // 4, 8):
+                bm = c
+                break
+            c //= 2
+    bn = _fit_block(n, block_n)
+    bk = _fit_block(k, block_k)
+    assert bk % 4 == 0, f"K tile {bk} must be a multiple of 4 for 2:4 codes (K={k})"
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        x_int8 = jnp.pad(x_int8, ((0, m_pad - m), (0, 0)))
+
+    corr = (col_sums.reshape(-1).astype(jnp.float32) * act_zp)[None, :]
+    sw = (w_scale.reshape(-1).astype(jnp.float32) * act_scale)[None, :]
+
+    n_k = k // bk
+    grid = (m_pad // bm, n // bn, n_k)
+    kernel = functools.partial(
+        _sparse_kernel,
+        n_k=n_k,
+        p_inner=p_inner,
+        assert_inner=assert_inner,
+        out_dtype=out_dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_int8, w_packed, w_meta, sw, corr)
+    return out[:m] if m_pad != m else out
+
+
+def w4a8_sparse_decode_matmul(
+    x_int8: jax.Array,  # (B, K)
+    w_packed: jax.Array,  # (K//4, N)
+    w_meta: jax.Array,  # (K//4, N)
+    w_scale: jax.Array,
+    col_sums: jax.Array,
+    act_scale,
+    act_zp,
+    **kw,
+):
+    """Decode-shaped counterpart of :func:`w4a8_sparse_matmul` — the sparse
+    analogue of :func:`w4a8_decode_matmul` (col_sums required, packed codes
+    and metadata only ever touched block-by-block inside the kernel)."""
+    assert col_sums is not None
+    kw.setdefault("block_m", 128)
+    return w4a8_sparse_matmul(
+        x_int8, w_packed, w_meta, w_scale, act_scale, act_zp,
+        col_sums=col_sums, **kw
     )

@@ -38,6 +38,10 @@ def main(argv=None):
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--no-constrain", action="store_true",
                     help="unconstrained Base algorithm (Table 1)")
+    ap.add_argument("--sparsity", default=None, choices=("2:4",),
+                    help="2:4 semi-structured weight sparsity: mask-aware "
+                         "solve, certificates against the halved effective "
+                         "depth (sites with K %% 4 != 0 stay dense)")
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--calib-batch-size", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -68,6 +72,7 @@ def main(argv=None):
         tile=args.tile,
         algorithm=args.algorithm,
         constrain=not args.no_constrain,
+        sparsity=args.sparsity,
     )
     calib = [data.batch(10_000 + i) for i in range(args.calib_batches)]
     evalb = list(data.eval_batches(args.eval_batches))

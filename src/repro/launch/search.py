@@ -80,6 +80,10 @@ def main(argv=None):
     ap.add_argument("--margin-bits", type=int, default=0,
                     help="operating margin added to every site's "
                          "certificate floor before distributing slack")
+    ap.add_argument("--sparsify", type=int, default=0,
+                    help="mark the N most-headroomed eligible sites for 2:4 "
+                         "semi-structured sparsity (code-changing move: "
+                         "forces a mask-aware re-calibration)")
     ap.add_argument("--promote-w8", type=int, default=0,
                     help="promote the N most register-binding sites to "
                          "8-bit weights (changes codes: re-calibrates)")
@@ -129,14 +133,15 @@ def main(argv=None):
     report = collect_observations(qm)
     plan = search_plan(report, acc_budget_bits=args.acc_budget_bits,
                        margin_bits=args.margin_bits,
-                       promote_w8=args.promote_w8)
+                       promote_w8=args.promote_w8,
+                       sparsify=args.sparsify)
     base = dataclasses.replace(ptq.to_datapath_spec(cfg.d_model),
                                static_act=True)
     plan.meta["base_spec"] = {k: getattr(base, k) for k in BASE_SPEC_FIELDS}
 
-    if args.promote_w8:
-        # w_bits moves change the codes: the plan must drive a fresh
-        # constrained solve, not a re-spec of the existing codes
+    if args.promote_w8 or args.sparsify:
+        # w_bits / sparsity moves change the codes: the plan must drive a
+        # fresh constrained solve, not a re-spec of the existing codes
         qm2 = calibrate_and_quantize(params, cfg, calib, ptq, plan=plan)
     else:
         # P_I-only: certificate-exact re-spec, bit-identical outputs
@@ -168,6 +173,7 @@ def main(argv=None):
             "cert": cert_s,
             "plan_sites": {k: v.p_inner for k, v in plan.sites.items()},
             "promoted_w8": plan.meta.get("promoted_w8", []),
+            "sparsified": plan.meta.get("sparsified", []),
             "kv_static": bool(plan.kv),
         },
         "savings_rate": report.accumulator_bits() / max(searched_bits, 1),

@@ -151,10 +151,18 @@ def is_dequant_site(v) -> bool:
 
 
 def dequant_weight(leaf):
-    """In-graph dequantization of a packed leaf (the fallback datapath)."""
-    from repro.kernels.w4a8_mm import unpack_int4
+    """In-graph dequantization of a packed leaf (the fallback datapath).
 
-    return unpack_int4(leaf["packed"]).astype(leaf["scale"].dtype) * leaf["scale"]
+    2:4 sparse-compressed leaves (a ``meta`` index leaf beside the packed
+    codes) expand through the gather reference — bit-identical integer
+    codes to the dense-with-zeros layout they were compressed from."""
+    from repro.kernels.w4a8_mm import unpack_int4, unpack_sparse24
+
+    if "meta" in leaf:
+        q = unpack_sparse24(leaf["packed"], leaf["meta"])
+    else:
+        q = unpack_int4(leaf["packed"])
+    return q.astype(leaf["scale"].dtype) * leaf["scale"]
 
 
 def leaf_spec(leaf):
@@ -220,6 +228,17 @@ def packed_linear(x, leaf, *, spec=None, assert_inner: bool = False):
     if resolved is None:
         resolved = leaf_spec(leaf)
 
+    # A 2:4-compressed leaf carries a "meta" index leaf; the spec and the
+    # leaf layout must agree or the decode would silently mis-expand.
+    if (resolved.sparsity is not None) != ("meta" in leaf):
+        from repro.quant.spec import DatapathMismatchError
+
+        raise DatapathMismatchError(
+            "packed_linear: datapath field 'sparsity' disagrees with the leaf "
+            f"layout (spec sparsity={resolved.sparsity!r}, leaf "
+            f"{'carries' if 'meta' in leaf else 'lacks'} a 2:4 metadata leaf)"
+        )
+
     backend = packed_backend()
     if backend == "dequant":
         y = x @ dequant_weight(leaf)
@@ -230,7 +249,9 @@ def packed_linear(x, leaf, *, spec=None, assert_inner: bool = False):
     from repro.kernels.w4a8_mm import (
         datapath_kernel_args,
         unpack_int4,
+        unpack_sparse24,
         w4a8_decode_matmul,
+        w4a8_sparse_decode_matmul,
     )
 
     *lead, k = x.shape
@@ -243,19 +264,42 @@ def packed_linear(x, leaf, *, spec=None, assert_inner: bool = False):
         codes, act_scale, act_zp = quantize_activations(x2)
     col_sums = leaf.get("col_sums")
     if col_sums is None:  # legacy artifact without the pack-time term
-        col_sums = jnp.sum(unpack_int4(leaf["packed"]).astype(jnp.int32), axis=-2)
-    y = w4a8_decode_matmul(
-        codes,
-        leaf["packed"],
-        leaf["scale"].reshape(-1).astype(jnp.float32),
-        col_sums.reshape(-1),
-        act_scale,
-        act_zp,
-        **datapath_kernel_args(resolved),
-        assert_inner=assert_inner,
-        interpret=(backend == "interpret"),
-        out_dtype=x.dtype,
-    )
+        if "meta" in leaf:
+            col_sums = jnp.sum(
+                unpack_sparse24(leaf["packed"], leaf["meta"]).astype(jnp.int32),
+                axis=-2,
+            )
+        else:
+            col_sums = jnp.sum(
+                unpack_int4(leaf["packed"]).astype(jnp.int32), axis=-2
+            )
+    if "meta" in leaf:
+        y = w4a8_sparse_decode_matmul(
+            codes,
+            leaf["packed"],
+            leaf["meta"],
+            leaf["scale"].reshape(-1).astype(jnp.float32),
+            col_sums.reshape(-1),
+            act_scale,
+            act_zp,
+            **datapath_kernel_args(resolved),
+            assert_inner=assert_inner,
+            interpret=(backend == "interpret"),
+            out_dtype=x.dtype,
+        )
+    else:
+        y = w4a8_decode_matmul(
+            codes,
+            leaf["packed"],
+            leaf["scale"].reshape(-1).astype(jnp.float32),
+            col_sums.reshape(-1),
+            act_scale,
+            act_zp,
+            **datapath_kernel_args(resolved),
+            assert_inner=assert_inner,
+            interpret=(backend == "interpret"),
+            out_dtype=x.dtype,
+        )
     y = y.reshape(*lead, y.shape[-1])
     if "bias" in leaf:
         y = y + leaf["bias"].reshape(-1).astype(y.dtype)

@@ -172,7 +172,7 @@ def collect_observations(qm) -> ObserverReport:
 # ---------------------------------------------------------------------------
 _SPEC_FIELDS = (
     "w_bits", "act_bits", "act_signed", "tile", "p_inner", "p_outer",
-    "static_act", "act_scale", "act_zp", "version",
+    "static_act", "act_scale", "act_zp", "version", "sparsity",
 )
 
 

@@ -69,6 +69,7 @@ def search_plan(
     acc_budget_bits: int | None = None,
     margin_bits: int = 0,
     promote_w8: int = 0,
+    sparsify: int = 0,
 ) -> MixedPrecisionPlan:
     """Assign per-site ``(w_bits, P_I)`` to meet a global accumulator
     budget at minimum proxy loss.
@@ -88,19 +89,48 @@ def search_plan(
     integer accumulator budget entirely (the serving engine routes w8
     leaves through the dequant path). These entries change codes, so the
     resulting plan must go through ``calibrate_and_quantize(plan=...)``.
+
+    ``sparsify``: mark the N eligible sites with the *most* headroom (the
+    sites with the most slack to absorb pruning error) for 2:4
+    semi-structured sparsity — the certificate is then issued against the
+    halved effective depth (docs/datapath.md), tightening their register
+    floor. Eligible: certified, ``K % 4 == 0``, ``w_bits <= 4``, not
+    already sparse, not w8-promoted. Like ``promote_w8`` these entries
+    change codes: the plan must go through ``calibrate_and_quantize
+    (plan=...)`` (mask-aware GPFQ/OPTQ), and the sites are excluded from
+    this search's P_I tightening — their floors move after re-calibration.
+
+    All selections tie-break on the site name, so equal-headroom reports
+    (e.g. every site saturated, or every site all-zero) produce the same
+    plan on every run regardless of dict ordering.
     """
     movable: list[SiteObservation] = []
     promoted: list[SiteObservation] = []
     candidates = sorted(
         (s for s in report if s.headroom_bits is not None),
-        key=lambda s: s.headroom_bits,
+        key=lambda s: (s.headroom_bits, s.name),
     )
     promoted = candidates[: max(promote_w8, 0)]
     promoted_names = {s.name for s in promoted}
+    sparsify_eligible = sorted(
+        (
+            s for s in candidates
+            if s.name not in promoted_names
+            and s.k % 4 == 0
+            and s.spec is not None
+            and s.spec.w_bits <= 4
+            and s.spec.sparsity is None
+        ),
+        key=lambda s: (-s.headroom_bits, s.name),
+    )
+    sparsified = sparsify_eligible[: max(sparsify, 0)]
+    sparsified_names = {s.name for s in sparsified}
     movable = [
         s
         for s in report
-        if s.headroom_bits is not None and s.name not in promoted_names
+        if s.headroom_bits is not None
+        and s.name not in promoted_names
+        and s.name not in sparsified_names
     ]
 
     floors = {s.name: min(s.p_floor + margin_bits, s.p_inner) for s in movable}
@@ -125,7 +155,10 @@ def search_plan(
         ]
         if not grantable:
             break
-        worst = min(grantable, key=lambda s: _projected_headroom(s, assigned[s.name]))
+        worst = min(
+            grantable,
+            key=lambda s: (_projected_headroom(s, assigned[s.name]), s.name),
+        )
         assigned[worst.name] += 1
         slack -= worst.n_repeats
 
@@ -137,8 +170,10 @@ def search_plan(
         sites[s.name] = dataclasses.replace(
             s.spec,
             p_inner=p,
-            p_outer=_outer_bits(p, s.k, s.spec.tile),
+            p_outer=_outer_bits(p, s.k, s.spec.tile, s.spec.sparsity),
         )
+    for s in sparsified:
+        sites[s.name] = dataclasses.replace(s.spec, sparsity="2:4")
     for s in promoted:
         sites[s.name] = dataclasses.replace(
             s.spec,
@@ -166,16 +201,18 @@ def search_plan(
             "margin_bits": margin_bits,
             "binding_site": report.binding_site(),
             "promoted_w8": sorted(promoted_names),
+            "sparsified": sorted(sparsified_names),
         },
     )
 
 
-def _outer_bits(p_inner: int, k: int, tile: int | None) -> int:
-    from repro.core import outer_accumulator_bits
+def _outer_bits(p_inner: int, k: int, tile: int | None,
+                sparsity: str | None = None) -> int:
+    from repro.core import effective_depth, outer_accumulator_bits
 
-    if tile is None or tile >= k:
+    if tile is None or effective_depth(tile, sparsity) >= effective_depth(k, sparsity):
         return p_inner
-    return outer_accumulator_bits(p_inner, k, tile)
+    return outer_accumulator_bits(p_inner, k, tile, sparsity=sparsity)
 
 
 def apply_plan(qm, plan: MixedPrecisionPlan):
@@ -232,19 +269,25 @@ def apply_plan(qm, plan: MixedPrecisionPlan):
 def _respec_linear(ql: QuantizedLinear, spec: DatapathSpec, context: str) -> QuantizedLinear:
     old = ql.spec
     if old is not None:
-        same_codes = (old.w_bits, old.act_bits, old.act_signed, old.tile) == (
+        same_codes = (
+            old.w_bits, old.act_bits, old.act_signed, old.tile, old.sparsity,
+        ) == (
             spec.w_bits, spec.act_bits, spec.act_signed, spec.tile,
+            spec.sparsity,
         )
         if not same_codes:
             raise DatapathMismatchError(
                 f"plan entry for {context} changes the code alphabet "
                 f"({old.describe()} -> {spec.describe()}); re-specing only "
                 f"covers (P_I, P_O) — run calibrate_and_quantize(plan=...) "
-                f"for w/act/tile moves"
+                f"for w/act/tile/sparsity moves"
             )
     cfg = sweep_config(ql.cfg, p_bits=spec.p_inner, constrain=spec.p_inner < 32)
     do_cert = certify_stacked if ql.stacked else certify
-    cert = do_cert(ql.q_int, cfg.act_alphabet, spec.p_inner, spec.tile)
+    cert = do_cert(
+        ql.q_int, cfg.act_alphabet, spec.p_inner, spec.tile,
+        sparsity=spec.sparsity,
+    )
     if not bool(cert):
         raise ValueError(
             f"plan entry for {context} requests P_I={spec.p_inner} but the "

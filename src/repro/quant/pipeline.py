@@ -230,6 +230,10 @@ def _site_ptq(ptq: PTQConfig, site: SiteSpec, override) -> PTQConfig:
     """
     dp = override if override is not None else site.datapath
     if dp is None:
+        if ptq.sparsity is not None and site.k % 4 != 0:
+            # 2:4 groups need K % 4 == 0: this site stays dense under a
+            # model-wide sparse recipe (mirrors serve_packed eligibility)
+            return sweep_config(ptq, sparsity=None)
         return ptq
     constrained = dp.p_inner is not None and dp.p_inner < 32
     return sweep_config(
@@ -240,6 +244,7 @@ def _site_ptq(ptq: PTQConfig, site: SiteSpec, override) -> PTQConfig:
         p_bits=dp.p_inner if constrained else ptq.p_bits,
         tile=dp.tile if constrained else ptq.tile,
         constrain=constrained,
+        sparsity=dp.sparsity if site.k % 4 == 0 else None,
     )
 
 

@@ -39,12 +39,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.w4a8_mm import pack_int4, unpack_int4
+from repro.kernels.w4a8_mm import (
+    compress_2to4,
+    pack_int4,
+    unpack_int4,
+    unpack_sparse24,
+)
 from repro.models.config import ModelConfig
 
 from .families import SiteSpec, check_supported, get_adapter
 from .spec import (
     ARTIFACT_VERSION,
+    _SPEC_ARR_LEN,
     DatapathMismatchError,
     DatapathSpec,
     is_packed_leaf,
@@ -131,6 +137,27 @@ def _pack_leaf(w: jax.Array, spec: DatapathSpec | None = None) -> dict:
         )
     q, scale = _rtn_codes(w, spec.w_bits)
     lead = w.shape[:-2]
+    if spec.sparsity is not None:
+        # mask-then-round 2:4 baseline (no error feedback — calibrated
+        # sparse codes come from the AXE pipeline's mask-aware GPFQ/OPTQ).
+        # Traceable, so eval_shape dry-runs still lower the sparse graph.
+        from repro.core.sparsity import mask_2to4
+
+        if w.shape[-2] % 4 != 0:
+            raise ValueError(
+                f"2:4 sparsity needs K % 4 == 0, got K={w.shape[-2]}; "
+                f"serve this site dense or in high precision instead"
+            )
+        q = q * mask_2to4(q)
+        packed, meta = compress_2to4(q)
+        return {
+            "packed": packed,
+            "meta": meta,
+            "scale": scale.astype(jnp.bfloat16),
+            "col_sums": jnp.sum(q, axis=-2, keepdims=True).astype(jnp.int32),
+            "spec": spec,
+            "spec_arr": _spec_arr_leaf(spec, lead),
+        }
     return {
         "packed": pack_int4(q),
         "scale": scale.astype(jnp.bfloat16),
@@ -164,6 +191,13 @@ def pack_decode_params(params, cfg: ModelConfig, ptq=None):
                 site = by_name[k]
                 spec = (site.datapath_for(ptq) if ptq is not None
                         else site.datapath) or DatapathSpec()
+                if spec.sparsity is not None and site.k % 4 != 0:
+                    # 2:4 groups need K % 4 == 0; Eq. 22 halves depth and
+                    # tile together, so stripping sparsity leaves p_outer
+                    # valid for the dense codes this site actually serves
+                    from dataclasses import replace
+
+                    spec = replace(spec, sparsity=None)
                 if spec.w_bits > 4:
                     # no int4 container for these codes: serve the site as
                     # an RTN-dequantized high-precision leaf instead
@@ -201,7 +235,9 @@ def _site_rec_leaf(recs: list[dict], site: SiteSpec, name: str):
                 f"repeat {r} certified {rec['spec'].describe()} — one leaf "
                 f"cannot serve two datapaths"
             )
-    if spec0.w_bits > 4 or site.k % 2 != 0:
+    if spec0.w_bits > 4 or site.k % 2 != 0 or (
+        spec0.sparsity is not None and site.k % 4 != 0
+    ):
         # no int4 container (wide codes / odd K): serve the dequantized
         # weight in high precision. The corrected bias is part of the
         # certified function, so it rides along in a {"w", "bias"} leaf
@@ -220,8 +256,24 @@ def _site_rec_leaf(recs: list[dict], site: SiteSpec, name: str):
         return w_q
     lead = (len(recs),) + ((site.stacked,) if site.stacked else ())
     q = jnp.stack([jnp.asarray(r["q"], jnp.float32) for r in recs])
+    if spec0.sparsity is not None:
+        # the certificate was issued against the 2:4 effective depth —
+        # codes that are not actually 2:4 would be served under a bound
+        # they do not satisfy, so refuse loudly at pack/load time
+        from repro.core.sparsity import is_2to4
+
+        if not is_2to4(np.asarray(q)):
+            raise DatapathMismatchError(
+                f"site {name}: certified sparsity={spec0.sparsity!r} but the "
+                f"codes are not 2:4 (some group of 4 along K has more than "
+                f"2 nonzeros) — the certificate's effective-depth bound "
+                f"would not hold for these weights"
+            )
+        packed_codes, meta = compress_2to4(q)
+    else:
+        packed_codes, meta = pack_int4(q), None
     leaf = {
-        "packed": pack_int4(q),
+        "packed": packed_codes,
         "scale": jnp.stack([jnp.asarray(r["scale"], jnp.float32) for r in recs]),
         "col_sums": jnp.sum(q, axis=-2, keepdims=True).astype(jnp.int32),
         "spec": spec0.leaf_spec(),
@@ -235,6 +287,8 @@ def _site_rec_leaf(recs: list[dict], site: SiteSpec, name: str):
             ]
         ),
     }
+    if meta is not None:
+        leaf["meta"] = meta
     if spec0.static_act:
         # stacked scales: one scalar per repeat, broadcast per expert for
         # MoE stacks so the vmapped kernel maps a per-expert quantizer
@@ -515,7 +569,9 @@ def plan_expected_specs(cfg: ModelConfig, plan, base: DatapathSpec) -> dict:
                 known.add(key)
                 spec = plan.get(key)
                 spec = base if spec is None else spec
-                if spec.w_bits > 4 or site.k % 2 != 0:
+                if spec.w_bits > 4 or site.k % 2 != 0 or (
+                    spec.sparsity is not None and site.k % 4 != 0
+                ):
                     continue
                 expected[key] = spec
     unknown = sorted(set(plan) - known)
@@ -539,9 +595,12 @@ def ensure_col_sums(params):
     def fix(node):
         if isinstance(node, dict):
             if "packed" in node and "col_sums" not in node:
+                if "meta" in node:  # 2:4 sparse leaf: expand via the gather
+                    q = unpack_sparse24(node["packed"], node["meta"])
+                else:
+                    q = unpack_int4(node["packed"])
                 col = jnp.sum(
-                    unpack_int4(node["packed"]).astype(jnp.int32),
-                    axis=-2, keepdims=True,
+                    q.astype(jnp.int32), axis=-2, keepdims=True,
                 )
                 return {**node, "col_sums": col}
             return {k: fix(v) for k, v in node.items()}
@@ -602,7 +661,8 @@ def upgrade_packed_params(params, default: DatapathSpec | None = None):
 # ---------------------------------------------------------------------------
 def packed_weight_bytes(cfg: ModelConfig, *, scale_bytes_per: int = 2,
                         static_act: bool = False,
-                        with_bias: bool = False) -> dict:
+                        with_bias: bool = False,
+                        sparsity: str | None = None) -> dict:
     """Analytic per-step artifact traffic for the roofline correction:
     bf16 baseline vs the full packed artifact (codes + per-channel scale +
     ``col_sums`` zero-point term + spec twin + optional static-act and
@@ -610,27 +670,40 @@ def packed_weight_bytes(cfg: ModelConfig, *, scale_bytes_per: int = 2,
     counted too. Defaults describe the RTN ``pack_decode_params`` tree
     (bf16 scales, dynamic act, no bias); calibrated trees
     (:func:`serving_params_from_quantized`) use f32 scales, static act and
-    biases on the output projections."""
-    elems = code = scale = col = spec_b = act = bias = 0
+    biases on the output projections.
+
+    ``sparsity="2:4"`` counts the compressed layout for every eligible
+    site (K % 4 == 0): K/4 code bytes (the 2 kept int4 codes per group
+    packed into one byte) plus K/4 metadata bytes (2-bit index pairs).
+    At int4 the total weight stream matches dense (codes halve, metadata
+    takes the other half) — the compressed layout's win is the halved
+    *effective accumulation depth* (docs/datapath.md), not bytes.
+    Ineligible sites are counted dense."""
+    elems = code = scale = col = spec_b = act = bias = meta_b = 0
     for slot in packable_sites(cfg):
         for kind in ("mixer", "ffn"):
             for s in slot[kind]:
                 st = s.stacked or 1
                 elems += s.k * s.c * st
-                code += s.k * s.c * st // 2  # int8 byte holds 2 codes
+                if sparsity is not None and s.k % 4 == 0:
+                    code += s.k * s.c * st // 4  # 2 kept codes per group
+                    meta_b += s.k * s.c * st // 4  # int8 index pair per group
+                else:
+                    code += s.k * s.c * st // 2  # int8 byte holds 2 codes
                 scale += s.c * st * scale_bytes_per
                 col += s.c * st * 4  # int32
-                spec_b += st * 10 * 4  # f32 spec_arr twin
+                spec_b += st * _SPEC_ARR_LEN * 4  # f32 spec_arr twin
                 if static_act:
                     act += st * (4 + 4)  # f32 act_scale + act_zp
                 if with_bias and s.use_bias:
                     bias += s.c * st * 4
     r = cfg.repeats
-    total = (code + scale + col + spec_b + act + bias) * r
+    total = (code + meta_b + scale + col + spec_b + act + bias) * r
     return {
         "weight_elems": elems * r,
         "bf16_bytes": 2 * elems * r,
         "packed_code_bytes": code * r,
+        "meta_bytes": meta_b * r,
         "scale_bytes": scale * r,
         "col_sums_bytes": col * r,
         "spec_bytes": spec_b * r,

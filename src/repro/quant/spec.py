@@ -53,8 +53,15 @@ import jax
 #: Current packed-artifact schema version (see module docstring).
 ARTIFACT_VERSION = 2
 
-#: Number of float64 slots in the array encoding (``to_array``).
-_SPEC_ARR_LEN = 10
+#: Number of float64 slots in the array encoding (``to_array``). Slot 10
+#: (sparsity) was appended within schema v2: ``from_array`` still accepts
+#: the original 10-slot vectors (absent field == dense), so pre-sparsity
+#: artifacts load unchanged.
+_SPEC_ARR_LEN = 11
+
+#: ``sparsity`` slot encoding (NaN == dense).
+_SPARSITY_CODES = {"2:4": 1.0}
+_SPARSITY_NAMES = {v: k for k, v in _SPARSITY_CODES.items()}
 
 
 class DatapathMismatchError(ValueError):
@@ -94,6 +101,15 @@ class DatapathSpec:
     act_scale: float | None = None  # per-site record; None once inside a leaf
     act_zp: int = 0
     version: int = ARTIFACT_VERSION
+    #: semi-structured weight sparsity pattern (None = dense, "2:4" = at most
+    #: 2 nonzeros per contiguous group of 4 along K); halves the effective
+    #: reduction depth entering the certificate and selects the sparse
+    #: decode kernel
+    sparsity: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.sparsity is not None and self.sparsity not in _SPARSITY_CODES:
+            raise ValueError(f"unknown sparsity pattern {self.sparsity!r}")
 
     # -- identity -----------------------------------------------------------
     def key(self) -> tuple:
@@ -105,7 +121,7 @@ class DatapathSpec:
         different depths — comparing it would make every cross-site
         validation spuriously fail."""
         return (self.w_bits, self.act_bits, self.act_signed, self.tile,
-                self.p_inner, self.static_act)
+                self.p_inner, self.static_act, self.sparsity)
 
     def spec_hash(self) -> str:
         """Short stable hash of the datapath identity + schema version."""
@@ -130,9 +146,10 @@ class DatapathSpec:
         act = "static" if self.static_act else "dynamic"
         sign = "s" if self.act_signed else "u"
         t = self.tile if self.tile is not None else "mono"
+        sp = f" sparsity={self.sparsity}" if self.sparsity is not None else ""
         return (f"W{self.w_bits}A{self.act_bits}{sign} T={t} "
                 f"P_I={self.p_inner} P_O={self.p_outer} act={act} "
-                f"v{self.version}")
+                f"v{self.version}{sp}")
 
     # -- derived forms ------------------------------------------------------
     def leaf_spec(self) -> "DatapathSpec":
@@ -157,7 +174,7 @@ class DatapathSpec:
     def to_array(self) -> np.ndarray:
         """Encode as a float64 vector (an ordinary checkpoint leaf).
 
-        NaN encodes None for ``tile``/``act_scale``.
+        NaN encodes None for ``tile``/``act_scale``/``sparsity``.
         """
         return np.asarray(
             [
@@ -171,6 +188,7 @@ class DatapathSpec:
                 1.0 if self.static_act else 0.0,
                 float(self.act_scale) if self.act_scale is not None else np.nan,
                 float(self.act_zp),
+                _SPARSITY_CODES.get(self.sparsity, np.nan),
             ],
             np.float64,
         )
@@ -178,10 +196,18 @@ class DatapathSpec:
     @classmethod
     def from_array(cls, arr) -> "DatapathSpec":
         a = np.asarray(arr, np.float64).reshape(-1)
-        if a.shape[0] < _SPEC_ARR_LEN:
+        # 10 slots = the pre-sparsity v2 encoding; loads as dense
+        if a.shape[0] < _SPEC_ARR_LEN - 1:
             raise ValueError(
-                f"spec array has {a.shape[0]} slots, expected {_SPEC_ARR_LEN}"
+                f"spec array has {a.shape[0]} slots, expected "
+                f"{_SPEC_ARR_LEN - 1} or {_SPEC_ARR_LEN}"
             )
+        if a.shape[0] >= _SPEC_ARR_LEN and not np.isnan(a[10]):
+            sparsity = _SPARSITY_NAMES.get(float(a[10]))
+            if sparsity is None:
+                raise ValueError(f"unknown sparsity code {a[10]!r} in spec array")
+        else:
+            sparsity = None
         return cls(
             version=int(a[0]),
             w_bits=int(a[1]),
@@ -193,6 +219,7 @@ class DatapathSpec:
             static_act=bool(a[7]),
             act_scale=None if np.isnan(a[8]) else float(a[8]),
             act_zp=int(a[9]),
+            sparsity=sparsity,
         )
 
 
@@ -363,8 +390,11 @@ def leaf_datapath(leaf: dict) -> DatapathSpec | None:
     arr = leaf.get("spec_arr")
     if arr is not None:
         flat = np.asarray(jax.device_get(arr), np.float64)
-        # stacked (R, ...) / (R, E, ...) leaves broadcast the same spec
-        return DatapathSpec.from_array(flat.reshape(-1, _SPEC_ARR_LEN)[0])
+        # stacked (R, ...) / (R, E, ...) leaves broadcast the same spec;
+        # reshape by the array's own trailing length, not the current
+        # constant — pre-sparsity leaves carry 10-slot vectors
+        width = flat.shape[-1] if flat.ndim else flat.shape[0]
+        return DatapathSpec.from_array(flat.reshape(-1, width)[0])
     return None
 
 

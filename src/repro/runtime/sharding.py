@@ -231,7 +231,8 @@ _W4 = {
 
 
 _PACKED_LEAF_SUFFIXES = (
-    "packed", "scale", "col_sums", "bias", "act_scale", "act_zp", "spec_arr",
+    "packed", "meta", "scale", "col_sums", "bias", "act_scale", "act_zp",
+    "spec_arr",
 )
 #: packed-leaf members that are tiny per-site metadata (static activation
 #: quantizer scalars, the serialized DatapathSpec twin): always replicated
@@ -241,8 +242,11 @@ _REPLICATED_SUFFIXES = ("act_scale", "act_zp", "spec_arr")
 def _leaf_logical_names(path, leaf) -> tuple:
     keys = [e.key for e in path if hasattr(e, "key")]
     name = keys[-1] if keys else None
-    # packed-int4 serving artifacts: {"packed", "scale", "col_sums",
-    # "bias", "act_scale", "act_zp", "spec_arr"} under the weight name
+    # packed-int4 serving artifacts: {"packed", "meta", "scale", "col_sums",
+    # "bias", "act_scale", "act_zp", "spec_arr"} under the weight name.
+    # "meta" (2:4 sparse index leaf, (K//4, N)) co-shards with "packed":
+    # both fall through to the weight-name table below, so a device holding
+    # a shard of the codes holds the matching shard of the indices.
     suffix = None
     if name in _PACKED_LEAF_SUFFIXES and len(keys) >= 2:
         suffix, name = name, keys[-2]

@@ -8,6 +8,8 @@ max/min reduction — dense and SSM), and the engine's datapath-fingerprint
 retrace key.
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -158,6 +160,51 @@ def test_validate_datapath_rejects_legacy():
     legacy = {k: v for k, v in _pack_leaf(w).items() if k in ("packed", "scale")}
     with pytest.raises(DatapathMismatchError, match="no DatapathSpec"):
         validate_datapath({"layers": ({"mixer": {"wq": legacy}},)}, DatapathSpec())
+
+
+def test_pre_sparsity_spec_array_loads_as_dense():
+    """Strict back-compat: a 10-slot spec array written by the pre-sparsity
+    v2 schema decodes with ``sparsity=None`` (absent field == dense), and
+    the 11-slot encoding round-trips the pattern."""
+    dense = DatapathSpec(tile=64, p_inner=14, p_outer=16)
+    legacy_arr = dense.to_array()[:10]  # exactly what old artifacts stored
+    assert DatapathSpec.from_array(legacy_arr).sparsity is None
+    assert DatapathSpec.from_array(legacy_arr).matches(dense)
+    sparse = DatapathSpec(tile=64, p_inner=14, p_outer=16, sparsity="2:4")
+    round_tripped = DatapathSpec.from_array(sparse.to_array())
+    assert round_tripped.sparsity == "2:4"
+    assert round_tripped.matches(sparse)
+    assert not round_tripped.matches(dense)  # sparsity is identity-bearing
+    # truncated below the legacy length is still an error, not a guess
+    with pytest.raises(ValueError, match="slots"):
+        DatapathSpec.from_array(dense.to_array()[:9])
+    # unknown pattern codes refuse to decode
+    bad = sparse.to_array()
+    bad[10] = 99.0
+    with pytest.raises(ValueError, match="sparsity code"):
+        DatapathSpec.from_array(bad)
+
+
+def test_validate_datapath_refuses_sparse_request_naming_field():
+    """A dense artifact served under a sparse request (or vice versa) is a
+    datapath mismatch whose error names the sparsity field — absence of
+    the pattern is not a match."""
+    w = jnp.ones((8, 4), jnp.float32)
+    dense_leaf = _pack_leaf(w, DatapathSpec())
+    tree = {"layers": ({"mixer": {"wq": dense_leaf}},)}
+    sparse_req = dataclasses.replace(DatapathSpec(), sparsity="2:4")
+    with pytest.raises(DatapathMismatchError, match="sparsity=2:4"):
+        validate_datapath(tree, sparse_req)
+    # and the sparse artifact refuses the dense request symmetrically
+    w8 = jnp.asarray(np.tile([1.0, 1.0, 0.0, 0.0], 2)[:, None] *
+                     np.ones((1, 4)), jnp.float32)
+    sparse_leaf = _pack_leaf(w8, sparse_req)
+    assert "meta" in sparse_leaf
+    tree_s = {"layers": ({"mixer": {"wq": sparse_leaf}},)}
+    assert validate_datapath(tree_s, dataclasses.replace(
+        sparse_req, static_act=False)) == 1
+    with pytest.raises(DatapathMismatchError, match="sparsity=2:4"):
+        validate_datapath(tree_s, DatapathSpec())
 
 
 # ---------------------------------------------------------------------------

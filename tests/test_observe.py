@@ -175,6 +175,72 @@ def test_search_margin_lifts_floors(calibrated):
         assert got >= min(s.p_floor + 2, s.p_inner)
 
 
+def test_search_order_deterministic_on_equal_headroom():
+    """Regression: sites with identical headroom (e.g. all-zero sites, which
+    certify at a shared finite headroom) used to be ordered by dict/sort
+    instability. Every selection now tie-breaks on the site name, so the
+    same report — in any insertion order — yields the same plan."""
+    from repro.quant.observe.records import ObserverReport, SiteObservation
+
+    def site(name):
+        return SiteObservation(
+            name=name, k=64, n_repeats=1,
+            spec=DatapathSpec(tile=16, p_inner=16, p_outer=18),
+            headroom_bits=3.0, p_floor=13, n_weights=64 * 8, act={},
+        )
+
+    names = [f"slot0/mixer.w{c}" for c in "qkvo"]
+    fwd = ObserverReport(sites={n: site(n) for n in names})
+    rev = ObserverReport(sites={n: site(n) for n in reversed(names)})
+
+    for kwargs in (
+        {"promote_w8": 2},
+        {"sparsify": 2},
+        {"acc_budget_bits": 4 * 13 + 2},  # 2 bits of slack to hand out
+    ):
+        p1 = search_plan(fwd, **kwargs)
+        p2 = search_plan(rev, **kwargs)
+        assert {k: v.key() for k, v in p1.sites.items()} == \
+               {k: v.key() for k, v in p2.sites.items()}, kwargs
+        assert p1.meta.get("promoted_w8") == p2.meta.get("promoted_w8")
+        assert p1.meta.get("sparsified") == p2.meta.get("sparsified")
+    # pinned selections: name order breaks the tie
+    expect = ["slot0/mixer.wk", "slot0/mixer.wo"]
+    assert search_plan(fwd, promote_w8=2).meta["promoted_w8"] == expect
+    assert search_plan(fwd, sparsify=2).meta["sparsified"] == expect
+
+
+def test_sparsify_move_marks_most_headroomed_eligible_sites():
+    """The sparsify move targets eligible sites (K % 4 == 0, w<=4, dense)
+    by descending headroom, excludes them from P_I tightening, and stamps
+    a code-changing 2:4 spec that apply_plan refuses."""
+    from repro.quant.observe.records import ObserverReport, SiteObservation
+
+    def site(name, headroom, k=64, w_bits=4, sparsity=None):
+        spec = dataclasses.replace(
+            DatapathSpec(tile=16, p_inner=16, p_outer=18),
+            w_bits=w_bits, sparsity=sparsity,
+        )
+        return SiteObservation(
+            name=name, k=k, n_repeats=1, spec=spec,
+            headroom_bits=headroom, p_floor=13, n_weights=k * 8, act={},
+        )
+
+    report = ObserverReport(sites={s.name: s for s in [
+        site("slot0/mixer.wq", 5.0),
+        site("slot0/mixer.wk", 3.0),
+        site("slot0/mixer.wv", 4.0, k=66),          # K % 4 != 0: ineligible
+        site("slot0/ffn.wu", 6.0, sparsity="2:4"),  # already sparse
+        site("slot0/ffn.wd", 7.0, w_bits=8),        # no int4 container
+    ]})
+    plan = search_plan(report, sparsify=2)
+    assert plan.meta["sparsified"] == ["slot0/mixer.wk", "slot0/mixer.wq"]
+    for n in plan.meta["sparsified"]:
+        assert plan[n].sparsity == "2:4"
+        assert plan[n].p_inner == 16  # registers untouched: floors move
+        # only after the mask-aware re-calibration
+
+
 def test_plan_json_roundtrip(tmp_path, calibrated):
     *_, plan, _ = calibrated
     path = str(tmp_path / "plan.json")

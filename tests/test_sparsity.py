@@ -1,0 +1,375 @@
+"""2:4 semi-structured sparsity under the accumulator certificate.
+
+Covers the mask/compress primitives, the mask-aware GPFQ/OPTQ solves, the
+sparse decode kernel's bit-identity with dense-with-zeros through
+``packed_linear``, the effective-depth certificate math (analytic AND
+adversarial — a sparse site's register floor is strictly tighter than the
+dense floor at equal code width), and the certificate-floor regressions
+(margin-saturated peaks, tiled reports re-deriving Eq. 22 from their own
+recorded depth). Property batteries run as seeded loops — tier-1 must not
+depend on hypothesis.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    LayerStats,
+    PTQConfig,
+    accumulator_range,
+    act_alphabet,
+    certify,
+    effective_depth,
+    is_2to4,
+    mask_2to4,
+    min_accumulator_bits,
+    min_feasible_p_bits,
+    quantize_linear,
+    simulate_accumulation,
+    worst_case_inputs,
+)
+from repro.core.sparsity import check_2to4
+from repro.kernels.w4a8_mm import (
+    compress_2to4,
+    pack_int4,
+    unpack_sparse24,
+    w4a8_decode_matmul,
+    w4a8_sparse_decode_matmul,
+)
+from repro.quant.spec import DatapathSpec
+
+
+# ---------------------------------------------------------------------------
+# Mask and compressed-layout primitives
+# ---------------------------------------------------------------------------
+def test_mask_2to4_properties(rng):
+    """Every group of 4 keeps exactly the 2 largest magnitudes."""
+    for seed in range(8):
+        r = np.random.default_rng(seed)
+        w = jnp.asarray(r.standard_normal((32, 6)), jnp.float32)
+        m = np.asarray(mask_2to4(w))
+        assert set(np.unique(m)) <= {0.0, 1.0}
+        g = m.reshape(8, 4, 6)
+        assert np.all(g.sum(axis=1) == 2)
+        # kept entries dominate dropped entries within each group
+        aw = np.abs(np.asarray(w)).reshape(8, 4, 6)
+        kept_min = np.where(g > 0, aw, np.inf).min(axis=1)
+        drop_max = np.where(g == 0, aw, -np.inf).max(axis=1)
+        assert np.all(kept_min >= drop_max)
+
+
+def test_mask_requires_group_aligned_k():
+    with pytest.raises(ValueError, match="4"):
+        mask_2to4(jnp.ones((6, 3)))
+
+
+def test_is_2to4_and_check(rng):
+    q = rng.integers(-7, 8, size=(16, 4)).astype(np.int8)
+    q = np.asarray(jnp.asarray(q) * mask_2to4(jnp.asarray(q)))
+    assert is_2to4(q)
+    dense = np.full((4, 2), 3, np.int8)  # 4 nonzeros in the single group
+    assert not is_2to4(dense)
+    with pytest.raises(ValueError, match="2:4"):
+        check_2to4(dense)
+
+
+def test_compress_round_trip_exact(rng):
+    """compress_2to4 -> unpack_sparse24 reproduces the dense-with-zeros
+    codes bit for bit, including stacked leading axes."""
+    for shape in ((32, 8), (2, 16, 4), (3, 2, 8, 5)):
+        q = rng.integers(-7, 8, size=shape).astype(np.int8)
+        q = np.asarray(jnp.asarray(q) * mask_2to4(jnp.asarray(q)).astype(jnp.int8))
+        packed, meta = compress_2to4(jnp.asarray(q))
+        assert packed.shape[-2] == shape[-2] // 4
+        assert meta.shape[-2] == shape[-2] // 4
+        back = np.asarray(unpack_sparse24(packed, meta))
+        np.testing.assert_array_equal(back, q)
+
+
+def test_effective_depth():
+    assert effective_depth(128, None) == 128
+    assert effective_depth(128, "2:4") == 64
+    assert effective_depth(2, "2:4") == 1
+    with pytest.raises(ValueError):
+        effective_depth(16, "1:8")
+    # Eq. 3 with the halved depth saves exactly one bit at power-of-two K
+    assert (
+        min_accumulator_bits(128, 8, 4, False, sparsity="2:4")
+        == min_accumulator_bits(128, 8, 4, False) - 1
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mask-aware solvers: valid codes, certified, error feedback helps
+# ---------------------------------------------------------------------------
+def _sparse_layer(seed, algorithm, k=32, c=8, p_bits=14, tile=8):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(k, c)) * 2.0, jnp.float32)
+    x = jnp.asarray(r.normal(size=(192, k)), jnp.float32)
+    stats = LayerStats(k=k)
+    stats.update(x)
+    cfg = PTQConfig(p_bits=p_bits, tile=tile, algorithm=algorithm,
+                    sparsity="2:4")
+    return w, x, quantize_linear(w, stats, cfg), cfg
+
+
+@pytest.mark.parametrize("algorithm", ["gpfq", "optq", "rtn", "ep_init"])
+def test_sparse_solvers_emit_valid_certified_codes(algorithm):
+    for seed in range(3):
+        _, _, ql, _ = _sparse_layer(seed, algorithm)
+        q = np.asarray(ql.q_int)
+        assert is_2to4(q), algorithm
+        assert ql.cert is not None and bool(ql.cert), algorithm
+        assert ql.cert.sparsity == "2:4"
+        assert ql.spec.sparsity == "2:4"
+
+
+@pytest.mark.parametrize("algorithm", ["gpfq", "optq"])
+def test_error_feedback_beats_mask_then_round(algorithm):
+    """The greedy solves redistribute pruned energy through the unmasked
+    support: on-calibration layer reconstruction error (the objective the
+    solvers actually minimize, under the accumulator constraint) must beat
+    the no-feedback mask-then-RTN baseline in aggregate."""
+    err = err_rtn = 0.0
+    for seed in range(4):
+        w, x, ql, cfg = _sparse_layer(seed, algorithm)
+        _, _, ql_rtn, _ = _sparse_layer(seed, "rtn")
+        err += float(jnp.mean((x @ w - x @ ql.w_q) ** 2))
+        err_rtn += float(jnp.mean((x @ w - x @ ql_rtn.w_q) ** 2))
+    assert err < err_rtn, f"{algorithm}: {err} vs mask-then-RTN {err_rtn}"
+
+
+def test_sparse_certificate_adversarially_sound():
+    """Masked-input adversary battery (seeded loops): the analytic sparse
+    certificate upper-bounds int64 accumulation of the worst-case AND
+    random admissible inputs, for every seed."""
+    na = act_alphabet(8)
+    for seed in range(6):
+        _, _, ql, cfg = _sparse_layer(seed, "gpfq", k=32, c=8, p_bits=14, tile=8)
+        q = np.asarray(ql.q_int)
+        u, v = worst_case_inputs(ql.q_int, na)
+        r = np.random.default_rng(seed)
+        rand = r.integers(na.qmin, na.qmax + 1, size=(64, q.shape[0]))
+        x_all = np.concatenate([np.asarray(u), np.asarray(v), rand], axis=0)
+        sim = simulate_accumulation(q, x_all, tile=8)
+        assert sim["partial_hi"] <= ql.cert.worst_hi
+        assert sim["partial_lo"] >= ql.cert.worst_lo
+        lo_i, hi_i = accumulator_range(ql.cert.p_bits)
+        assert sim["partial_hi"] <= hi_i and sim["partial_lo"] >= lo_i
+        lo_o, hi_o = accumulator_range(ql.cert.p_outer)
+        assert sim["total_hi"] <= hi_o and sim["total_lo"] >= lo_o
+
+
+def test_sparse_floor_strictly_tighter_than_dense():
+    """Acceptance criterion: at equal code width, a 2:4 site's certified
+    register floor is strictly below the dense floor — analytically via
+    ``min_feasible_p_bits`` and adversarially via ``simulate_accumulation``
+    (equal-magnitude codes make the halved per-tile sums cross a bit
+    boundary: 7*128 needs 19 bits against A8u, 7*64 needs 18)."""
+    k, c = 128, 4
+    na = act_alphabet(8)
+    dense = jnp.full((k, c), 7.0, jnp.float32)
+    sparse = jnp.asarray(np.tile([7.0, 7.0, 0.0, 0.0], k // 4)[:, None] *
+                         np.ones((1, c)), jnp.float32)
+    assert is_2to4(np.asarray(sparse))
+
+    cert_d = certify(dense, na, p_bits=32, tile=None)
+    cert_s = certify(sparse, na, p_bits=32, tile=None, sparsity="2:4")
+    floor_d = min_feasible_p_bits(cert_d)
+    floor_s = min_feasible_p_bits(cert_s)
+    assert floor_s < floor_d, (floor_s, floor_d)
+
+    # the analytic gap is real: the adversarial extrema need exactly those
+    # register widths in an int64 simulation
+    for q, floor in ((dense, floor_d), (sparse, floor_s)):
+        u, v = worst_case_inputs(q, na)
+        sim = simulate_accumulation(
+            np.asarray(q), np.concatenate([np.asarray(u), np.asarray(v)])
+        )
+        assert sim["inner_bits_used"] == floor
+    assert floor_s == floor_d - 1
+
+
+def test_sparse_tiled_floor_tighter_and_outer_consistent():
+    """Multi-stage: the tiled sparse floor is tighter too, and Eq. 22's
+    re-derivation (halving depth and tile together) keeps P_O - P_I
+    invariant, so the tightened floor never implies an overflowing outer."""
+    k, c, t = 128, 4, 32
+    na = act_alphabet(8)
+    dense = jnp.full((k, c), 7.0, jnp.float32)
+    sparse = jnp.asarray(np.tile([7.0, 7.0, 0.0, 0.0], k // 4)[:, None] *
+                         np.ones((1, c)), jnp.float32)
+    cert_d = certify(dense, na, p_bits=20, tile=t)
+    cert_s = certify(sparse, na, p_bits=20, tile=t, sparsity="2:4")
+    assert cert_d.p_outer - cert_d.p_bits == cert_s.p_outer - cert_s.p_bits
+    floor_d = min_feasible_p_bits(cert_d, k)
+    floor_s = min_feasible_p_bits(cert_s, k)
+    assert floor_s < floor_d
+    from repro.core import outer_accumulator_bits
+
+    for cert, floor in ((cert_d, floor_d), (cert_s, floor_s)):
+        # the floor's re-derived Eq. 22 outer register holds the recorded
+        # outer extrema (this is exactly what min_feasible_p_bits checks)
+        po = outer_accumulator_bits(floor, k, t, sparsity=cert.sparsity)
+        lo_o, hi_o = accumulator_range(po)
+        assert cert.outer_hi <= hi_o and cert.outer_lo >= lo_o
+
+
+def test_certify_sparse_rejects_dense_codes():
+    na = act_alphabet(8)
+    dense = jnp.full((8, 2), 3.0, jnp.float32)
+    with pytest.raises(ValueError, match="2:4"):
+        certify(dense, na, p_bits=16, tile=None, sparsity="2:4")
+
+
+# ---------------------------------------------------------------------------
+# Certificate-floor regressions (bugfix satellites)
+# ---------------------------------------------------------------------------
+def test_min_feasible_p_bits_raises_when_margin_saturates():
+    """Regression: a certificate whose peaks already saturate the certified
+    register must RAISE under a margin that inflates them past it — the old
+    code silently returned ``report.p_bits`` (an infeasible width)."""
+    na = act_alphabet(8)
+    q = jnp.full((16, 2), 7.0, jnp.float32)  # peak 7*16*255 = 28560
+    p = min_accumulator_bits(16, 8, 4, False)  # exactly-fitting register
+    cert = certify(q, na, p_bits=p, tile=None)
+    assert bool(cert)
+    assert min_feasible_p_bits(cert) <= p
+    with pytest.raises(ValueError, match="margin"):
+        min_feasible_p_bits(cert, margin_bits=4.0)
+
+
+def test_min_feasible_p_bits_tiled_respects_outer_without_k():
+    """Regression: a tiled report consulted WITHOUT the caller-supplied
+    ``k`` must still re-derive P_O from its own recorded depth — the old
+    code skipped the outer check entirely and could return a P_I whose
+    Eq. 22 outer register overflows the recorded outer extrema."""
+    na = act_alphabet(8)
+    r = np.random.default_rng(3)
+    q = jnp.asarray(r.integers(-7, 8, size=(256, 4)), jnp.float32)
+    cert = certify(q, na, p_bits=24, tile=8)
+    assert cert.k == 256
+    floor_with_k = min_feasible_p_bits(cert, k=256)
+    floor_without = min_feasible_p_bits(cert)
+    assert floor_without == floor_with_k
+    # and the floor's implied outer register really holds the extrema
+    from repro.core import outer_accumulator_bits
+
+    po = outer_accumulator_bits(floor_without, 256, 8)
+    lo_o, hi_o = accumulator_range(po)
+    assert cert.outer_hi <= hi_o and cert.outer_lo >= lo_o
+
+
+def test_all_zero_site_headroom_finite():
+    """An all-zero site reports finite headroom (= log2 of the register
+    limit), not inf — so the search can order it deterministically."""
+    na = act_alphabet(8)
+    cert = certify(jnp.zeros((16, 2)), na, p_bits=16, tile=None)
+    assert np.isfinite(cert.headroom_bits)
+    assert cert.headroom_bits == pytest.approx(np.log2(2.0**15 - 1))
+
+
+# ---------------------------------------------------------------------------
+# Sparse decode kernel: bit-identity through packed_linear
+# ---------------------------------------------------------------------------
+def _leaves_for(q, scale, spec_dense, spec_sparse):
+    q = jnp.asarray(q)
+    col = jnp.sum(q.astype(jnp.int32), axis=-2)
+    packed, meta = compress_2to4(q)
+    dense = {
+        "packed": pack_int4(q), "scale": scale, "col_sums": col,
+        "spec": spec_dense,
+        "spec_arr": jnp.asarray(spec_dense.to_array(), jnp.float32),
+    }
+    sparse = {
+        "packed": packed, "meta": meta, "scale": scale, "col_sums": col,
+        "spec": spec_sparse,
+        "spec_arr": jnp.asarray(spec_sparse.to_array(), jnp.float32),
+    }
+    return dense, sparse
+
+
+@pytest.mark.parametrize("m,k,n,t", [(4, 128, 64, 128), (130, 256, 128, 128),
+                                     (8, 32, 16, 16)])
+def test_sparse_kernel_bit_identical_through_packed_linear(rng, m, k, n, t):
+    """The Pallas sparse decode path (interpret-validated) produces the
+    exact float outputs of the dense kernel on dense-with-zeros codes, for
+    ragged M, multi-K-tile grids and small shapes alike."""
+    from repro.models.layers import packed_linear, use_packed_backend
+
+    q = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    q = np.asarray(jnp.asarray(q) * mask_2to4(jnp.asarray(q)).astype(jnp.int8))
+    scale = jnp.asarray(rng.random((1, n)) * 0.02 + 0.01, jnp.float32)
+    sd = DatapathSpec(tile=t, p_inner=16, p_outer=20)
+    ss = DatapathSpec(tile=t, p_inner=16, p_outer=20, sparsity="2:4")
+    dense, sparse = _leaves_for(q, scale, sd, ss)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    with use_packed_backend("interpret"):
+        yd = packed_linear(x, dense)
+        ys = packed_linear(x, sparse)
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(ys))
+
+
+def test_sparse_kernel_matches_gather_reference(rng):
+    """w4a8_sparse_decode_matmul == the dense kernel on the expanded codes,
+    called directly (no layer dispatch in the loop)."""
+    k, n = 64, 32
+    q = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    q = np.asarray(jnp.asarray(q) * mask_2to4(jnp.asarray(q)).astype(jnp.int8))
+    packed, meta = compress_2to4(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(unpack_sparse24(packed, meta)), q)
+    scale = jnp.asarray(rng.random((n,)), jnp.float32)
+    col = jnp.sum(jnp.asarray(q, jnp.int32), axis=0)
+    x = rng.integers(0, 256, size=(8, k)).astype(np.uint8)
+    kw = dict(block_m=8, block_n=16, block_k=16, p_inner=16, interpret=True)
+    yd = w4a8_decode_matmul(jnp.asarray(x), pack_int4(jnp.asarray(q)), scale,
+                            col, jnp.float32(0.01), jnp.float32(3.0), **kw)
+    ys = w4a8_sparse_decode_matmul(jnp.asarray(x), packed, meta, scale, col,
+                                   jnp.float32(0.01), jnp.float32(3.0), **kw)
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(ys))
+
+
+def test_packed_linear_rejects_sparsity_layout_mismatch(rng):
+    from repro.models.layers import packed_linear, use_packed_backend
+    from repro.quant.spec import DatapathMismatchError
+
+    k, n = 32, 16
+    q = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    q = np.asarray(jnp.asarray(q) * mask_2to4(jnp.asarray(q)).astype(jnp.int8))
+    scale = jnp.ones((1, n), jnp.float32)
+    sd = DatapathSpec(tile=16, p_inner=16, p_outer=17)
+    ss = DatapathSpec(tile=16, p_inner=16, p_outer=17, sparsity="2:4")
+    dense, sparse = _leaves_for(q, scale, sd, ss)
+    x = jnp.asarray(rng.standard_normal((2, k)), jnp.float32)
+    # dense layout claiming a sparse spec, and vice versa
+    bad1 = {**dense, "spec": ss, "spec_arr": sparse["spec_arr"]}
+    bad2 = {**sparse, "spec": sd, "spec_arr": dense["spec_arr"]}
+    for bad in (bad1, bad2):
+        with use_packed_backend("interpret"):
+            with pytest.raises(DatapathMismatchError, match="sparsity"):
+                packed_linear(x, bad)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline integration: sparse sites certify at the halved depth
+# ---------------------------------------------------------------------------
+def test_sparse_site_floor_tighter_in_pipeline():
+    """End to end through quantize_linear: the same layer solved dense vs
+    2:4 yields a sparse floor no worse than dense, and the sparse
+    certificate records its pattern for Eq. 22 re-derivations."""
+    r = np.random.default_rng(0)
+    k, c = 64, 8
+    w = jnp.asarray(r.normal(size=(k, c)) * 2.0, jnp.float32)
+    x = jnp.asarray(r.normal(size=(192, k)), jnp.float32)
+    stats = LayerStats(k=k)
+    stats.update(x)
+    ql_d = quantize_linear(w, stats, PTQConfig(p_bits=16, tile=16))
+    ql_s = quantize_linear(
+        w, stats, PTQConfig(p_bits=16, tile=16, sparsity="2:4")
+    )
+    floor_d = min_feasible_p_bits(ql_d.cert, k)
+    floor_s = min_feasible_p_bits(ql_s.cert, k)
+    assert floor_s <= floor_d
+    assert ql_s.cert.sparsity == "2:4" and ql_d.cert.sparsity is None
